@@ -1,0 +1,21 @@
+"""Shared benchmark utilities: wall-clock timing + CSV emission."""
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters=5, warmup=2):
+    """Median wall-clock microseconds per call (jit-compiled callable)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,41 @@
+"""Fig 1 analogue: multi-unit scaling.
+
+The paper scales threads across M4's two shared SME units; our analogue
+scales the mesh.  From the dry-run records we report, per architecture,
+the single-pod vs multi-pod per-device compute/collective terms — ideal
+scaling keeps per-device compute constant (the batch is fixed global, so
+work per device halves with 2 pods) while the pod axis only adds DCN
+gradient reduction.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def run():
+    recs = {}
+    for path in glob.glob(os.path.join(RESULTS, "*train_4k*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs[(r["arch"], r["mesh"])] = r
+    archs = sorted({a for a, _ in recs})
+    for arch in archs:
+        pod = recs.get((arch, "pod"))
+        multi = recs.get((arch, "multipod"))
+        if not pod or not multi:
+            continue
+        f_pod = pod["cost"]["flops_per_device"]
+        f_multi = multi["cost"]["flops_per_device"]
+        # fixed global batch: ideal multi-pod per-device flops = pod/2
+        eff = (f_pod / 2) / max(f_multi, 1.0)
+        c_pod = pod["collective_bytes_per_device"]
+        c_multi = multi["collective_bytes_per_device"]
+        emit(f"fig1/{arch}", 0.0,
+             f"scaling_efficiency={eff:.2f};"
+             f"coll_bytes_pod={c_pod:.3g};coll_bytes_multipod={c_multi:.3g}")

@@ -1,0 +1,49 @@
+"""Fig 2/3 analogue: data-movement strategies into the compute unit.
+
+The paper compares direct ZA loads vs two-step (vector-register-staged)
+loads and finds staging 2.6x faster.  The TPU analogue: per-element
+("direct") access patterns vs block-staged VMEM movement.  On the CPU
+host we measure wall-clock bandwidth of (a) a strided gather copy
+("direct" anti-pattern), (b) a plain contiguous XLA copy, and (c) the
+blocked Pallas transpose/copy kernels that stage through scratch tiles,
+across working-set sizes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.transpose import transpose
+
+SIZES_KB = [64, 1024, 8192]
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for kb in SIZES_KB:
+        n = kb * 1024 // 4
+        side = int(np.sqrt(n))
+        x = jnp.asarray(rng.standard_normal((side, side)), jnp.float32)
+        nbytes = x.size * 4
+
+        # (a) strided gather ("direct" anti-pattern: element-granular)
+        idx = jnp.asarray(rng.permutation(side), jnp.int32)
+        ga = jax.jit(lambda x, i: x[i])
+        us = time_fn(ga, x, idx)
+        emit(f"fig23/gather_rows_{kb}kb", us,
+             f"gbps={2*nbytes/us/1e3:.2f}")
+
+        # (b) contiguous copy (the hardware-friendly baseline)
+        cp = jax.jit(lambda x: x + 0.0)
+        us = time_fn(cp, x)
+        emit(f"fig23/contiguous_copy_{kb}kb", us,
+             f"gbps={2*nbytes/us/1e3:.2f}")
+
+        # (c) blocked staged movement (pallas, scratch-tile two-step)
+        for bt in (64, 256):
+            if bt > side:
+                continue
+            tr = jax.jit(lambda x, bt=bt: transpose(x, bt=bt))
+            us = time_fn(tr, x, iters=3, warmup=1)
+            emit(f"fig23/staged_transpose_bt{bt}_{kb}kb", us,
+                 f"gbps={2*nbytes/us/1e3:.3f};note=interpret_mode")

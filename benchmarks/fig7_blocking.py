@@ -1,0 +1,26 @@
+"""Fig 7 analogue: homogeneous vs heterogeneous register blocking.
+
+The paper's 80x80 example needs 10 homogeneous 32x32 microkernels but
+only 7 heterogeneous ones.  We sweep ragged output shapes at TPU
+granularity and report microkernel counts, utilization, and the planner's
+predicted v5e time for both strategies — the planner-level reproduction
+of the paper's core optimization.
+"""
+from benchmarks.common import emit
+from repro.core import GemmDescriptor, plan_gemm
+
+SHAPES = [(640, 640), (320, 320), (896, 384), (2048, 272), (160, 1184),
+          (80, 80)]
+K = 512
+
+
+def run():
+    for m, n in SHAPES:
+        d = GemmDescriptor(m=m, n=n, k=K)
+        het = plan_gemm(d, heterogeneous=True)
+        hom = plan_gemm(d, heterogeneous=False, force_block=(256, 256))
+        emit(f"fig7/{m}x{n}", het.predicted_seconds() * 1e6,
+             f"het_microkernels={het.num_microkernels};"
+             f"hom_microkernels={hom.num_microkernels};"
+             f"het_util={het.utilization:.3f};hom_util={hom.utilization:.3f};"
+             f"hom_predicted_us={hom.predicted_seconds()*1e6:.1f}")

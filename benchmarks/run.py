@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  table1  — per-dtype matmul throughput (Table I)
+  fig1    — mesh scaling efficiency from dry-run records (Fig 1)
+  fig23   — data-movement staging strategies (Figs 2/3)
+  fig45   — alignment / edge-handling strategies (Figs 4/5)
+  fig7    — homogeneous vs heterogeneous blocking (Fig 7)
+  fig89   — small-GEMM sweep vs the vendor (XLA) baseline (Figs 8/9)
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig7,fig89")
+    args = ap.parse_args()
+    from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
+                            fig45_alignment, fig7_blocking, fig89_gemm_sweep)
+    suites = {
+        "table1": table1_throughput.run,
+        "fig1": fig1_scaling.run,
+        "fig23": fig23_bandwidth.run,
+        "fig45": fig45_alignment.run,
+        "fig7": fig7_blocking.run,
+        "fig89": fig89_gemm_sweep.run,
+    }
+    chosen = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for name in chosen:
+        suites[name]()
+
+
+if __name__ == '__main__':
+    main()

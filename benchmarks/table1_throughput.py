@@ -1,0 +1,60 @@
+"""Table I analogue: per-dtype matmul throughput of the engine.
+
+The paper measures per-instruction-class throughput on M4 (FMOPA fp32 =
+2009 GFLOPS etc.).  Our target (v5e MXU) is modeled, the host is CPU, so
+we report: (a) measured CPU wall-clock GFLOP/s of the XLA path per dtype
+(the real measurement this container supports), and (b) the machine-model
+peak the planner uses for that dtype (the "Table I" constant), as
+``derived``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import matmul, backend
+from repro.core.machine import TPU_V5E
+
+M = N = K = 512
+
+
+def run():
+    rng = np.random.default_rng(0)
+    a32 = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    b32 = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    flops = 2 * M * N * K
+    for dtype in ("float32", "bfloat16", "float16"):
+        a, b = a32.astype(dtype), b32.astype(dtype)
+
+        def f(a, b):
+            with backend("xla"):
+                return matmul(a, b)
+
+        jf = jax.jit(f)
+        us = time_fn(jf, a, b)
+        gflops = flops / us / 1e3
+        peak = TPU_V5E.peak(dtype) / 1e9
+        emit(f"table1/xla_{dtype}", us,
+             f"cpu_gflops={gflops:.1f};v5e_model_peak_gflops={peak:.0f}")
+
+    # int8: XLA CPU dot int8xint8->int32
+    ai = jnp.asarray(rng.integers(-127, 127, (M, K)), jnp.int8)
+    bi = jnp.asarray(rng.integers(-127, 127, (K, N)), jnp.int8)
+
+    def fi(a, b):
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    us = time_fn(jax.jit(fi), ai, bi)
+    emit("table1/xla_int8", us,
+         f"cpu_gops={flops/us/1e3:.1f};"
+         f"v5e_model_peak_gops={TPU_V5E.peak('int8')/1e9:.0f}")
+
+    # engine (pallas interpret) single data point for provenance
+    def fp(a, b):
+        with backend("pallas"):
+            return matmul(a, b)
+
+    us = time_fn(jax.jit(fp), a32, b32, iters=3, warmup=1)
+    emit("table1/pallas_interpret_float32", us,
+         f"cpu_gflops={flops/us/1e3:.2f};note=interpret_mode_correctness_path")

@@ -1,0 +1,49 @@
+"""MoE expert compute as ragged grouped small GEMMs — the paper's
+technique in its natural framework habitat.
+
+Routes a token batch with a real top-2 router, sorts tokens by expert,
+runs the scalar-prefetch grouped-GEMM Pallas kernel, and cross-checks
+against the per-expert dense loop.
+
+    PYTHONPATH=src python examples/moe_grouped_gemm.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_gemm import grouped_gemm, ref_grouped_gemm
+
+
+def main():
+    rng = np.random.default_rng(0)
+    t, d, f, e, topk = 512, 128, 256, 8, 2
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    w_router = jnp.asarray(rng.standard_normal((d, e)) * 0.1, jnp.float32)
+    w_up = jnp.asarray(rng.standard_normal((e, d, f)) * 0.05, jnp.float32)
+
+    # --- route and sort ----------------------------------------------------
+    probs = jax.nn.softmax(x @ w_router, -1)
+    gate, idx = jax.lax.top_k(probs, topk)  # (t, k)
+    flat_expert = idx.reshape(-1)           # (t*k,)
+    order = jnp.argsort(flat_expert)
+    x_expanded = jnp.repeat(x, topk, axis=0)[order]
+    sizes = jnp.bincount(flat_expert, length=e)
+    print("tokens per expert:", np.asarray(sizes))
+
+    # --- the paper's engine: one ragged grouped GEMM ------------------------
+    out_sorted = grouped_gemm(x_expanded, w_up, sizes, bm=64, bk=128, bn=128)
+    ref = ref_grouped_gemm(x_expanded, w_up, sizes)
+    err = float(jnp.max(jnp.abs(out_sorted - ref)))
+    print(f"grouped kernel vs per-expert loop: max err {err:.2e}")
+
+    # --- unsort + combine ----------------------------------------------------
+    unsort = jnp.argsort(order)
+    out = out_sorted[unsort].reshape(t, topk, f)
+    gate = gate / gate.sum(-1, keepdims=True)
+    y = jnp.einsum("tkf,tk->tf", out, gate)
+    print(f"combined MoE output: {tuple(y.shape)}, "
+          f"finite={bool(jnp.isfinite(y).all())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end training driver: a ~100M-parameter qwen3-family model on the
+synthetic bigram stream, with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300        # full
+    PYTHONPATH=src python examples/train_lm.py --steps 30 --small # quick
+
+Loss should fall from ~log(vocab) toward the bigram structure floor
+log(branching) ≈ 2.08 nats.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.data import SyntheticLMDataset
+from repro.optim import adamw, warmup_cosine
+from repro.runtime.steps import make_train_step, model_for
+from repro.runtime.train_loop import TrainLoopConfig, run_with_restarts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="tiny model for smoke runs")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_config("qwen3-0.6b")
+    if args.small:
+        cfg = reduced_config(base, vocab_size=512)
+    else:
+        # ~128M params: 12 layers, d=768, head_dim 64, tied 32k vocab
+        cfg = reduced_config(
+            base, num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+            head_dim=64, d_ff=3072, vocab_size=32768, moe_group=1024)
+    model = model_for(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}-reduced, {n/1e6:.1f}M params")
+
+    opt = adamw(warmup_cosine(1e-3, max(10, args.steps // 10), args.steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
+                            seed=11, branching=8)
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in ds.host_batch(step).items()}
+
+    loop = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           save_every=max(10, args.steps // 4), log_every=10)
+
+    def log(step, m):
+        print(f"step {step:4d} nll={m['nll']:.3f} "
+              f"gnorm={m['grad_norm']:.2f} dt={m['step_seconds']*1e3:.0f}ms")
+
+    out = run_with_restarts(lambda: (params, opt_state), step_fn, batch_fn,
+                            loop, log_fn=log)
+    nll0, nll1 = out["metrics"][0]["nll"], out["metrics"][-1]["nll"]
+    print(f"\nnll {nll0:.3f} -> {nll1:.3f} | uniform={jnp.log(cfg.vocab_size):.3f} "
+          f"structure floor={ds.unigram_floor_nats():.3f} | "
+          f"stragglers={out['stragglers']} restarts={out['restarts']}")
+    assert nll1 < nll0, "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

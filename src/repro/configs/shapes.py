@@ -1,0 +1,112 @@
+"""Input-shape suites (assigned) + ShapeDtypeStruct input specs.
+
+Four shapes per architecture (40 cells total):
+
+  * train_4k    — seq 4096,   global batch 256  (train_step)
+  * prefill_32k — seq 32768,  global batch 32   (prefill_step)
+  * decode_32k  — seq 32768,  global batch 128  (serve_step: 1 new token
+                  against a seq_len-deep cache)
+  * long_500k   — seq 524288, global batch 1    (serve_step; sub-quadratic
+                  archs only — full-attention archs are recorded as skips)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no device
+allocation) for the dry-run; ``sample_batch`` materializes small real
+batches for smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSuite:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSuite] = {
+    "train_4k": ShapeSuite("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSuite("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSuite("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSuite("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_for(name: str) -> ShapeSuite:
+    return SHAPES[name]
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSuite) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full quadratic attention: a 524288-token dense KV decode is "
+                "the regime this arch does not support (DESIGN.md §4)")
+    return None
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.modality == "vision":
+        return seq_len - cfg.num_modality_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSuite) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if shape.kind == "train":
+        specs = {}
+        st = _text_len(cfg, s)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, st), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, st), i32)
+        if cfg.modality == "vision":
+            specs["modality_feats"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_modality_tokens, cfg.modality_dim), f32)
+        if cfg.encoder_decoder:
+            specs["modality_feats"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.modality_dim), f32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        st = _text_len(cfg, s)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, st), i32)
+        if cfg.modality == "vision":
+            specs["modality_feats"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_modality_tokens, cfg.modality_dim), f32)
+        if cfg.encoder_decoder:
+            specs["modality_feats"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.modality_dim), f32)
+        return specs
+    # decode: one token against a seq_len-capacity cache
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.encoder_decoder:
+        specs["enc_out"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                jnp.dtype(cfg.dtype))
+    return specs
+
+
+def sample_batch(cfg: ModelConfig, shape: ShapeSuite, seed: int = 0):
+    """Small real arrays matching input_specs (smoke tests only)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, spec in input_specs(cfg, shape).items():
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            hi = cfg.vocab_size if k in ("tokens", "labels") else max(2, shape.seq_len)
+            arr = rng.integers(0, hi, size=spec.shape, dtype=np.int64)
+            out[k] = jnp.asarray(arr, spec.dtype)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(spec.shape), spec.dtype)
+    return out

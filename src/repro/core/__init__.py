@@ -1,0 +1,15 @@
+"""The paper's primary contribution: a JIT small-GEMM engine for matrix
+units, adapted from M4/SME (the paper's target) to TPU/MXU.
+
+  * ``machine``    — hardware model ("Table I" constants)
+  * ``descriptor`` — GEMM metadata (libxsmm descriptor analogue)
+  * ``blocking``   — heterogeneous accumulator-blocking planner (§IV-B)
+  * ``jit_cache``  — kernel registry (libxsmm JIT dispatch analogue)
+  * ``matmul``     — public dispatch used by every model layer
+  * ``microbench`` — machine-characterization harness (§III analogue)
+"""
+from repro.core.descriptor import GemmDescriptor  # noqa: F401
+from repro.core.blocking import BlockingPlan, Region, plan_gemm, palette  # noqa: F401
+from repro.core.machine import MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine  # noqa: F401
+from repro.core.matmul import matmul, set_backend, get_backend, backend  # noqa: F401
+from repro.core.jit_cache import GLOBAL_KERNEL_CACHE, KernelCache  # noqa: F401

@@ -1,0 +1,320 @@
+"""Register/VMEM blocking planner — the paper's §IV-B adapted to TPU.
+
+The paper's code generator owns a *palette* of accumulator register
+blockings for the 4 KiB ZA array — 32x32, 16x64, 64x16 — and covers a
+ragged output matrix C with a *heterogeneous* mix of them so that the
+number of microkernel executions is minimized (Fig 7: 7 executions instead
+of 10 for an 80x80 C), with predicate-masked edges.
+
+On TPU the accumulator lives in VMEM and is fed by the 128x128 MXU, so the
+palette is a set of (bm, bn) VMEM accumulator blocks under a fixed element
+budget (the ZA-capacity analogue), aligned to the native register tiling
+(sublane x 128 lanes) and ideally to the MXU edge (128).  The cost model is
+the paper's, re-derived for a systolic unit:
+
+  * every accumulator update of a (bm, bn) block with a K-panel of depth bk
+    loads (bm + bn) * bk input elements — maximizing bm*bn/(bm+bn) is the
+    paper's argument for square blocks (32x32 loads 64 values/update,
+    16x64 loads 80);
+  * masked (edge) blocks issue bm*bn MACs but only use rows*cols of them —
+    utilization of the systolic array replaces predicated-lane occupancy;
+  * each block execution has a fixed grid-step overhead (the analogue of
+    the paper's per-microkernel-invocation cost that motivates Fig 7).
+
+``plan_gemm`` returns a :class:`BlockingPlan`: a list of :class:`Region`
+covers (interior / bottom strip / right strip / corner), each of which maps
+onto one shape-specialized ``pallas_call`` in ``repro.kernels.gemm``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .descriptor import GemmDescriptor
+from .machine import MachineModel, DEFAULT_MACHINE
+
+# ---------------------------------------------------------------------------
+# Palette
+# ---------------------------------------------------------------------------
+
+# Accumulator element budget per kernel instance.  ZA analogue: M4 has
+# 1024 fp32 accumulator elements; v5e's VMEM comfortably holds 64k fp32
+# accumulator elements (256 KiB) next to double-buffered input blocks.
+ACC_BUDGET_ELEMS = 256 * 256
+
+# Candidate block edge lengths.  bn must be lane-aligned (128); bm is
+# sublane-aligned with MXU-aligned values preferred.
+_BM_CANDIDATES = (8, 16, 32, 64, 128, 256, 512)
+_BN_CANDIDATES = (128, 256, 512, 1024)
+
+# Fixed cost (seconds) charged per microkernel/grid-step launch.  On TPU
+# this models grid sequencing + pipeline refill; the value only needs to
+# rank plans, not predict wall-clock.
+_STEP_OVERHEAD_S = 2.0e-7
+
+
+def palette(budget: int = ACC_BUDGET_ELEMS,
+            machine: MachineModel = DEFAULT_MACHINE,
+            dtype: str = "float32") -> List[Tuple[int, int]]:
+    """All legal (bm, bn) accumulator blockings under ``budget`` elements.
+
+    Mirrors the paper's {32x32, 16x64, 64x16}: the full-budget shapes here
+    are {256x256, 128x512, 512x128} plus sub-budget shapes used for small
+    or ragged problems (where the paper would mask most of a tile).
+    """
+    sub, lane = machine.reg_tile(dtype)
+    shapes = []
+    for bm in _BM_CANDIDATES:
+        if bm % sub:
+            continue
+        for bn in _BN_CANDIDATES:
+            if bn % lane:
+                continue
+            if bm * bn > budget:
+                continue
+            shapes.append((bm, bn))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Plan datatypes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """A rectangular sub-block of C covered with a single blocking."""
+
+    row0: int
+    col0: int
+    rows: int
+    cols: int
+    bm: int
+    bn: int
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (ceil_div(self.rows, self.bm), ceil_div(self.cols, self.bn))
+
+    @property
+    def num_microkernels(self) -> int:
+        gm, gn = self.grid
+        return gm * gn
+
+    def issued_macs(self, k: int) -> int:
+        gm, gn = self.grid
+        return gm * self.bm * gn * self.bn * k
+
+    def useful_macs(self, k: int) -> int:
+        return self.rows * self.cols * k
+
+    def input_elems(self, k: int) -> int:
+        """Input traffic: paper's loads-per-update metric summed over blocks."""
+        gm, gn = self.grid
+        return (gm * gn) * (self.bm + self.bn) * k
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockingPlan:
+    desc: GemmDescriptor
+    regions: Tuple[Region, ...]
+    bk: int
+    heterogeneous: bool
+
+    # ---- aggregate stats (paper Fig 7 metrics) -------------------------
+    @property
+    def num_microkernels(self) -> int:
+        return sum(r.num_microkernels for r in self.regions)
+
+    @property
+    def utilization(self) -> float:
+        k = self.desc.k
+        issued = sum(r.issued_macs(k) for r in self.regions)
+        useful = sum(r.useful_macs(k) for r in self.regions)
+        return useful / max(1, issued)
+
+    @property
+    def input_elems(self) -> int:
+        return sum(r.input_elems(self.desc.k) for r in self.regions)
+
+    def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        return _predict_seconds(self.regions, self.desc, self.bk, machine)
+
+    def validate(self):
+        """Every C element covered exactly once (tested by hypothesis)."""
+        cover = {}
+        for ri, r in enumerate(self.regions):
+            for i in (r.row0, r.row0 + r.rows - 1):
+                for j in (r.col0, r.col0 + r.cols - 1):
+                    assert 0 <= i < self.desc.m and 0 <= j < self.desc.n, (r, self.desc)
+        total = sum(r.rows * r.cols for r in self.regions)
+        assert total == self.desc.m * self.desc.n, (
+            f"cover mismatch: {total} vs {self.desc.m * self.desc.n}")
+        # overlap check on region rectangles
+        rects = [(r.row0, r.col0, r.row0 + r.rows, r.col0 + r.cols) for r in self.regions]
+        for i in range(len(rects)):
+            for j in range(i + 1, len(rects)):
+                a, b = rects[i], rects[j]
+                if not (a[2] <= b[0] or b[2] <= a[0] or a[3] <= b[1] or b[3] <= a[1]):
+                    raise AssertionError(f"regions overlap: {a} {b}")
+        return True
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
+                     machine: MachineModel) -> float:
+    """Napkin-math time model used to rank candidate plans.
+
+    Three terms, mirroring the roofline decomposition used throughout the
+    system: systolic compute on *issued* MACs (masked lanes still occupy
+    the MXU — the SME predicate analogue), HBM traffic for inputs + C, and
+    per-grid-step overhead.
+    """
+    k = desc.k
+    in_sz = jnp.dtype(desc.in_dtype).itemsize
+    out_sz = jnp.dtype(desc.out_dtype).itemsize
+    issued = sum(r.issued_macs(k) for r in regions)
+    compute_s = 2.0 * issued / machine.peak(desc.in_dtype)
+    traffic = sum(r.input_elems(k) for r in regions) * in_sz
+    traffic += sum(r.rows * r.cols for r in regions) * out_sz * (2 if desc.accumulate else 1)
+    memory_s = traffic / machine.hbm_bw
+    steps = sum(r.num_microkernels for r in regions) * ceil_div(k, bk)
+    # compute and memory overlap in the pipelined kernel: take max + overhead
+    return max(compute_s, memory_s) + steps * _STEP_OVERHEAD_S
+
+
+def _pick_bk(desc: GemmDescriptor, bm: int, bn: int,
+             machine: MachineModel) -> int:
+    """Largest K-panel depth whose double-buffered blocks fit VMEM.
+
+    VMEM budget: acc (bm*bn fp32) + 2*(bm*bk + bk*bn) inputs.  The paper's
+    analogue is the two Z-register pairs feeding FMOPA; on TPU deeper
+    panels amortize the systolic pipeline, so we take the largest aligned
+    bk <= K subject to VMEM.
+    """
+    in_sz = jnp.dtype(desc.in_dtype).itemsize
+    acc_bytes = bm * bn * 4
+    budget = machine.vmem_bytes // 2 - acc_bytes  # conservative half-VMEM
+    if budget <= 0:
+        return machine.lanes
+    bk_max = budget // (2 * in_sz * (bm + bn))
+    sub, lane = machine.reg_tile(desc.in_dtype)
+    bk = max(lane, (bk_max // lane) * lane)
+    bk = min(bk, round_up(desc.k, lane), 2048)
+    return bk
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+def plan_gemm(desc: GemmDescriptor,
+              machine: MachineModel = DEFAULT_MACHINE,
+              budget: int = ACC_BUDGET_ELEMS,
+              heterogeneous: bool = True,
+              force_block: Optional[Tuple[int, int]] = None) -> BlockingPlan:
+    """Produce the blocking plan for one GEMM descriptor.
+
+    ``heterogeneous=False`` reproduces the paper's baseline (Fig 7 left):
+    one blocking tiles the whole matrix.  ``force_block`` pins the primary
+    blocking (used by benchmarks and the perf hillclimb).
+    """
+    m, n = desc.m, desc.n
+    shapes = palette(budget, machine, desc.in_dtype)
+
+    if force_block is not None:
+        primary = force_block
+    else:
+        primary = _best_homogeneous(m, n, shapes, desc, machine)
+
+    if not heterogeneous:
+        regions = (Region(0, 0, m, n, *primary),)
+        bk = _pick_bk(desc, *primary, machine)
+        plan = BlockingPlan(desc, regions, bk, heterogeneous=False)
+        return plan
+
+    regions = _heterogeneous_cover(m, n, primary, shapes, desc, machine)
+    # Compare against the best homogeneous plan and keep the cheaper one —
+    # for aligned shapes the interior cover *is* the homogeneous plan.
+    bk = _pick_bk(desc, *primary, machine)
+    plan = BlockingPlan(desc, tuple(regions), bk, heterogeneous=len(regions) > 1)
+    homo = BlockingPlan(desc, (Region(0, 0, m, n, *primary),), bk, False)
+    if homo.predicted_seconds(machine) < plan.predicted_seconds(machine):
+        return homo
+    return plan
+
+
+def _best_homogeneous(m: int, n: int, shapes, desc, machine) -> Tuple[int, int]:
+    best, best_t = None, float("inf")
+    for bm, bn in shapes:
+        # Skip grossly oversized blocks (all-masked) unless nothing smaller.
+        region = Region(0, 0, m, n, bm, bn)
+        bk = _pick_bk(desc, bm, bn, machine)
+        t = _predict_seconds([region], desc, bk, machine)
+        if t < best_t:
+            best, best_t = (bm, bn), t
+    assert best is not None
+    return best
+
+
+def _strip_block(extent_major: int, extent_minor: int, shapes,
+                 major_axis: int) -> Tuple[int, int]:
+    """Pick the palette block for an edge strip.
+
+    ``major_axis`` = 0 for the bottom strip (few rows, many cols: paper's
+    16x64 analogue) and 1 for the right strip (64x16 analogue).  Choose the
+    smallest block edge covering the strip thickness (minimum masking) and
+    the largest perpendicular edge (minimum invocations).
+    """
+    best = None
+    # minimal covering thickness
+    thick_opts = sorted({s[major_axis] for s in shapes})
+    cover = [t for t in thick_opts if t >= extent_major]
+    thickness = cover[0] if cover else thick_opts[-1]
+    spans = [s[1 - major_axis] for s in shapes if s[major_axis] == thickness]
+    span = max(spans)
+    best = (thickness, span) if major_axis == 0 else (span, thickness)
+    return best
+
+
+def _heterogeneous_cover(m, n, primary, shapes, desc, machine) -> List[Region]:
+    bm0, bn0 = primary
+    m_full, n_full = m // bm0, n // bn0
+    mi, ni = m_full * bm0, n_full * bn0
+    regions: List[Region] = []
+    if m_full and n_full:
+        regions.append(Region(0, 0, mi, ni, bm0, bn0))
+    rem_m, rem_n = m - mi, n - ni
+    if rem_m and ni:
+        bm_s, bn_s = _strip_block(rem_m, ni, shapes, major_axis=0)
+        regions.append(Region(mi, 0, rem_m, ni, bm_s, bn_s))
+    if rem_n and mi:
+        bm_s, bn_s = _strip_block(rem_n, mi, shapes, major_axis=1)
+        regions.append(Region(0, ni, mi, rem_n, bm_s, bn_s))
+    if rem_m and rem_n:
+        bm_c, bn_c = _corner_block(rem_m, rem_n, shapes)
+        regions.append(Region(mi, ni, rem_m, rem_n, bm_c, bn_c))
+    if not regions:  # degenerate: matrix smaller than every block
+        bm_c, bn_c = _corner_block(m, n, shapes)
+        regions.append(Region(0, 0, m, n, bm_c, bn_c))
+    return regions
+
+
+def _corner_block(rows, cols, shapes) -> Tuple[int, int]:
+    """Smallest palette block covering the (masked) corner."""
+    covering = sorted(shapes, key=lambda s: (ceil_div(rows, s[0]) * ceil_div(cols, s[1]),
+                                             s[0] * s[1]))
+    return covering[0]

@@ -1,0 +1,128 @@
+"""GEMM descriptors — the LIBXSMM ``libxsmm_gemm_descriptor`` analogue.
+
+The paper's JIT code generator "hardwires matrix sizes, datatypes, and
+leading dimensions when generating a matrix kernel" (§IV).  A
+``GemmDescriptor`` carries exactly that metadata; it is the hashable key of
+the JIT cache (``repro.core.jit_cache``) and the input of the blocking
+planner (``repro.core.blocking``).
+
+Layout semantics.  JAX arrays are logically row-major.  We express the
+paper's two studied layouts as contraction forms:
+
+  * ``"nn"`` — ``C[M,N] += A[M,K] @ B[K,N]``: the contraction dim of B is
+    its *major* dim.  This corresponds to the paper's row-major-B case
+    (§IV-A): B's N-slice for one k is contiguous, outer-product friendly.
+  * ``"nt"`` — ``C[M,N] += A[M,K] @ B[N,K]^T``: B stores N major / K minor.
+    This is the paper's "transposing B" case (§IV-C): the contraction dim
+    is strided, so the kernel must either transpose panels through scratch
+    (the ZA horizontal/vertical trick) or fuse a block transpose.
+
+(The paper's column-major `A/C`, row-major `B` maps onto "nn" under a
+global transpose of the problem; what matters — and what we preserve — is
+whether B's contraction dim is contiguous.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .machine import canonical_dtype
+
+LAYOUTS = ("nn", "nt")
+EPILOGUES = (None, "bias", "gelu", "silu", "relu", "bias_gelu", "bias_silu")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmDescriptor:
+    """Hashable metadata fully specifying one generated GEMM kernel."""
+
+    m: int
+    n: int
+    k: int
+    layout: str = "nn"  # "nn": B is (K,N); "nt": B is (N,K)
+    in_dtype: str = "float32"
+    acc_dtype: str = "float32"
+    out_dtype: str = "float32"
+    accumulate: bool = False  # True => C += A@B (beta=1), else C = A@B
+    epilogue: Optional[str] = None
+    # Edge-handling strategy: "mask" (predication analogue) or "pad"
+    # (copy-based).  §IV-B uses predicates; we support both to benchmark.
+    edge: str = "mask"
+    # batch dims (leading, shared by A/B/C); 0 => unbatched 2-D GEMM
+    batch: int = 0
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, got {self.layout}")
+        if self.epilogue not in EPILOGUES:
+            raise ValueError(f"epilogue must be one of {EPILOGUES}")
+        if self.edge not in ("mask", "pad"):
+            raise ValueError("edge must be 'mask' or 'pad'")
+        for d in (self.m, self.n, self.k):
+            if d <= 0:
+                raise ValueError(f"GEMM dims must be positive, got {self}")
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_operands(cls, a, b, layout="nn", accumulate=False, epilogue=None,
+                      acc_dtype="float32", out_dtype=None, edge="mask"):
+        if a.ndim != b.ndim:
+            raise ValueError(f"rank mismatch: A{a.shape} vs B{b.shape}")
+        batch = 0
+        if a.ndim == 3:
+            if a.shape[0] != b.shape[0]:
+                raise ValueError(f"batch mismatch: A{a.shape} vs B{b.shape}")
+            batch = a.shape[0]
+        elif a.ndim != 2:
+            raise ValueError(f"GEMM operands must be rank 2 or 3, got {a.ndim}")
+        m, k = a.shape[-2], a.shape[-1]
+        if layout == "nn":
+            kb, n = b.shape[-2], b.shape[-1]
+        else:
+            n, kb = b.shape[-2], b.shape[-1]
+        if kb != k:
+            raise ValueError(f"contraction mismatch: A{a.shape} {layout} B{b.shape}")
+        in_dtype = canonical_dtype(a.dtype)
+        if canonical_dtype(b.dtype) != in_dtype:
+            raise ValueError(f"A/B dtype mismatch: {a.dtype} vs {b.dtype}")
+        return cls(
+            m=m, n=n, k=k, layout=layout, in_dtype=in_dtype,
+            acc_dtype=canonical_dtype(acc_dtype),
+            out_dtype=canonical_dtype(out_dtype or acc_dtype),
+            accumulate=accumulate, epilogue=epilogue, edge=edge, batch=batch,
+        )
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def flops(self) -> int:
+        nb = max(1, self.batch)
+        return 2 * nb * self.m * self.n * self.k
+
+    @property
+    def in_bytes(self) -> int:
+        nb = max(1, self.batch)
+        isz = jnp.dtype(self.in_dtype).itemsize
+        return nb * (self.m * self.k + self.k * self.n) * isz
+
+    @property
+    def out_bytes(self) -> int:
+        nb = max(1, self.batch)
+        return nb * self.m * self.n * jnp.dtype(self.out_dtype).itemsize
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.in_bytes + self.out_bytes)
+
+    def b_shape(self) -> tuple:
+        core = (self.k, self.n) if self.layout == "nn" else (self.n, self.k)
+        return (self.batch, *core) if self.batch else core
+
+    def a_shape(self) -> tuple:
+        core = (self.m, self.k)
+        return (self.batch, *core) if self.batch else core
+
+    def c_shape(self) -> tuple:
+        core = (self.m, self.n)
+        return (self.batch, *core) if self.batch else core

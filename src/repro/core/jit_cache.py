@@ -1,0 +1,57 @@
+"""JIT kernel cache — the LIBXSMM dispatch analogue.
+
+LIBXSMM generates a kernel per ``libxsmm_gemm_descriptor`` and serves later
+requests from a code registry.  Here, "code generation" is building the
+shape-specialized ``pallas_call`` executors for every region of a
+:class:`BlockingPlan`; this registry memoizes (descriptor, plan-knobs) ->
+built executor so models with thousands of identical small GEMMs pay the
+planning/build cost once per shape.
+
+(``jax.jit`` separately caches *compiled* artifacts by aval; this cache
+avoids re-running the planner and re-tracing kernel builds, and gives us
+the hit/miss observability the paper's dispatch layer has.)
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Hashable, Tuple
+
+
+class KernelCache:
+    def __init__(self, max_entries: int = 4096):
+        self._lock = threading.Lock()
+        self._store: Dict[Hashable, Any] = {}
+        self._max = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        with self._lock:
+            if key in self._store:
+                self.hits += 1
+                return self._store[key]
+        # Build outside the lock (builders trace JAX code and can be slow).
+        value = builder()
+        with self._lock:
+            if key not in self._store:
+                if len(self._store) >= self._max:
+                    # Simple FIFO eviction; shape populations in one model
+                    # are tiny compared to max_entries.
+                    self._store.pop(next(iter(self._store)))
+                self._store[key] = value
+                self.misses += 1
+            else:
+                self.hits += 1
+            return self._store[key]
+
+    def stats(self) -> Tuple[int, int, int]:
+        with self._lock:
+            return self.hits, self.misses, len(self._store)
+
+    def clear(self):
+        with self._lock:
+            self._store.clear()
+            self.hits = self.misses = 0
+
+
+GLOBAL_KERNEL_CACHE = KernelCache()

@@ -1,0 +1,138 @@
+"""Machine model for the target accelerator (TPU v5e).
+
+This is the "Table I" of the system: the hardware constants that the paper
+derives by microbenchmarking M4's SME unit, we pin from the published TPU
+v5e specifications. They feed two consumers:
+
+  * the blocking planner (``repro.core.blocking``), which sizes VMEM
+    accumulator blocks the way the paper sizes ZA register blockings, and
+  * the roofline analysis (``repro.launch.roofline``), which converts
+    compiled HLO FLOPs / bytes / collective bytes into seconds.
+
+The container we develop in is CPU-only, so — exactly like the paper uses
+its Sec. III microbenchmarks to parameterize the Sec. IV code generator —
+we use this static model to parameterize kernel generation, and validate
+kernels functionally in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Performance model of one accelerator chip and its interconnect."""
+
+    name: str
+    # --- compute ---------------------------------------------------------
+    # Peak MACs structured as (sublane, lane) native register tiling and the
+    # systolic array dimensions.  SME analogue: SVL=512b => 16x16 fp32 ZA
+    # tile; TPU v5e: 128x128 MXU.
+    mxu_rows: int
+    mxu_cols: int
+    peak_flops: Dict[str, float]  # dtype name -> FLOP/s per chip
+    # --- memory hierarchy -------------------------------------------------
+    hbm_bytes: int
+    hbm_bw: float  # bytes/s
+    vmem_bytes: int
+    # native register tile (second-minor, minor) granule per dtype
+    sublanes: Dict[str, int]
+    lanes: int
+    # --- interconnect ------------------------------------------------------
+    ici_bw_per_link: float  # bytes/s per ICI link
+    ici_links: int  # links per chip in the 2D torus
+    dcn_bw: float  # bytes/s per chip across pods
+
+    # ---------------------------------------------------------------------
+    def peak(self, dtype) -> float:
+        return self.peak_flops[canonical_dtype(dtype)]
+
+    def reg_tile(self, dtype) -> tuple[int, int]:
+        """Native (sublane, lane) register tile for ``dtype``.
+
+        The analogue of the paper's SVL-determined tile: on M4 a ZA fp32
+        tile is 16x16; on TPU the packing granule is (8,128) fp32 /
+        (16,128) bf16 / (32,128) int8.
+        """
+        return (self.sublanes[canonical_dtype(dtype)], self.lanes)
+
+    def mxu_tile(self) -> tuple[int, int]:
+        return (self.mxu_rows, self.mxu_cols)
+
+    # Roofline helpers ------------------------------------------------------
+    def compute_seconds(self, flops: float, dtype="bfloat16", chips: int = 1) -> float:
+        return flops / (self.peak(dtype) * chips)
+
+    def memory_seconds(self, nbytes: float, chips: int = 1) -> float:
+        return nbytes / (self.hbm_bw * chips)
+
+    def collective_seconds(self, nbytes: float, chips: int = 1) -> float:
+        # Aggregate ICI model: each chip drives ici_links links.
+        return nbytes / (self.ici_bw_per_link * chips)
+
+
+def canonical_dtype(dtype) -> str:
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.bfloat16):
+        return "bfloat16"
+    if d == jnp.dtype(jnp.float32):
+        return "float32"
+    if d == jnp.dtype(jnp.float16):
+        return "float16"
+    if d == jnp.dtype(jnp.int8):
+        return "int8"
+    if d == jnp.dtype(jnp.float64):
+        return "float64"
+    raise ValueError(f"unsupported dtype for machine model: {dtype}")
+
+
+# TPU v5e constants.  peak bf16 = 197 TFLOP/s (given); fp32 through the MXU
+# runs at half rate with fp32 accumulate; int8 doubles bf16 — mirroring the
+# dtype asymmetry the paper measures in Table I (where M4 is FP32-centric;
+# v5e is bf16-centric: the engine's dtype default flips accordingly).
+TPU_V5E = MachineModel(
+    name="tpu_v5e",
+    mxu_rows=128,
+    mxu_cols=128,
+    peak_flops={
+        "bfloat16": 197e12,
+        "float16": 197e12,
+        "float32": 98.5e12,
+        "int8": 394e12,
+        "float64": 0.5e12,  # emulated; not a target dtype
+    },
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=819e9,
+    vmem_bytes=128 * 1024**2,
+    sublanes={"float32": 8, "bfloat16": 16, "float16": 16, "int8": 32, "float64": 8},
+    lanes=128,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    dcn_bw=25e9 / 8,  # ~25 Gb/s effective per chip across pods
+)
+
+# The CPU host we validate on (interpret mode).  Only used to sanity-scale
+# wall-clock expectations in benchmarks; never by the planner.
+CPU_HOST = MachineModel(
+    name="cpu_host",
+    mxu_rows=1,
+    mxu_cols=1,
+    peak_flops={"bfloat16": 5e9, "float16": 5e9, "float32": 1e10, "int8": 2e10, "float64": 5e9},
+    hbm_bytes=32 * 1024**3,
+    hbm_bw=20e9,
+    vmem_bytes=1 * 1024**2,
+    sublanes={"float32": 8, "bfloat16": 16, "float16": 16, "int8": 32, "float64": 8},
+    lanes=128,
+    ici_bw_per_link=1e9,
+    ici_links=1,
+    dcn_bw=1e9,
+)
+
+DEFAULT_MACHINE = TPU_V5E
+
+
+def get_machine(name: str = "tpu_v5e") -> MachineModel:
+    return {"tpu_v5e": TPU_V5E, "cpu_host": CPU_HOST}[name]

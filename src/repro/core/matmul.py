@@ -1,0 +1,189 @@
+"""Public matmul dispatch — the framework's BLAS front door.
+
+Every dense layer in ``repro.models`` calls :func:`matmul`.  The dispatcher
+either routes through the paper's engine (plan → shape-specialized Pallas
+kernels, ``backend="pallas"``) or through XLA's native ``dot_general``
+(``backend="xla"`` — the "vendor BLAS" of the TPU stack, and the baseline
+of every paper-figure benchmark).
+
+Backend policy: CPU containers validate the Pallas path in interpret mode
+at test scale; multi-pod dry-runs lower the XLA path (identical FLOPs,
+bytes and sharding semantics — see DESIGN.md §3).  On TPU hardware the
+global default flips to "pallas".
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocking import BlockingPlan, plan_gemm
+from .descriptor import GemmDescriptor
+
+_state = threading.local()
+
+
+def _cfg():
+    if not hasattr(_state, "backend"):
+        _state.backend = "xla"
+        _state.interpret = True
+    return _state
+
+
+def set_backend(backend: str, interpret: Optional[bool] = None):
+    assert backend in ("xla", "pallas")
+    s = _cfg()
+    s.backend = backend
+    if interpret is not None:
+        s.interpret = interpret
+
+
+def get_backend() -> str:
+    return _cfg().backend
+
+
+@contextlib.contextmanager
+def backend(name: str, interpret: Optional[bool] = None):
+    s = _cfg()
+    prev = (s.backend, s.interpret)
+    try:
+        set_backend(name, interpret)
+        yield
+    finally:
+        s.backend, s.interpret = prev
+
+
+def matmul(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
+           layout: str = "nn", epilogue: Optional[str] = None,
+           bias: Optional[jax.Array] = None, out_dtype=None,
+           acc_dtype=jnp.float32, plan: Optional[BlockingPlan] = None,
+           backend_override: Optional[str] = None) -> jax.Array:
+    """Planned (batched) GEMM: ``out = epilogue(c? + a @ op(b))``.
+
+    ``a``: (..., M, K).  ``b``: (K, N) | (..., K, N) for layout "nn",
+    (N, K) | (..., N, K) for "nt".  Leading dims of ``a`` are flattened
+    into M when ``b`` is rank-2 (the dense-layer case).
+    """
+    be = backend_override or _cfg().backend
+    out_dtype = out_dtype or a.dtype
+
+    if be == "xla":
+        # No flattening: dot_general consumes (..., M, K) directly, so
+        # sharding on the leading/sequence dims propagates through (a
+        # reshape here would break SPMD propagation and force gathers).
+        return _xla_gemm(a, b, c, layout, epilogue, bias, out_dtype, acc_dtype)
+
+    lead = None
+    if b.ndim == 2 and a.ndim > 2:
+        lead = a.shape[:-1]
+        a = a.reshape(-1, a.shape[-1])
+        if c is not None:
+            c = c.reshape(-1, c.shape[-1])
+    from repro.kernels.gemm.ops import gemm as pallas_gemm
+    out = pallas_gemm(a, b, c, layout=layout, epilogue=epilogue,
+                      bias=bias, out_dtype=out_dtype,
+                      plan=plan, interpret=_cfg().interpret)
+    if lead is not None:
+        out = out.reshape(*lead, out.shape[-1])
+    return out
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _dot_spmd(a, b, layout):
+    """dot_general with *bf16 cotangent* backward.
+
+    The activation gradient (dx) is produced directly in the input dtype,
+    so the tensor-parallel partial-sum collective moves bf16 (not the fp32
+    the default VJP would emit — 2x the bytes) and no fp32 activation-
+    sized buffers materialize.  The weight gradient keeps an fp32
+    accumulate (long token-dim reduction).  This is the Megatron bf16
+    grad-reduce convention expressed as a custom VJP.
+    """
+    return _dot_fwd_impl(a, b, layout)
+
+
+def _dot_fwd_impl(a, b, layout):
+    contract_b = b.ndim - (2 if layout == "nn" else 1)
+    nbatch = max(a.ndim, b.ndim) - 2
+    batch_dims = tuple(range(nbatch)) if a.ndim == b.ndim else ()
+    dn = (((a.ndim - 1,), (contract_b,)), (batch_dims, batch_dims))
+    return jax.lax.dot_general(a, b, dn, preferred_element_type=jnp.float32)
+
+
+def _dot_fwd(a, b, layout):
+    return _dot_fwd_impl(a, b, layout), (a, b)
+
+
+def _dot_bwd(layout, res, g):
+    # Both grads in the primal (bf16) dtype: dx partial-sums cross "model"
+    # and dw cross "data" — bf16 on the wire AND no fp32 weight-sized
+    # transients (observed 3.9 GiB per vocab-sized weight on 256k-vocab
+    # archs).  The MXU still accumulates fp32 internally.
+    a, b = res
+    g16 = g.astype(a.dtype)
+    nbatch_b = b.ndim - 2
+    if a.ndim == b.ndim:  # batched b
+        bd = tuple(range(nbatch_b))
+        if layout == "nn":   # b: (..., K, N); g: (..., M, N)
+            da = jax.lax.dot_general(
+                g16, b, (((g.ndim - 1,), (b.ndim - 1,)), (bd, bd)),
+                preferred_element_type=a.dtype)
+            db = jax.lax.dot_general(
+                a, g16, (((a.ndim - 2,), (g.ndim - 2,)), (bd, bd)),
+                preferred_element_type=b.dtype)
+        else:                # b: (..., N, K); g: (..., M, N)
+            da = jax.lax.dot_general(
+                g16, b, (((g.ndim - 1,), (b.ndim - 2,)), (bd, bd)),
+                preferred_element_type=a.dtype)
+            db = jax.lax.dot_general(
+                g16, a, (((g.ndim - 2,), (a.ndim - 2,)), (bd, bd)),
+                preferred_element_type=b.dtype)
+    else:  # b rank-2, a (..., M, K)
+        lead = tuple(range(a.ndim - 1))  # all but K — contracted for db
+        if layout == "nn":   # b: (K, N)
+            da = jax.lax.dot_general(
+                g16, b, (((g.ndim - 1,), (1,)), ((), ())),
+                preferred_element_type=a.dtype)
+            db = jax.lax.dot_general(
+                a, g16, ((lead, lead), ((), ())),
+                preferred_element_type=b.dtype)
+        else:                # b: (N, K)
+            da = jax.lax.dot_general(
+                g16, b, (((g.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=a.dtype)
+            db = jax.lax.dot_general(
+                g16, a, ((lead, lead), ((), ())),
+                preferred_element_type=b.dtype)
+    return da, db
+
+
+_dot_spmd.defvjp(_dot_fwd, _dot_bwd)
+
+
+def _xla_gemm(a, b, c, layout, epilogue, bias, out_dtype, acc_dtype):
+    acc = _dot_spmd(a, b, layout)
+    if c is not None:
+        acc = acc + c.astype(acc.dtype)
+    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+        acc = acc + bias.astype(acc.dtype)
+    if epilogue in ("gelu", "bias_gelu"):
+        acc = jax.nn.gelu(acc)
+    elif epilogue in ("silu", "bias_silu"):
+        acc = jax.nn.silu(acc)
+    elif epilogue == "relu":
+        acc = jnp.maximum(acc, 0)
+    return acc.astype(out_dtype)
+
+
+def describe(a, b, layout="nn", **kw) -> GemmDescriptor:
+    return GemmDescriptor.from_operands(a, b, layout=layout, **kw)
+
+
+def plan(a, b, layout="nn", **kw) -> BlockingPlan:
+    return plan_gemm(GemmDescriptor.from_operands(a, b, layout=layout), **kw)

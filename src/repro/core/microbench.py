@@ -1,0 +1,86 @@
+"""Machine-characterization harness — the paper's §III in library form.
+
+The paper microbenchmarks M4 (instruction throughput per dtype, ZA
+load/store strategies, multi-core scaling) and feeds the findings into
+the code generator.  This module provides the same probes for whatever
+device JAX is running on, plus the static v5e model used when the target
+is not the host (this container).  benchmarks/table1_throughput.py,
+fig23_bandwidth.py and fig1_scaling.py are the reporting front-ends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .machine import MachineModel, TPU_V5E
+
+
+@dataclasses.dataclass
+class ProbeResult:
+    name: str
+    value: float
+    unit: str
+
+
+def _timeit(fn, *args, iters=5, warmup=2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def probe_matmul_flops(dtype="float32", size=512) -> ProbeResult:
+    """Peak-ish matmul throughput on the host (Table I analogue)."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((size, size)), dtype)
+    b = jnp.asarray(rng.standard_normal((size, size)), dtype)
+    f = jax.jit(lambda a, b: a @ b)
+    s = _timeit(f, a, b)
+    return ProbeResult(f"matmul_{dtype}", 2 * size**3 / s / 1e9, "GFLOP/s")
+
+
+def probe_copy_bandwidth(mbytes=64) -> ProbeResult:
+    """Streaming copy bandwidth (Fig 2/3 baseline analogue)."""
+    n = mbytes * 2**20 // 4
+    x = jnp.zeros((n,), jnp.float32)
+    f = jax.jit(lambda x: x + 1.0)
+    s = _timeit(f, x)
+    return ProbeResult("copy_bw", 2 * n * 4 / s / 1e9, "GB/s")
+
+
+def probe_elementwise_latency() -> ProbeResult:
+    """Small-op dispatch latency (grid-step overhead calibration)."""
+    x = jnp.zeros((8,), jnp.float32)
+    f = jax.jit(lambda x: x * 2.0)
+    s = _timeit(f, x, iters=20, warmup=5)
+    return ProbeResult("dispatch_latency", s * 1e6, "us")
+
+
+def characterize(machine: MachineModel = TPU_V5E) -> Dict[str, ProbeResult]:
+    """Run all probes; pair host measurements with target-model constants."""
+    out = {}
+    for dtype in ("float32", "bfloat16"):
+        r = probe_matmul_flops(dtype)
+        out[r.name] = r
+        out[f"target_peak_{dtype}"] = ProbeResult(
+            f"target_peak_{dtype}", machine.peak(dtype) / 1e9, "GFLOP/s")
+    r = probe_copy_bandwidth()
+    out[r.name] = r
+    out["target_hbm_bw"] = ProbeResult("target_hbm_bw",
+                                       machine.hbm_bw / 1e9, "GB/s")
+    out[probe_elementwise_latency().name] = probe_elementwise_latency()
+    return out
+
+
+if __name__ == "__main__":
+    for name, r in characterize().items():
+        print(f"{r.name:24s} {r.value:12.2f} {r.unit}")

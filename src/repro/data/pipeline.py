@@ -1,0 +1,78 @@
+"""Deterministic, shardable synthetic data pipeline.
+
+Production posture without shipping a corpus: every (step, sample) is a
+pure function of the dataset seed, so
+
+  * resume-after-failure is exact (skip-to-step is free — no iterator
+    state to checkpoint beyond the step counter),
+  * each data shard materializes only its slice (``make_global_batch``
+    builds a global jax.Array from per-shard callbacks — no host ever
+    holds the global batch),
+  * the token stream follows a fixed random bigram (Markov) table, so
+    cross-entropy has learnable structure and training loss demonstrably
+    falls below the unigram floor (used by examples/train_lm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class SyntheticLMDataset:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    branching: int = 8  # candidate successors per token (entropy knob)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v, k = self.vocab_size, self.branching
+        self._succ = rng.integers(0, v, size=(v, k), dtype=np.int64)
+
+    def _sample_rows(self, step: int, row0: int, rows: int) -> np.ndarray:
+        """Rows [row0, row0+rows) of the global batch at ``step``."""
+        out = np.empty((rows, self.seq_len + 1), dtype=np.int32)
+        for i in range(rows):
+            r = np.random.default_rng(
+                (self.seed, step, row0 + i))  # counter-based: O(1) skip
+            tok = r.integers(0, self.vocab_size)
+            choices = r.integers(0, self.branching, size=self.seq_len + 1)
+            for t in range(self.seq_len + 1):
+                out[i, t] = tok
+                tok = self._succ[tok, choices[t]]
+        return out
+
+    def host_batch(self, step: int) -> Dict[str, np.ndarray]:
+        """Full batch on one host (examples / tests)."""
+        toks = self._sample_rows(step, 0, self.global_batch)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def unigram_floor_nats(self) -> float:
+        """Entropy of the stationary next-token distribution ≈ log(branching)."""
+        return float(np.log(self.branching))
+
+
+def make_global_batch(ds: SyntheticLMDataset, step: int, mesh: Mesh,
+                      batch_axes=("pod", "data")) -> Dict[str, jax.Array]:
+    """Build the sharded global batch; each device materializes its rows."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    sharding = NamedSharding(mesh, P(axes, None))
+
+    def build(key):
+        def cb(index):
+            rowsel = index[0]
+            row0 = rowsel.start or 0
+            rows = (rowsel.stop or ds.global_batch) - row0
+            toks = ds._sample_rows(step, row0, rows)
+            return toks[:, :-1] if key == "tokens" else toks[:, 1:]
+
+        shape = (ds.global_batch, ds.seq_len)
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    return {"tokens": build("tokens"), "labels": build("labels")}

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel lives in its own subpackage with three files:
+
+  * ``kernel.py`` — the ``pl.pallas_call`` + ``BlockSpec`` implementation
+    (TPU target; executed via ``interpret=True`` on CPU),
+  * ``ops.py``    — the jit'd public wrapper (planning, padding/masking
+    policy, backend dispatch),
+  * ``ref.py``    — the pure-jnp oracle used by tests and benchmarks.
+"""

@@ -1,0 +1,115 @@
+"""Flash-attention forward Pallas kernel (causal, online softmax).
+
+Built from the same microkernel discipline as the GEMM engine: the
+(block_q, block_k) score tile is the ZA-accumulator analogue, the K-grid
+is the contraction loop, and causal masking is trace-time-specialized
+predication (§IV-B).  Grid = (b*h, q_blocks, k_blocks) with running
+max/denominator carried in VMEM scratch across the k dimension —
+activation memory O(block_q x block_k) regardless of sequence length.
+
+Off-diagonal fully-masked tiles are skipped with ``pl.when`` (no DMA, no
+MXU work) — the heterogeneous-cover idea applied to the causal triangle:
+only ~half the grid does work.
+
+Serving path on TPU; training uses the XLA chunked formulation in
+``repro.models.attention`` (same math, autodiff-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q, block_k, k_steps, sk, causal, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip tiles strictly above the diagonal (ZA-cover analogue)
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    k_ragged = sk % block_k != 0
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]  # (block_q, d)
+        k = k_ref[0]  # (block_k, d)
+        v = v_ref[0]
+        if k_ragged:
+            # KV-tail predication (trace-time specialized, §IV-B): padded
+            # rows may be garbage/NaN — `where`, never multiply.
+            krow = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_k, 1), 0)
+            v = jnp.where(krow < sk, v, 0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        if causal and k_ragged:
+            s = jnp.where((kpos <= qpos) & (kpos < sk), s, NEG_INF)
+        elif causal:
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        elif k_ragged:
+            s = jnp.where(kpos < sk, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def build_flash_kernel(*, batch_heads: int, sq: int, sk: int, d: int,
+                       block_q: int = 512, block_k: int = 512,
+                       causal: bool = True, dtype=jnp.bfloat16,
+                       interpret: bool = True):
+    """Returns f(q:(BH,sq,d), k:(BH,sk,d), v:(BH,sk,d)) -> (BH,sq,d)."""
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    grid = (batch_heads, pl.cdiv(sq, block_q), pl.cdiv(sk, block_k))
+    body = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k,
+        k_steps=grid[2], sk=sk, causal=causal, scale=d ** -0.5)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch_heads, sq, d), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )

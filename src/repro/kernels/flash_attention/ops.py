@@ -1,0 +1,27 @@
+"""jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.kernels.flash_attention.kernel import build_flash_kernel
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True) -> jax.Array:
+    """q/k/v: (b, s, h, d) -> (b, s, h, d)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    key = ("flash", b * h, sq, sk, d, causal, block_q, block_k,
+           str(q.dtype), interpret)
+    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
+        key, lambda: build_flash_kernel(
+            batch_heads=b * h, sq=sq, sk=sk, d=d, block_q=block_q,
+            block_k=block_k, causal=causal, dtype=q.dtype,
+            interpret=interpret))
+    out = kernel(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

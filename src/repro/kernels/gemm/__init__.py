@@ -1,0 +1,2 @@
+from repro.kernels.gemm.ops import gemm, gemm_region  # noqa: F401
+from repro.kernels.gemm.ref import ref_gemm  # noqa: F401

@@ -1,0 +1,153 @@
+"""Shape-specialized blocked GEMM Pallas kernel — the SME microkernel analogue.
+
+Paper mapping (Lst. 4 / Fig. 6):
+
+  * the ZA accumulator tiles      -> an fp32 VMEM scratch accumulator block
+    holding a (bm, bn) sub-block of C for the whole K loop;
+  * the FMOPA outer-product chain -> one rank-``bk`` MXU update per K grid
+    step, ``acc += A[bm,bk] @ B[bk,bn]`` (a systolic array consumes a
+    K-panel; bk plays the role the 4-deep FMOPA tile rotation plays on SME:
+    it hides the unit's accumulation latency);
+  * predicate registers P0/P1      -> trace-time-specialized ``jnp.where``
+    masks on the K tail (only emitted when ``K % bk != 0`` — the JIT
+    "hardwires" the mask exactly like LIBXSMM hardwires loop trip counts);
+  * the two-step load path         -> the Pallas grid pipeline, which stages
+    HBM blocks into VMEM with double buffering;
+  * transposed-B handling (§IV-C)  -> the "nt" variant contracts against
+    B's minor dimension in-register (fused transpose); the two-pass
+    scratch-panel variant lives in ``repro.kernels.transpose``.
+
+The kernel is *generated*: ``build_gemm_kernel`` closes over all static
+metadata (block shapes, layout, masking, epilogue) so each distinct
+descriptor produces a distinct specialized kernel, cached by
+``repro.core.jit_cache``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _apply_epilogue(x, epilogue: Optional[str], bias_blk):
+    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+        x = x + bias_blk.astype(x.dtype)
+    if epilogue in ("gelu", "bias_gelu"):
+        x = jax.nn.gelu(x)
+    elif epilogue in ("silu", "bias_silu"):
+        x = jax.nn.silu(x)
+    elif epilogue == "relu":
+        x = jnp.maximum(x, 0)
+    return x
+
+
+def _gemm_kernel_body(*refs, layout, k_steps, k_rem, bk, epilogue,
+                      accumulate, out_dtype):
+    """Kernel body. refs: a, b, [bias], [c_in], out, acc_scratch."""
+    idx = 0
+    a_ref = refs[idx]; idx += 1
+    b_ref = refs[idx]; idx += 1
+    bias_ref = None
+    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+        bias_ref = refs[idx]; idx += 1
+    c_ref = None
+    if accumulate:
+        c_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    acc_ref = refs[idx]
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        if accumulate:
+            acc_ref[...] = c_ref[...].astype(jnp.float32)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+
+    if k_rem:  # K tail masking — the predicate-register analogue (§IV-B).
+        # Only the final K step is partial; `where` (not multiply) because
+        # out-of-bounds pads may be NaN.
+        kk = jax.lax.broadcasted_iota(jnp.int32, a.shape, dimension=1)
+        valid = jnp.where(k == k_steps - 1, k_rem, bk)
+        a = jnp.where(kk < valid, a, 0)
+        if layout == "nn":
+            kkb = jax.lax.broadcasted_iota(jnp.int32, b.shape, dimension=0)
+        else:
+            kkb = jax.lax.broadcasted_iota(jnp.int32, b.shape, dimension=1)
+        b = jnp.where(kkb < valid, b, 0)
+
+    if layout == "nn":
+        dn = (((1,), (0,)), ((), ()))
+    else:  # nt: B block is (bn, bk); contract minor dims (fused transpose)
+        dn = (((1,), (1,)), ((), ()))
+    acc_ref[...] += jax.lax.dot_general(a, b, dn,
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        out = acc_ref[...]
+        bias_blk = bias_ref[...] if bias_ref is not None else None
+        out = _apply_epilogue(out, epilogue, bias_blk)
+        o_ref[...] = out.astype(out_dtype)
+
+
+def build_gemm_kernel(*, m: int, n: int, k: int, bm: int, bn: int, bk: int,
+                      layout: str = "nn", epilogue: Optional[str] = None,
+                      accumulate: bool = False, in_dtype=jnp.float32,
+                      out_dtype=jnp.float32, interpret: bool = True):
+    """Generate the shape-specialized pallas_call for one GEMM region.
+
+    Returns a function ``f(a, b, [bias], [c_in]) -> out`` of exact shapes
+    ``a:(m,k)``, ``b:(k,n)|(n,k)``, ``out:(m,n)``.  All metadata is
+    hardwired at build time (the LIBXSMM JIT analogue).
+    """
+    grid_m, grid_n, grid_k = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
+    k_rem = k % bk
+
+    body = functools.partial(
+        _gemm_kernel_body, layout=layout, k_steps=grid_k, k_rem=k_rem,
+        bk=bk, epilogue=epilogue, accumulate=accumulate,
+        out_dtype=jnp.dtype(out_dtype))
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)) if layout == "nn"
+        else pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+    ]
+    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if accumulate:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+
+    kernel = pl.pallas_call(
+        body,
+        grid=(grid_m, grid_n, grid_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+
+    def run(a, b, bias=None, c_in=None):
+        args = [a, b]
+        if epilogue in ("bias", "bias_gelu", "bias_silu"):
+            assert bias is not None
+            args.append(bias.reshape(1, n))
+        if accumulate:
+            assert c_in is not None
+            args.append(c_in)
+        return kernel(*args)
+
+    return run

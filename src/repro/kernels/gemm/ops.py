@@ -1,0 +1,121 @@
+"""Public jit'd wrapper for the blocked GEMM kernel.
+
+Executes a :class:`repro.core.blocking.BlockingPlan`: each plan region
+becomes one shape-specialized ``pallas_call`` (the paper's "seven
+microkernel executions", Fig 7), whose outputs are assembled into C with
+``dynamic_update_slice`` — under ``jit`` XLA fuses the assembly.
+
+Edge strategies (benchmarked against each other in fig45_alignment):
+
+  * ``mask`` — exact-shape kernels; Pallas clips partial output blocks and
+    the kernel masks the K tail (the SME predication analogue);
+  * ``pad``  — operands zero-padded to block multiples outside the kernel
+    (the copy-based strategy the paper's predication avoids).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockingPlan, plan_gemm, round_up
+from repro.core.descriptor import GemmDescriptor
+from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.kernels.gemm.kernel import build_gemm_kernel
+
+
+def _region_executor(desc: GemmDescriptor, region, bk: int, edge: str,
+                     interpret: bool):
+    """Build (and cache) the kernel for one plan region."""
+    rows, cols, k = region.rows, region.cols, desc.k
+    bm, bn = region.bm, region.bn
+    if edge == "pad":
+        rows_p, cols_p, k_p = round_up(rows, bm), round_up(cols, bn), round_up(k, bk)
+    else:
+        rows_p, cols_p, k_p = rows, cols, k
+    key = ("gemm", rows_p, cols_p, k_p, bm, bn, bk, desc.layout, desc.epilogue,
+           desc.accumulate, desc.in_dtype, desc.out_dtype, edge, interpret)
+
+    def builder():
+        return build_gemm_kernel(
+            m=rows_p, n=cols_p, k=k_p, bm=bm, bn=bn, bk=min(bk, round_up(k_p, 128)),
+            layout=desc.layout, epilogue=desc.epilogue,
+            accumulate=desc.accumulate,
+            in_dtype=jnp.dtype(desc.in_dtype), out_dtype=jnp.dtype(desc.out_dtype),
+            interpret=interpret)
+
+    kernel = GLOBAL_KERNEL_CACHE.get_or_build(key, builder)
+
+    def run(a_r, b_r, bias_r, c_r):
+        if edge == "pad":
+            a_r = jnp.pad(a_r, ((0, rows_p - rows), (0, k_p - k)))
+            if desc.layout == "nn":
+                b_r = jnp.pad(b_r, ((0, k_p - k), (0, cols_p - cols)))
+            else:
+                b_r = jnp.pad(b_r, ((0, cols_p - cols), (0, k_p - k)))
+            if bias_r is not None:
+                bias_r = jnp.pad(bias_r, ((0, cols_p - cols),))
+            if c_r is not None:
+                c_r = jnp.pad(c_r, ((0, rows_p - rows), (0, cols_p - cols)))
+        out = kernel(a_r, b_r, bias_r, c_r)
+        if edge == "pad" and (rows_p != rows or cols_p != cols):
+            out = out[:rows, :cols]
+        return out
+
+    return run
+
+
+def gemm_region(a, b, region, desc: GemmDescriptor, bk: int,
+                bias=None, c=None, edge: str = "mask", interpret: bool = True):
+    """Run one region's microkernel on the corresponding operand slices."""
+    r = region
+    a_r = jax.lax.dynamic_slice(a, (r.row0, 0), (r.rows, desc.k))
+    if desc.layout == "nn":
+        b_r = jax.lax.dynamic_slice(b, (0, r.col0), (desc.k, r.cols))
+    else:
+        b_r = jax.lax.dynamic_slice(b, (r.col0, 0), (r.cols, desc.k))
+    bias_r = None
+    if bias is not None:
+        bias_r = jax.lax.dynamic_slice(bias, (r.col0,), (r.cols,))
+    c_r = None
+    if c is not None:
+        c_r = jax.lax.dynamic_slice(c, (r.row0, r.col0), (r.rows, r.cols))
+    run = _region_executor(desc, r, bk, edge, interpret)
+    return run(a_r, b_r, bias_r, c_r)
+
+
+def _gemm2d(a, b, plan: BlockingPlan, bias, c, interpret: bool):
+    desc = plan.desc
+    if len(plan.regions) == 1 and plan.regions[0].rows == desc.m \
+            and plan.regions[0].cols == desc.n:
+        return gemm_region(a, b, plan.regions[0], desc, plan.bk,
+                           bias, c, desc.edge, interpret)
+    out = jnp.zeros((desc.m, desc.n), jnp.dtype(desc.out_dtype))
+    for r in plan.regions:
+        blk = gemm_region(a, b, r, desc, plan.bk, bias, c, desc.edge, interpret)
+        out = jax.lax.dynamic_update_slice(out, blk, (r.row0, r.col0))
+    return out
+
+
+def gemm(a, b, c: Optional[jax.Array] = None, *, layout: str = "nn",
+         epilogue: Optional[str] = None, bias: Optional[jax.Array] = None,
+         out_dtype=None, edge: str = "mask", plan: Optional[BlockingPlan] = None,
+         heterogeneous: bool = True, interpret: bool = True) -> jax.Array:
+    """Planned, shape-specialized (batched) GEMM.
+
+    ``a``: (..., M, K); ``b``: (..., K, N) for layout "nn" or (..., N, K)
+    for "nt"; optional ``c`` accumulator of shape (..., M, N).
+    """
+    desc = GemmDescriptor.from_operands(
+        a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
+        out_dtype=out_dtype or a.dtype, edge=edge)
+    if plan is None:
+        plan = plan_gemm(desc, heterogeneous=heterogeneous)
+    f = functools.partial(_gemm2d, plan=plan, interpret=interpret)
+    if desc.batch:
+        def batched(a_, b_, c_):
+            return f(a_, b_, bias=bias, c=c_)
+        return jax.vmap(batched, in_axes=(0, 0, 0 if c is not None else None))(a, b, c)
+    return f(a, b, bias=bias, c=c)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the blocked GEMM kernel.
+
+Semantics (shared with the Pallas kernel):
+
+    out = epilogue( C? + A @ op(B) )
+
+with fp32 accumulation regardless of input dtype (the widening-accumulate
+structure of SME's BFMOPA / the MXU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _epilogue(x, epilogue: Optional[str], bias):
+    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+        assert bias is not None
+        x = x + bias.astype(x.dtype)
+    if epilogue in ("gelu", "bias_gelu"):
+        x = jax.nn.gelu(x)
+    elif epilogue in ("silu", "bias_silu"):
+        x = jax.nn.silu(x)
+    elif epilogue == "relu":
+        x = jnp.maximum(x, 0)
+    return x
+
+
+def ref_gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None,
+             *, layout: str = "nn", epilogue: Optional[str] = None,
+             bias: Optional[jax.Array] = None,
+             out_dtype=None) -> jax.Array:
+    """Oracle: fp32-accumulated (batched) GEMM with optional epilogue."""
+    assert layout in ("nn", "nt")
+    contract_b = b.ndim - (2 if layout == "nn" else 1)
+    batch_dims = tuple(range(a.ndim - 2))
+    dn = (((a.ndim - 1,), (contract_b,)), (batch_dims, batch_dims))
+    acc = jax.lax.dot_general(a, b, dn, preferred_element_type=jnp.float32)
+    if c is not None:
+        acc = acc + c.astype(jnp.float32)
+    acc = _epilogue(acc, epilogue, bias)
+    return acc.astype(out_dtype or a.dtype)

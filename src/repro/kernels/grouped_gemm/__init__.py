@@ -1,0 +1,2 @@
+from repro.kernels.grouped_gemm.ops import grouped_gemm  # noqa: F401
+from repro.kernels.grouped_gemm.ref import ref_grouped_gemm  # noqa: F401

@@ -1,0 +1,112 @@
+"""Ragged grouped GEMM Pallas kernel (MoE expert compute).
+
+The quintessential "batch of small, odd GEMMs" from the paper, §IV-B: each
+expert's token group is a GEMM whose M dim is decided by the router at
+runtime.  MegaBlocks-style mapping onto a static grid:
+
+  * tokens arrive sorted by expert; each (bm)-row block belongs to exactly
+    one expert (groups are padded to bm multiples by the caller);
+  * the expert id of every row block rides in a *scalar-prefetch* operand
+    (SMEM), and the B BlockSpec's index_map reads it to pull the right
+    expert's weight tile — the LIBXSMM dispatch-by-descriptor analogue,
+    moved into the grid;
+  * row blocks past the total padded token count are skipped via
+    ``pl.when`` (no DMA, no MXU work — the masked-invocation analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _grouped_kernel(block_expert_ref, nrows_ref, x_ref, w_ref, o_ref,
+                    acc_ref, *, bm, bk, bn, k_steps, k_rem):
+    i = pl.program_id(0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    active = (i * bm) < nrows_ref[0]
+
+    @pl.when(active)
+    def _():
+        a = x_ref[...]
+        b = w_ref[...]
+        if k_rem:
+            kidx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+            valid = jnp.where(kk == k_steps - 1, k_rem, bk)
+            a = jnp.where(kidx < valid, a, 0)
+            kidx_b = jax.lax.broadcasted_iota(jnp.int32, b.shape, 0)
+            b = jnp.where(kidx_b < valid, b, 0)
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == k_steps - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def build_grouped_gemm_kernel(*, t_padded: int, k: int, n: int, num_experts: int,
+                              bm: int = 128, bk: int = 512, bn: int = 256,
+                              in_dtype=jnp.float32, out_dtype=jnp.float32,
+                              interpret: bool = True):
+    """Returns f(x:(Tp,K), w:(E,K,N), block_expert:(nb,), nrows:(1,)) -> (Tp,N)."""
+    bn = min(bn, n)
+    bk = min(bk, k)
+    grid_m = pl.cdiv(t_padded, bm)
+    grid_n = pl.cdiv(n, bn)
+    grid_k = pl.cdiv(k, bk)
+
+    body = functools.partial(_grouped_kernel, bm=bm, bk=bk, bn=bn,
+                             k_steps=grid_k, k_rem=k % bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_expert, nrows
+        grid=(grid_m, grid_n, grid_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, be, nr: (i, kk)),
+            # weight tile of the expert owning row-block i
+            pl.BlockSpec((1, bk, bn),
+                         lambda i, j, kk, be, nr: (be[i], kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, be, nr: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+
+    kernel = pl.pallas_call(
+        lambda be, nr, x, w, o, acc: body(be, nr, x, _squeeze_w(w), o, acc),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t_padded, n), out_dtype),
+        interpret=interpret,
+    )
+
+    def run(x, w, block_expert, nrows):
+        return kernel(block_expert, nrows, x, w)
+
+    return run
+
+
+class _SqueezedRef:
+    """View of a (1, bk, bn) weight block ref as (bk, bn)."""
+
+    def __init__(self, ref):
+        self._ref = ref
+
+    def __getitem__(self, idx):
+        if idx is Ellipsis:
+            return self._ref[0]
+        return self._ref[(0,) + tuple(idx)]
+
+    @property
+    def shape(self):
+        return self._ref.shape[1:]
+
+
+def _squeeze_w(ref):
+    return _SqueezedRef(ref)

@@ -1,0 +1,76 @@
+"""jit'd wrapper for the ragged grouped GEMM (MoE expert compute).
+
+Takes unsorted per-row expert assignments OR pre-sorted rows + group
+sizes.  Pads each group to the row-block multiple (bm), builds the
+block→expert map, and dispatches the scalar-prefetch kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.kernels.grouped_gemm.kernel import build_grouped_gemm_kernel
+
+
+def plan_groups(group_sizes: jax.Array, num_experts: int, bm: int,
+                t_padded: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Row offsets per group after padding each group to a bm multiple.
+
+    Returns (padded_offsets (E+1,), block_expert (nb,), nrows (1,)).
+    All shapes static; values dynamic (runtime router output).
+    """
+    sizes = group_sizes.astype(jnp.int32)
+    padded = ((sizes + bm - 1) // bm) * bm
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(padded)])
+    nb = t_padded // bm
+    block_row = jnp.arange(nb, dtype=jnp.int32) * bm
+    block_expert = jnp.clip(
+        jnp.searchsorted(offsets, block_row, side="right") - 1,
+        0, num_experts - 1).astype(jnp.int32)
+    nrows = offsets[-1:].astype(jnp.int32)
+    return offsets, block_expert, nrows
+
+
+def scatter_rows(x_sorted_by_group, group_sizes, offsets, bm, t_padded):
+    """Place each group's rows at its padded offset (zeros between)."""
+    t, kdim = x_sorted_by_group.shape
+    src_off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(group_sizes.astype(jnp.int32))])
+    row = jnp.arange(t, dtype=jnp.int32)
+    grp = jnp.clip(jnp.searchsorted(src_off, row, side="right") - 1,
+                   0, group_sizes.shape[0] - 1)
+    dest = offsets[grp] + (row - src_off[grp])
+    out = jnp.zeros((t_padded, kdim), x_sorted_by_group.dtype)
+    return out.at[dest].set(x_sorted_by_group), dest
+
+
+def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                 bm: int = 128, bk: int = 512, bn: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """Ragged grouped GEMM.
+
+    x: (T, K) rows sorted by group; w: (E, K, N); group_sizes: (E,)
+    (dynamic, sum <= T).  Returns (T, N): row i multiplied by its group's
+    weight; rows beyond sum(group_sizes) are zero.
+    """
+    t, kdim = x.shape
+    e, _, n = w.shape
+    t_padded = ((t + bm - 1) // bm) * bm + e * bm  # room for per-group pad
+    offsets, block_expert, nrows = plan_groups(group_sizes, e, bm, t_padded)
+    x_padded, dest = scatter_rows(x, group_sizes, offsets, bm, t_padded)
+
+    key = ("grouped_gemm", t_padded, kdim, n, e, bm, bk, bn,
+           str(x.dtype), interpret)
+    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
+        key, lambda: build_grouped_gemm_kernel(
+            t_padded=t_padded, k=kdim, n=n, num_experts=e, bm=bm, bk=bk,
+            bn=bn, in_dtype=x.dtype, out_dtype=x.dtype, interpret=interpret))
+    out_padded = kernel(x_padded, w, block_expert, nrows)
+    # gather back to the caller's (sorted, unpadded) row order; rows past
+    # sum(group_sizes) belong to no group -> zero (matches ref).
+    total = jnp.sum(group_sizes.astype(jnp.int32))
+    valid = (jnp.arange(t, dtype=jnp.int32) < total)[:, None]
+    return jnp.where(valid, out_padded[dest], 0).astype(x.dtype)

@@ -1,0 +1,29 @@
+"""Oracle for the ragged grouped GEMM (MoE expert compute).
+
+rows of ``x`` are sorted by group; ``group_sizes[e]`` rows belong to group
+``e`` and are multiplied by ``w[e]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array
+                     ) -> jax.Array:
+    """x: (T, K); w: (E, K, N); group_sizes: (E,) summing to <= T.
+
+    Rows past ``sum(group_sizes)`` produce zeros.
+    """
+    t, k = x.shape
+    e, _, n = w.shape
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(group_sizes.astype(jnp.int32))])
+    row = jnp.arange(t)
+    # expert of each row: searchsorted over offsets
+    expert = jnp.clip(jnp.searchsorted(offsets, row, side="right") - 1, 0, e - 1)
+    valid = row < offsets[-1]
+    w_rows = w[expert]  # (T, K, N) gather
+    out = jnp.einsum("tk,tkn->tn", x.astype(jnp.float32),
+                     w_rows.astype(jnp.float32))
+    return jnp.where(valid[:, None], out, 0.0).astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.ssd_chunk.ops import ssd_chunk_diag  # noqa: F401
+from repro.kernels.ssd_chunk.ref import ref_ssd_chunk_diag  # noqa: F401

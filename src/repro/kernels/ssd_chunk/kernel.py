@@ -1,0 +1,55 @@
+"""SSD intra-chunk Pallas kernel — the paper's small-GEMM ladder in its
+Mamba-2 habitat (arXiv:2405.21060 §6, "state-space duality").
+
+Each grid step processes one (batch x chunk x head) cell entirely in
+VMEM: two back-to-back small GEMMs — (Q,n)x(n,Q) then the decay-masked
+(Q,Q)x(Q,p) — with the (Q,Q) score tile as the ZA-style accumulator that
+never touches HBM.  Q, n, p are all in the 64-256 range: exactly the
+"small odd GEMM" population the paper's engine targets (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_body(c_ref, b_ref, l_ref, x_ref, o_ref, s_ref):
+    c = c_ref[0]          # (Q, n)
+    b = b_ref[0]          # (Q, n)
+    l = l_ref[0]          # (Q, Q) decay mask
+    x = x_ref[0]          # (Q, p)
+    # GEMM 1: scores = C · Bᵀ (contract the state dim; fused transpose)
+    s_ref[...] = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    # elementwise decay mask in-register (the predication analogue)
+    w = (s_ref[...] * l.astype(jnp.float32)).astype(x.dtype)
+    # GEMM 2: y = W · xdt
+    o_ref[0] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def build_ssd_chunk_kernel(*, groups: int, q: int, n: int, p: int,
+                           dtype=jnp.float32, interpret: bool = True):
+    """f(C:(G,Q,n), B:(G,Q,n), L:(G,Q,Q), xdt:(G,Q,p)) -> (G,Q,p)."""
+    return pl.pallas_call(
+        _ssd_chunk_body,
+        grid=(groups,),
+        in_specs=[
+            pl.BlockSpec((1, q, n), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, q, q), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, q, p), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((groups, q, p), dtype),
+        scratch_shapes=[pltpu.VMEM((q, q), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.kernels.ssd_chunk.kernel import build_ssd_chunk_kernel
+
+
+def ssd_chunk_diag(c_mat, b_mat, l_mat, xdt, *, interpret: bool = True):
+    """Batched intra-chunk SSD: (G,Q,n)x2, (G,Q,Q), (G,Q,p) -> (G,Q,p)."""
+    g, q, n = c_mat.shape
+    p = xdt.shape[-1]
+    key = ("ssd_chunk", g, q, n, p, str(xdt.dtype), interpret)
+    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
+        key, lambda: build_ssd_chunk_kernel(
+            groups=g, q=q, n=n, p=p, dtype=xdt.dtype, interpret=interpret))
+    return kernel(c_mat, b_mat, l_mat, xdt)

@@ -1,0 +1,17 @@
+"""Oracle for the SSD intra-chunk (diagonal-block) kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_ssd_chunk_diag(c_mat, b_mat, l_mat, xdt) -> jax.Array:
+    """y = (C·Bᵀ ∘ L) · xdt, batched over the leading dim.
+
+    c_mat/b_mat: (G, Q, n); l_mat: (G, Q, Q); xdt: (G, Q, p) -> (G, Q, p).
+    """
+    scores = jnp.einsum("gqn,gkn->gqk", c_mat, b_mat,
+                        preferred_element_type=jnp.float32)
+    w = scores * l_mat.astype(jnp.float32)
+    return jnp.einsum("gqk,gkp->gqp", w.astype(xdt.dtype), xdt,
+                      preferred_element_type=jnp.float32).astype(xdt.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.transpose.ops import transpose  # noqa: F401
+from repro.kernels.transpose.ref import ref_transpose  # noqa: F401

@@ -1,0 +1,50 @@
+"""Tile-transpose Pallas kernel — the ZA horizontal/vertical trick (Lst. 5).
+
+The paper transposes 16x16 blocks of B by writing vector registers into a
+ZA tile through its *horizontal* view and reading them back through the
+*vertical* view, staging the result in aligned scratch memory.  The TPU
+analogue: each grid step stages one (bt, bt) block in a VMEM scratch tile,
+transposes it in-register (Mosaic lowers ``.T`` of a VMEM tile to its
+native sublane/lane rotations — the horizontal/vertical-view analogue) and
+writes it to the mirrored block position ``(j, i)`` of the output.
+
+Used by the two-pass "panel transpose then NN-GEMM" path for ``C += A·B``
+with strided-contraction B (§IV-C), benchmarked against the fused
+in-kernel transpose in fig89.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _transpose_body(x_ref, o_ref, scratch_ref):
+    # Stage the tile through scratch (the ZA tile), then emit its transpose.
+    scratch_ref[...] = x_ref[...]
+    o_ref[...] = scratch_ref[...].T
+
+
+def build_transpose_kernel(rows: int, cols: int, bt_r: int = 256,
+                           bt_c: int = 256, dtype=jnp.float32,
+                           interpret: bool = True):
+    """Generate a (rows, cols) -> (cols, rows) transpose.
+
+    Block (bt_r, bt_c) is read at block-index (i, j) and written at (j, i);
+    partial edge blocks rely on Pallas store clipping (reads of the padded
+    region are garbage but land outside the clipped store).
+    """
+    grid = (pl.cdiv(rows, bt_r), pl.cdiv(cols, bt_c))
+    return pl.pallas_call(
+        _transpose_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt_r, bt_c), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bt_c, bt_r), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((cols, rows), dtype),
+        scratch_shapes=[pltpu.VMEM((bt_r, bt_c), dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )

@@ -1,0 +1,19 @@
+"""jit'd wrapper for the tile-transpose kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.kernels.transpose.kernel import build_transpose_kernel
+
+
+def transpose(x: jax.Array, *, bt: int = 256, interpret: bool = True) -> jax.Array:
+    """Blocked 2-D (or batched) transpose through VMEM scratch tiles."""
+    if x.ndim == 3:
+        return jax.vmap(lambda xx: transpose(xx, bt=bt, interpret=interpret))(x)
+    rows, cols = x.shape
+    key = ("transpose", rows, cols, bt, str(x.dtype), interpret)
+    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
+        key, lambda: build_transpose_kernel(rows, cols, bt, bt, x.dtype, interpret))
+    return kernel(x)

@@ -1,0 +1,7 @@
+"""Oracle for the tile-transpose kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def ref_transpose(x: jax.Array) -> jax.Array:
+    return jnp.swapaxes(x, -2, -1)

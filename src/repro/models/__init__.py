@@ -1,0 +1,10 @@
+"""Composable model substrate.
+
+All dense compute routes through ``repro.core.matmul`` — the paper's JIT
+GEMM engine is the matmul layer of every architecture.  Layers are plain
+``init(rng, cfg) -> params`` / ``apply(params, x, ...)`` function pairs
+operating on nested-dict pytrees; layer stacks are ``lax.scan`` over
+stacked parameters (compile-time O(1) in depth).
+"""
+from repro.models.lm import LanguageModel  # noqa: F401
+from repro.models.encdec import EncoderDecoderModel  # noqa: F401

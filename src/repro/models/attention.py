@@ -1,0 +1,260 @@
+"""Multi-head attention: GQA / MQA, RoPE, qk-norm, QKV-bias, logit softcap,
+local (sliding-window) attention, chunked long-context attention, and
+ring-buffer KV caches for decode.
+
+Layout: heads are kept *flattened* (b, s, h, hd) with K/V repeated to the
+full head count for GQA — the standard tensor-parallel formulation: the
+head dim shards on "model" when divisible; otherwise the score matrix
+shards over the query dim instead (context-parallel fallback, used by e.g.
+internvl2's 14-head backbone).  All projections route through
+``repro.core.matmul``.
+
+For sequences above ``Q_CHUNK`` the score matrix is never fully
+materialized: a ``lax.scan`` over query chunks attends against the full
+(or windowed) KV — linear activation memory in sequence length (the
+XLA-path analogue of the Pallas flash-attention kernel in
+``repro.kernels.flash_attention``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.rotary import apply_rope
+from repro.runtime.shardlib import current_mesh, shard_activation
+
+Q_CHUNK = 512
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (b, S, h_kv, hd)
+    v: jax.Array  # (b, S, h_kv, hd)
+    pos: jax.Array  # (b, S) absolute position of each slot, -1 = empty
+
+
+def init_kv_cache(batch, capacity, n_kv, head_dim, dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        pos=jnp.full((batch, capacity), -1, jnp.int32),
+    )
+
+
+def attention_init(rng, cfg, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rq, rk, rv, ro, rn = common.split_rngs(rng, 5)
+    p = {
+        "wq": common.linear_init(rq, d, hq * hd, bias=cfg.qkv_bias),
+        "wk": common.linear_init(rk, d, hkv * hd, bias=cfg.qkv_bias),
+        "wv": common.linear_init(rv, d, hkv * hd, bias=cfg.qkv_bias),
+        "wo": common.linear_init(ro, hq * hd, d, bias=False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.rmsnorm_init(hd)
+        p["k_norm"] = common.rmsnorm_init(hd)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _head_axes(n_heads: int):
+    """Sharding specs for (b, s|q, h, hd) and (b, h, q, k) tensors.
+
+    Heads shard on "model" when divisible; otherwise the query/sequence
+    dim takes the model axis (context-parallel fallback).
+    """
+    mesh = current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    heads_ok = msize <= 1 or n_heads % msize == 0
+    if heads_ok:
+        return (("pod", "data"), None, "model", None), \
+               (("pod", "data"), "model", None, None)
+    return (("pod", "data"), "model", None, None), \
+           (("pod", "data"), None, "model", None)
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def _repeat_kv(x, n_rep: int):
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+def _attend(q, k, v, mask, softcap: Optional[float], *,
+            kv_seq_sharded: bool = False):
+    """q: (b, sq, h, hd); k/v: (b, sk, h, hd); mask broadcast (b,h,sq,sk).
+
+    Inputs stay bf16 (fp32 *accumulation* via preferred_element_type —
+    upcasting the inputs would double every gather/buffer); scores/softmax
+    run in fp32.
+
+    ``kv_seq_sharded``: decode against a sequence-sharded KV cache (GQA
+    head counts that don't divide the model axis).  Scores stay sharded
+    over the KV-sequence dim; XLA turns the softmax/weighted-sum into
+    partial reductions + tiny all-reduces — SPMD FlashDecoding split-K —
+    instead of all-gathering the whole cache every step.
+    """
+    h = q.shape[2]
+    if kv_seq_sharded:
+        qspec = (("pod", "data"), None, None, None)
+        sspec = (("pod", "data"), None, None, "model")
+    else:
+        qspec, sspec = _head_axes(h)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = shard_activation(scores, sspec)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return shard_activation(out.astype(v.dtype), qspec)
+
+
+def _causal_mask(q_pos, k_pos, window: Optional[int]):
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    m &= (k_pos >= 0)[None, :]
+    return m[None, None]  # (1, 1, sq, sk)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attention_seq(q, k, v, q_pos, k_pos, window, softcap):
+    """Chunked causal attention, linear activation memory in sq."""
+    b, sq, h, hd = q.shape
+    if sq <= Q_CHUNK:
+        return _attend(q, k, v, _causal_mask(q_pos, k_pos, window), softcap)
+
+    assert sq % Q_CHUNK == 0, f"seq {sq} not divisible by q-chunk {Q_CHUNK}"
+    nc = sq // Q_CHUNK
+    qs = q.reshape(b, nc, Q_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nc, Q_CHUNK)
+
+    if window is not None and k.shape[1] > window + Q_CHUNK:
+        # Sliding window: each q chunk touches a static-size KV slice.
+        pad = ((0, 0), (window, 0), (0, 0), (0, 0))
+        kp_pad = jnp.pad(k_pos, (window, 0), constant_values=-1)
+        k_pad, v_pad = jnp.pad(k, pad), jnp.pad(v, pad)
+
+        def body(_, args):
+            qc, qpc, start = args
+            ks = jax.lax.dynamic_slice_in_dim(k_pad, start, window + Q_CHUNK, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v_pad, start, window + Q_CHUNK, 1)
+            kps = jax.lax.dynamic_slice_in_dim(kp_pad, start, window + Q_CHUNK, 0)
+            return None, _attend(qc, ks, vs, _causal_mask(qpc, kps, window),
+                                 softcap)
+
+        starts = jnp.arange(nc) * Q_CHUNK
+        # remat: without it the backward keeps every chunk's fp32 score
+        # matrix alive at once — the flash-attention memory argument.
+        _, out = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                              None, (qs, qp, starts))
+    else:
+        def body(_, args):
+            qc, qpc = args
+            return None, _attend(qc, k, v, _causal_mask(qpc, k_pos, window),
+                                 softcap)
+
+        _, out = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                              None, (qs, qp))
+
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Public apply
+# ---------------------------------------------------------------------------
+
+def attention_apply(params, cfg, x, positions, *, cache: Optional[KVCache] = None,
+                    window: Optional[int] = None, kv_override=None):
+    """Self-attention (or cross-attention when ``kv_override`` is given).
+
+    positions: (s,) absolute positions of the ``s`` tokens in ``x``.
+    Returns (y, new_cache).  With a cache and s==1 this is one decode step.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = hq // hkv
+    qspec, _ = _head_axes(hq)
+
+    q = _split_heads(common.linear(params["wq"], x, compute_dtype=dt), hq, hd)
+    kv_src = x if kv_override is None else kv_override
+    k = _split_heads(common.linear(params["wk"], kv_src, compute_dtype=dt), hkv, hd)
+    v = _split_heads(common.linear(params["wv"], kv_src, compute_dtype=dt), hkv, hd)
+
+    if cfg.qk_norm:
+        q = common.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = common.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    if cfg.rope:
+        q = apply_rope(q, positions[None, :], cfg.rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, positions[None, :], cfg.rope_theta)
+
+    q = shard_activation(q, qspec)
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        # Ring-buffer write: slot = pos % capacity (windowed caches stay
+        # O(window) even at 500k-token contexts).
+        cap = cache.k.shape[1]
+        slots = positions % cap  # (s,)
+        bidx = jnp.arange(b)[:, None]
+        k_new = cache.k.at[bidx, slots[None, :]].set(k.astype(cache.k.dtype))
+        v_new = cache.v.at[bidx, slots[None, :]].set(v.astype(cache.v.dtype))
+        pos_new = cache.pos.at[bidx, slots[None, :]].set(positions[None, :])
+        new_cache = KVCache(k_new, v_new, pos_new)
+        if s == 1:
+            # Decode: attend over the cache with per-slot positions.
+            mesh = current_mesh()
+            msize = mesh.shape.get("model", 1) if mesh is not None else 1
+            seq_sharded = msize > 1 and hkv % msize != 0 \
+                and cache.k.shape[1] % msize == 0
+            kf = _repeat_kv(new_cache.k.astype(dt), g)
+            vf = _repeat_kv(new_cache.v.astype(dt), g)
+            if seq_sharded:
+                kv_spec = (("pod", "data"), "model", None, None)
+                kf = shard_activation(kf, kv_spec)
+                vf = shard_activation(vf, kv_spec)
+            mask = (new_cache.pos[:, None, None, :] <= positions[0])
+            if window is not None:
+                mask &= new_cache.pos[:, None, None, :] > positions[0] - window
+            mask &= new_cache.pos[:, None, None, :] >= 0
+            out = _attend(q, kf, vf, mask, cfg.attn_logit_softcap,
+                          kv_seq_sharded=seq_sharded)
+        else:
+            out = _attention_seq(q, _repeat_kv(k, g), _repeat_kv(v, g),
+                                 positions, positions, window,
+                                 cfg.attn_logit_softcap)
+    elif kv_override is not None:
+        # Cross-attention: all encoder positions visible.
+        sk = k.shape[1]
+        mask = jnp.ones((1, 1, s, sk), bool)
+        out = _attend(q, _repeat_kv(k, g), _repeat_kv(v, g), mask,
+                      cfg.attn_logit_softcap)
+    else:
+        out = _attention_seq(q, _repeat_kv(k, g), _repeat_kv(v, g),
+                             positions, positions, window,
+                             cfg.attn_logit_softcap)
+
+    out = out.reshape(b, s, hq * hd)
+    y = common.linear(params["wo"], out, compute_dtype=dt)
+    return y, new_cache

@@ -1,0 +1,205 @@
+"""Residual blocks and layer stacks.
+
+A *block* = (norm → mixer → residual) [+ (norm → mlp|moe → residual)].
+Mixer kinds: "attn" (global attention), "local" (sliding-window attention),
+"rec" (RG-LRU), "ssm" (Mamba-2 SSD).  An architecture is a repeating
+``block_pattern`` (e.g. ("rec","rec","local") for recurrentgemma); the
+stack scans over pattern *groups* with stacked params so compile time is
+O(1) in depth, with any non-multiple remainder applied unscanned.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models import common
+from repro.models.attention import attention_apply, attention_init, init_kv_cache
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import init_recurrent_state, rglru_apply, rglru_init
+from repro.models.ssd import init_ssm_state, ssd_apply, ssd_init
+
+from repro.runtime.shardlib import shard_activation
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def block_init(rng, cfg, kind: str, cross: bool = False):
+    r_mix, r_ff, r_cross = common.split_rngs(rng, 3)
+    p: Dict[str, Any] = {"norm_mix": common.norm_init(cfg.norm_type, cfg.d_model)}
+    if kind in ("attn", "local"):
+        p["mixer"] = attention_init(r_mix, cfg)
+    elif kind == "rec":
+        p["mixer"] = rglru_init(r_mix, cfg)
+    elif kind == "ssm":
+        p["mixer"] = ssd_init(r_mix, cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    if cross:
+        p["norm_cross"] = common.norm_init(cfg.norm_type, cfg.d_model)
+        p["cross"] = attention_init(r_cross, cfg, cross=True)
+    if cfg.block_has_mlp:
+        p["norm_ff"] = common.norm_init(cfg.norm_type, cfg.d_model)
+        p["ff"] = moe_init(r_ff, cfg) if cfg.num_experts else mlp_init(r_ff, cfg)
+    return p
+
+
+def block_cache(batch, cfg, kind: str, capacity: int):
+    """Initial decode-state for one block (None for stateless train)."""
+    if kind == "attn":
+        return init_kv_cache(batch, capacity, cfg.num_kv_heads, cfg.head_dim,
+                             jnp.dtype(cfg.kv_cache_dtype))
+    if kind == "local":
+        cap = min(capacity, cfg.attn_window)
+        return init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim,
+                             jnp.dtype(cfg.kv_cache_dtype))
+    if kind == "rec":
+        return init_recurrent_state(batch, cfg)
+    if kind == "ssm":
+        return init_ssm_state(batch, cfg)
+    raise ValueError(kind)
+
+
+def block_apply(params, cfg, kind: str, x, positions, *, cache=None,
+                enc_out=None) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = common.norm_apply(cfg.norm_type, params["norm_mix"], x, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        window = cfg.attn_window if kind == "local" else None
+        y, new_cache = attention_apply(params["mixer"], cfg, h, positions,
+                                       cache=cache, window=window)
+    elif kind == "rec":
+        y, new_cache = rglru_apply(params["mixer"], cfg, h, state=cache)
+    elif kind == "ssm":
+        y, new_cache = ssd_apply(params["mixer"], cfg, h, state=cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    x = shard_activation(x, (("pod", "data"), "model", None))
+
+    if enc_out is not None and "cross" in params:
+        h = common.norm_apply(cfg.norm_type, params["norm_cross"], x, cfg.norm_eps)
+        y, _ = attention_apply(params["cross"], cfg, h, positions,
+                               kv_override=enc_out)
+        x = x + y
+
+    if cfg.block_has_mlp:
+        h = common.norm_apply(cfg.norm_type, params["norm_ff"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            y, aux = moe_apply(params["ff"], cfg, h)
+        else:
+            y = mlp_apply(params["ff"], cfg, h)
+        x = x + y
+        x = shard_activation(x, (("pod", "data"), "model", None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack: scan over pattern groups
+# ---------------------------------------------------------------------------
+
+def stack_layout(cfg) -> Tuple[int, Tuple[str, ...]]:
+    """(num_scanned_groups, remainder_kinds)."""
+    pat = cfg.block_pattern
+    groups = cfg.num_layers // len(pat)
+    rem = cfg.num_layers - groups * len(pat)
+    return groups, tuple(pat[:rem])
+
+
+def stack_init(rng, cfg, cross: bool = False):
+    pat = cfg.block_pattern
+    groups, rem = stack_layout(cfg)
+    r_groups, r_rem = jax.random.split(rng)
+
+    def one_group(r):
+        rs = common.split_rngs(r, len(pat))
+        return {f"b{i}": block_init(rs[i], cfg, kind, cross)
+                for i, kind in enumerate(pat)}
+
+    stacked = jax.vmap(one_group)(jax.random.split(r_groups, groups)) \
+        if groups else None
+    rem_params = [block_init(r, cfg, kind, cross)
+                  for r, kind in zip(common.split_rngs(r_rem, max(1, len(rem))), rem)]
+    return {"groups": stacked, "rem": rem_params}
+
+
+def stack_cache(batch, cfg, capacity: int):
+    pat = cfg.block_pattern
+    groups, rem = stack_layout(cfg)
+
+    def one_group(_):
+        return {f"b{i}": block_cache(batch, cfg, kind, capacity)
+                for i, kind in enumerate(pat)}
+
+    stacked = None
+    if groups:
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one_group(g) for g in range(groups)]) \
+            if groups > 1 else jax.tree.map(lambda x: x[None], one_group(0))
+    rem_caches = [block_cache(batch, cfg, kind, capacity) for kind in rem]
+    return {"groups": stacked, "rem": rem_caches}
+
+
+def _group_apply(group_params, cfg, x, positions, group_cache, enc_out):
+    pat = cfg.block_pattern
+    new_cache = {} if group_cache is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(pat):
+        c = group_cache[f"b{i}"] if group_cache is not None else None
+        x, nc, a = block_apply(group_params[f"b{i}"], cfg, kind, x, positions,
+                               cache=c, enc_out=enc_out)
+        aux = aux + a
+        if new_cache is not None:
+            new_cache[f"b{i}"] = nc
+    return x, new_cache, aux
+
+
+def stack_apply(params, cfg, x, positions, *, cache=None, enc_out=None):
+    """Returns (x, new_cache, aux_loss_sum)."""
+    groups, rem = stack_layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_group_cache = None
+
+    if groups:
+        def body(carry, xs):
+            h, aux = carry
+            if cache is not None:
+                gp, gc = xs
+            else:
+                gp, gc = xs, None
+            # Name the (bf16) carry so the remat policy saves exactly this
+            # tensor per layer group — without the name, XLA is free to
+            # save an fp32-converted copy of the whole stack (observed:
+            # +3.8 GiB/device on starcoder2, EXPERIMENTS.md §Perf).
+            h = checkpoint_name(h, "block_carry")
+            h, nc, a = _group_apply(gp, cfg, h, positions, gc, enc_out)
+            return (h, aux + a), nc
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "block_carry"),
+                prevent_cse=False)
+        xs = (params["groups"], cache["groups"]) if cache is not None \
+            else params["groups"]
+        (x, aux_total), new_group_cache = jax.lax.scan(body, (x, aux_total), xs)
+
+    new_rem = []
+    for i, kind in enumerate(rem):
+        c = cache["rem"][i] if cache is not None else None
+        x, nc, a = block_apply(params["rem"][i], cfg, kind, x, positions,
+                               cache=c, enc_out=enc_out)
+        aux_total = aux_total + a
+        new_rem.append(nc)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"groups": new_group_cache, "rem": new_rem}
+    return x, new_cache, aux_total

@@ -1,0 +1,123 @@
+"""Shared layer primitives: norms, embeddings, initializers, dtype policy."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matmul
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(rng, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(rng, shape, dtype)
+
+
+def scaled_init(rng, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(rng, shape, dtype) / jnp.sqrt(jnp.asarray(fan_in, dtype))
+
+
+def split_rngs(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# Dtype policy: params stored fp32 (optimizer-friendly), compute in
+# cfg.dtype (bf16 default).  The cast happens at point of use so FSDP
+# all-gathers move bf16 bytes, not fp32 (see DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+def cast_param(p, dtype):
+    if p.dtype == jnp.dtype(dtype) or not jnp.issubdtype(p.dtype, jnp.floating):
+        return p
+    return p.astype(dtype)
+
+
+def tree_cast(params, dtype):
+    return jax.tree.map(lambda p: cast_param(p, dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# Linear (routes through the paper's engine)
+# ---------------------------------------------------------------------------
+
+def linear_init(rng, d_in, d_out, bias=False, dtype=jnp.float32):
+    p = {"w": scaled_init(rng, (d_in, d_out), d_in, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params, x, *, epilogue: Optional[str] = None, compute_dtype=None):
+    """y = x @ W (+ b) with optional fused activation epilogue."""
+    w = params["w"]
+    if compute_dtype is not None:
+        w = cast_param(w, compute_dtype)
+        x = x.astype(compute_dtype)
+    b = params.get("b")
+    if b is not None and compute_dtype is not None:
+        b = cast_param(b, compute_dtype)
+    if b is not None:
+        epi = {"gelu": "bias_gelu", "silu": "bias_silu", None: "bias"}.get(epilogue, epilogue)
+        return matmul(x, w, epilogue=epi, bias=b)
+    return matmul(x, w, epilogue=epilogue)
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 compute regardless of activation dtype)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_init(kind: str, d, dtype=jnp.float32):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, params, x, eps):
+    return rmsnorm(params, x, eps) if kind == "rmsnorm" else layernorm(params, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(rng, vocab, d, dtype=jnp.float32):
+    return {"table": normal_init(rng, (vocab, d), 0.02, dtype)}
+
+
+def embed(params, ids, compute_dtype):
+    return cast_param(params["table"], compute_dtype)[ids]
+
+
+def unembed(params, x, compute_dtype, out_dtype=jnp.float32):
+    """Tied read-out: logits = x @ tableᵀ (an NT-layout GEMM, §IV-C)."""
+    table = cast_param(params["table"], compute_dtype)
+    return matmul(x, table, layout="nt", out_dtype=out_dtype)

@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (per assignment: the transformer backbone is
+real; vision/audio feature extractors provide *precomputed* embeddings).
+
+  * vision (internvl2): ``input_specs`` supplies ViT patch embeddings
+    (b, n_img, vit_dim); a learned MLP projector maps them into the LM
+    width and they are prepended to the token embeddings.
+  * audio (seamless): ``input_specs`` supplies fbank frame embeddings
+    (b, s_enc, frame_dim); a learned adapter maps them into the encoder
+    width.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def frontend_init(rng, cfg):
+    if cfg.modality is None:
+        return None
+    r1, r2 = common.split_rngs(rng, 2)
+    if cfg.modality == "vision":
+        return {
+            "proj1": common.linear_init(r1, cfg.modality_dim, cfg.d_model, bias=True),
+            "proj2": common.linear_init(r2, cfg.d_model, cfg.d_model, bias=True),
+        }
+    if cfg.modality == "audio":
+        return {"adapter": common.linear_init(r1, cfg.modality_dim, cfg.d_model, bias=True)}
+    raise ValueError(cfg.modality)
+
+
+def frontend_apply(params, cfg, feats):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.modality == "vision":
+        h = common.linear(params["proj1"], feats.astype(dt),
+                          epilogue="gelu", compute_dtype=dt)
+        return common.linear(params["proj2"], h, compute_dtype=dt)
+    if cfg.modality == "audio":
+        return common.linear(params["adapter"], feats.astype(dt), compute_dtype=dt)
+    raise ValueError(cfg.modality)

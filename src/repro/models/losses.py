@@ -1,0 +1,66 @@
+"""Losses: next-token cross-entropy with z-loss, memory-optimal backward.
+
+Forward reductions run in fp32 over the (possibly sharded) vocab dim; the
+custom VJP emits the d(logits) cotangent directly in the logits dtype
+(bf16 in production) — the default autodiff path materializes 2-3
+logits-sized fp32 buffers, which at a 256k vocab is ~6 GiB/device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def _nll_and_lse(logits, labels):
+    """Returns (nll, lse) per position; logits (..., V), labels (...)."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    gold = jnp.take_along_axis(l32, labels[..., None], axis=-1)[..., 0]
+    return lse - gold, lse
+
+
+def _nll_fwd(logits, labels):
+    out = _nll_and_lse(logits, labels)
+    return out, (logits, labels, out[1])
+
+
+def _nll_bwd(res, g):
+    logits, labels, lse = res
+    g_nll, g_lse = g
+    # softmax recomputed from the saved (tiny) lse; everything fuses —
+    # the only logits-sized buffer is the bf16 cotangent itself.  The
+    # label indicator is a fused iota-compare (a materialized fp32
+    # one_hot + s32 iota costs ~4.5 GiB at a 256k vocab).
+    p = jnp.exp(logits.astype(jnp.float32) - lse[..., None])
+    is_gold = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1) == labels[..., None]
+    coeff = (g_nll + g_lse)[..., None]
+    dlogits = coeff * p - jnp.where(is_gold, g_nll[..., None], 0.0)
+    return dlogits.astype(logits.dtype), None
+
+
+_nll_and_lse.defvjp(_nll_fwd, _nll_bwd)
+
+
+def softmax_cross_entropy(logits, labels, *, z_loss: float = 0.0,
+                          mask=None):
+    """logits: (..., V); labels: (...) int.  Returns (loss, metrics)."""
+    nll, lse = _nll_and_lse(logits, labels)
+    total = nll
+    if z_loss:
+        total = total + z_loss * jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(total * mask) / denom
+        nll_mean = jnp.sum(nll * mask) / denom
+    else:
+        loss = jnp.mean(total)
+        nll_mean = jnp.mean(nll)
+    metrics = {
+        "nll": nll_mean,
+        "ppl_proxy": jnp.exp(jnp.clip(nll_mean, 0.0, 20.0)),
+    }
+    return loss, metrics

@@ -1,0 +1,35 @@
+"""Dense MLP blocks: gated (SwiGLU/GeGLU) and classic 2-layer.
+
+The gated path issues two column-parallel GEMMs with a fused activation
+epilogue — on the Pallas backend the activation runs inside the kernel's
+store phase (§IV epilogue fusion); on the XLA backend it fuses identically.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def mlp_init(rng, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    r1, r2, r3 = common.split_rngs(rng, 3)
+    p = {"w_down": common.linear_init(r2, f, d, bias=cfg.mlp_bias)}
+    if cfg.mlp_gated:
+        p["w_gate"] = common.linear_init(r1, d, f, bias=cfg.mlp_bias)
+        p["w_up"] = common.linear_init(r3, d, f, bias=cfg.mlp_bias)
+    else:
+        p["w_up"] = common.linear_init(r1, d, f, bias=cfg.mlp_bias)
+    return p
+
+
+def mlp_apply(params, cfg, x):
+    dt = jnp.dtype(cfg.dtype)
+    act = cfg.mlp_act  # "silu" | "gelu" | "relu"
+    if cfg.mlp_gated:
+        gate = common.linear(params["w_gate"], x, epilogue=act, compute_dtype=dt)
+        up = common.linear(params["w_up"], x, compute_dtype=dt)
+        h = gate * up
+    else:
+        h = common.linear(params["w_up"], x, epilogue=act, compute_dtype=dt)
+    return common.linear(params["w_down"], h, compute_dtype=dt)

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts with top-k routing (GShard/T5X-style grouped dispatch).
+
+The expert FFNs are batches of *small, ragged* GEMMs — exactly the
+population the paper's engine targets; on TPU hardware the expert compute
+routes through ``repro.kernels.grouped_gemm`` (see kernels/).  The
+dispatch/combine here uses the capacity-factor one-hot formulation (dense
+einsums) because it partitions deterministically under SPMD: tokens are
+processed in groups of ``cfg.moe_group`` so dispatch stays O(g·E·C) per
+group instead of O(T·E·C).
+
+Routing priority is k-major (all top-1 assignments beat any top-2), the
+T5X convention.  Dropped tokens pass through the residual stream only.
+Returns the GShard auxiliary load-balancing loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+_MAX_BATCH_SHARDS = 32  # pod x data on the largest production mesh
+
+
+def moe_init(rng, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    rr, rg, ru, rd = common.split_rngs(rng, 4)
+    p = {
+        "router": common.linear_init(rr, d, e, bias=False),
+        # Experts stacked on a leading E dim.
+        "w_up": {"w": common.scaled_init(ru, (e, d, f), d)},
+        "w_down": {"w": common.scaled_init(rd, (e, f, d), f)},
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = {"w": common.scaled_init(rg, (e, d, f), d)}
+    return p
+
+
+def _act(x, kind):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": lambda v: jnp.maximum(v, 0)}[kind](x)
+
+
+def moe_apply(params, cfg, x):
+    """x: (b, s, d) -> (y, aux_loss)."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    # Keep >= MAX_BATCH_SHARDS groups so the group dim stays batch-sharded
+    # on the production mesh even at decode shapes (t small).
+    g = min(cfg.moe_group, max(1, t // _MAX_BATCH_SHARDS))
+    while t % g:
+        g -= 1
+    n = t // g
+    cap = int(cfg.capacity_factor * g * k / e)
+    cap = max(8, -(-cap // 8) * 8)
+
+    from repro.runtime.shardlib import current_mesh, shard_activation
+    mesh = current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    ep = msize > 1 and e % msize == 0  # expert parallelism when E divides
+
+    xg = x.reshape(n, g, d).astype(dt)
+    xg = shard_activation(xg, (("pod", "data"), None, None))
+
+    # --- routing (fp32) ---------------------------------------------------
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (n, g, e)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (n, g, k)
+    if cfg.moe_renormalize:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # GShard aux loss.
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux_loss = e * jnp.sum(me * ce)
+
+    # --- capacity assignment (k-major priority) ----------------------------
+    mask = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (n, g, k, e)
+    mask_flat = mask.transpose(0, 2, 1, 3).reshape(n, k * g, e)
+    pos_flat = jnp.cumsum(mask_flat, axis=1) - 1.0
+    pos = pos_flat.reshape(n, k, g, e).transpose(0, 2, 1, 3)  # (n, g, k, e)
+    keep = mask * (pos < cap)  # (n, g, k, e)
+    slot = jnp.sum(pos * keep, axis=-1).astype(jnp.int32)  # (n, g, k)
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * \
+        jnp.sum(keep, axis=-1, keepdims=True)  # (n, g, k, cap)
+
+    dispatch = jnp.einsum("ngke,ngkc->ngec", keep, slot_oh).astype(dt)
+    combine = jnp.einsum("ngke,ngkc->ngec", keep * gate_vals[..., None],
+                         slot_oh).astype(dt)
+
+    # Two SPMD layouts (DESIGN.md §5):
+    #   * EP  (E % model == 0, e.g. phi3.5-moe): experts live on "model";
+    #     dispatch produces e-sharded slot buffers — an all-to-all moves
+    #     tokens to their experts, weights never move.
+    #   * TP-f fallback (grok-1: E=8 < 16): tokens stay data-sharded, the
+    #     expert FFN dim f is model-sharded (Megatron inside each expert).
+    bd = ("pod", "data")
+    if ep:
+        dispatch = shard_activation(dispatch, (bd, None, "model", None))
+        combine = shard_activation(combine, (bd, None, "model", None))
+        xin_spec = (bd, "model", None, None)
+        h_spec = (bd, "model", None, None)
+    elif t <= 2048:
+        # Decode-scale token counts: replicate the (tiny) token block so
+        # the 2D-sharded expert weights never move — XLA partial-contracts
+        # the data-sharded d dim and all-reduces the small activations
+        # instead of all-gathering GBs of weights per step.
+        xin_spec = (None, None, None, None)
+        h_spec = (None, None, None, "model")
+    else:
+        xin_spec = (bd, None, None, None)
+        h_spec = (bd, None, None, "model")
+
+    # --- expert compute (batched small GEMMs over the E dim) --------------
+    xin = jnp.einsum("ngec,ngd->necd", dispatch, xg)  # (n, e, cap, d)
+    xin = shard_activation(xin, xin_spec)
+    w_up = common.cast_param(params["w_up"]["w"], dt)
+    w_down = common.cast_param(params["w_down"]["w"], dt)
+    up = shard_activation(jnp.einsum("necd,edf->necf", xin, w_up), h_spec)
+    if cfg.mlp_gated:
+        w_gate = common.cast_param(params["w_gate"]["w"], dt)
+        gate = _act(shard_activation(jnp.einsum("necd,edf->necf", xin, w_gate),
+                                     h_spec), cfg.mlp_act)
+        h = gate * up
+    else:
+        h = _act(up, cfg.mlp_act)
+    y_slots = jnp.einsum("necf,efd->necd", h, w_down)
+    y_slots = shard_activation(y_slots, xin_spec)
+    y = jnp.einsum("ngec,necd->ngd", combine, y_slots)
+    return y.reshape(b, s, d), aux_loss

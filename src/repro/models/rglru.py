@@ -1,0 +1,133 @@
+"""Real-Gated Linear Recurrent Unit (RG-LRU) block from Griffin
+(arXiv:2402.19427), used by recurrentgemma.
+
+Block structure (one "recurrent block"):
+
+    x ─ linear_y ─ gelu ──────────────────┐
+    x ─ linear_x ─ conv1d(4) ─ RG-LRU ─ ⊙ ┴─ linear_out
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    a_t = a^(c·r_t),  a = σ(Λ)      (c = 8)
+    h_t = a_t · h_{t-1} + √(1 − a_t²) · (i_t ⊙ x_t)
+
+Training/prefill uses ``lax.associative_scan`` (log-depth); decode is a
+single fused step on the carried state.  The state is O(width) — this is
+what makes recurrentgemma a legal ``long_500k`` architecture.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.runtime.shardlib import shard_activation
+
+_C = 8.0
+_MIN_LOG = -8.0
+
+
+class RecurrentState(NamedTuple):
+    h: jax.Array  # (b, width) fp32 recurrent state
+    conv: jax.Array  # (b, conv_width - 1, width) conv tail
+
+
+def rglru_init(rng, cfg):
+    d, w = cfg.d_model, cfg.rglru_width
+    ry, rx, ro, ra, rg, rc = common.split_rngs(rng, 6)
+    # Λ init so that a = σ(Λ)^c is in ~[0.9, 0.999] (Griffin appendix).
+    u = jax.random.uniform(ra, (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(u ** (1.0 / _C) / (1 - u ** (1.0 / _C)))
+    return {
+        "lin_y": common.linear_init(ry, d, w, bias=True),
+        "lin_x": common.linear_init(rx, d, w, bias=True),
+        "lin_out": common.linear_init(ro, w, d, bias=True),
+        "conv_w": common.normal_init(rc, (cfg.conv1d_width, w), 0.02),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "gate_a": common.linear_init(ra, w, w, bias=True),
+        "gate_x": common.linear_init(rg, w, w, bias=True),
+        "lambda": lam,
+    }
+
+
+def _causal_conv1d(x, w, b, tail: Optional[jax.Array]):
+    """Depthwise causal conv. x: (b, s, w); w: (cw, w); tail: (b, cw-1, w)."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw))
+    new_tail = xp[:, -(cw - 1):] if cw > 1 else tail
+    return out + b.astype(x.dtype), new_tail
+
+
+def _rglru_scan(xs, a_log_t, h0):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over time axis 1.
+
+    xs/b: (b, s, w) fp32; a_log_t: log(a_t) (for numerics); h0: (b, w).
+    """
+    a_t = jnp.exp(a_log_t)
+    b_t = xs
+    if h0 is not None:
+        b_t = b_t.at[:, 0].add(a_t[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+    return h
+
+
+def rglru_apply(params, cfg, x, *, state: Optional[RecurrentState] = None):
+    """x: (b, s, d) -> (y, new_state)."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    y_branch = common.linear(params["lin_y"], x, epilogue="gelu", compute_dtype=dt)
+    xb = common.linear(params["lin_x"], x, compute_dtype=dt)
+    # Width-parallel region: the recurrence is elementwise over the LRU
+    # width, so post-gate activations shard on "model" along w (and the
+    # time scan stays shard-local — no cross-device permute chains).  xb
+    # itself stays width-full: the gate projections contract over w.
+    wspec = (("pod", "data"), None, "model")
+    y_branch = shard_activation(y_branch, wspec)
+
+    tail = state.conv if state is not None else None
+    xb, new_tail = _causal_conv1d(xb, params["conv_w"], params["conv_b"], tail)
+
+    # Gate projections contract the full width (like attention qkv), so
+    # their INPUT stays bf16 (an fp32 xb here forces fp32 full-width
+    # gathers: +0.5 GiB x hundreds of buffers on recurrentgemma-9b); only
+    # the width-sharded gate outputs are upcast for the recurrence math.
+    r = jax.nn.sigmoid(common.linear(params["gate_a"], xb,
+                                     compute_dtype=dt).astype(jnp.float32))
+    i = jax.nn.sigmoid(common.linear(params["gate_x"], xb,
+                                     compute_dtype=dt).astype(jnp.float32))
+    r = shard_activation(r, wspec)
+    i = shard_activation(i, wspec)
+    log_a1 = -jax.nn.softplus(-params["lambda"])  # log σ(Λ)
+    log_at = jnp.maximum(_C * r * log_a1[None, None, :], _MIN_LOG)
+    gated = i * xb.astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12))
+    bt = shard_activation(mult * gated, wspec)
+
+    h0 = state.h if state is not None else None
+    if s == 1 and h0 is not None:
+        h = (jnp.exp(log_at[:, 0]) * h0 + bt[:, 0])[:, None]
+    else:
+        h = _rglru_scan(bt, log_at, h0)
+
+    new_state = RecurrentState(h=h[:, -1].astype(jnp.float32), conv=new_tail)
+    out = (h.astype(dt) * y_branch)
+    return common.linear(params["lin_out"], out, compute_dtype=dt), new_state
+
+
+def init_recurrent_state(batch, cfg) -> RecurrentState:
+    return RecurrentState(
+        h=jnp.zeros((batch, cfg.rglru_width), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, cfg.rglru_width), jnp.bfloat16),
+    )

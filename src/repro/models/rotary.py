@@ -1,0 +1,25 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., s, h, hd); positions: broadcastable to (..., s).
+
+    Angles in fp32; the rotation multiplies stay in ``x.dtype`` so no
+    activation-sized fp32 buffers materialize (sin/cos precision is what
+    matters; the product rounds to bf16 anyway).
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., s, hd/2)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw, scalable_adamw  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compression import error_feedback_compress, compressed_psum  # noqa: F401

@@ -1,0 +1,86 @@
+"""Gradient compression for cross-pod (DCN) reduction.
+
+Two pieces:
+
+  * :func:`error_feedback_compress` — int8 block-quantization with error
+    feedback (the residual of each quantization step is carried into the
+    next step), applied to gradients before the cross-pod reduction.
+    Error feedback keeps SGD/Adam convergence (Karimireddy et al. 2019)
+    while cutting DCN bytes 4x vs fp32 / 2x vs bf16.
+
+  * :func:`compressed_psum` — a shard_map-level all-reduce that quantizes
+    per-shard partials to int8, reduces, and dequantizes.  On the
+    production mesh this is applied to the "pod" axis only — ICI
+    reductions stay full-precision; the slow DCN hop carries int8.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_BLOCK = 256
+
+
+def _quantize_int8(x32: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-block int8 quantization over the trailing axis."""
+    flat = x32.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale, shape):
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    return deq[:_numel(shape)].reshape(shape)
+
+
+def _numel(shape):
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def error_feedback_compress(grads, residual):
+    """Quantize grads to int8 (simulated wire format) with error feedback.
+
+    Returns (dequantized grads actually applied, new residual).  The
+    returned grads are exactly what the receiving end of a compressed
+    all-reduce would see; the residual carries this step's quantization
+    error into the next step.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + (r.astype(jnp.float32) if r is not None else 0.0)
+        q, scale = _quantize_int8(g32)
+        deq = _dequantize_int8(q, scale, g32.shape)
+        return deq, (g32 - deq)
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    out = jax.tree.map(one, grads, residual)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_r = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_r
+
+
+def compressed_psum(x: jax.Array, axis_name: str):
+    """int8-compressed all-reduce over ``axis_name`` (use inside shard_map).
+
+    Quantize local partial -> sum int32 partials (exact) -> dequantize with
+    the max scale.  One extra small psum carries the scales.
+    """
+    q, scale = _quantize_int8(x.astype(jnp.float32))
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # renormalize local quants to the shared scale so the int sum is aligned
+    q_aligned = jnp.clip(jnp.round(q.astype(jnp.float32) * (scale / scale_max)),
+                         -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q_aligned, axis_name)
+    deq = (total.astype(jnp.float32) * scale_max).reshape(-1)
+    return deq[:_numel(x.shape)].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding policy, training/serving loops, fault
+tolerance, elasticity."""

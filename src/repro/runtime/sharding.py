@@ -1,0 +1,242 @@
+"""Sharding policy: PartitionSpecs for params, optimizer state, caches and
+batches, per (architecture x shape x mesh).
+
+Conventions (DESIGN.md §5):
+
+  * "data" is DP + FSDP: parameters/optimizer state store sharded on it
+    (ZeRO-3 style); XLA all-gathers weights at use (bf16, since the model
+    casts params at point-of-use).
+  * "model" is TP/EP: Megatron column/row-parallel linears; expert
+    parallelism when E divides the axis; vocab-parallel embeddings.
+  * "pod" is cross-pod DP only — parameters replicate across pods, the
+    batch and gradients reduce over (pod, data).
+  * Every spec is *sanitized*: an axis is dropped from a dim that it does
+    not divide (GQA kv-head fallback replication etc.), so one rule set
+    serves all 10 architectures on any mesh, including 1-device tests.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.attention import KVCache
+from repro.models.rglru import RecurrentState
+from repro.models.ssd import SSMState
+
+BATCH_AXES = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# sanitation
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.axis_names else 1
+    n = 1
+    for a in axis:
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def _filter_axis(mesh: Mesh, axis):
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in mesh.axis_names else None
+    kept = tuple(a for a in axis if a in mesh.axis_names)
+    return kept if kept else None
+
+
+def sanitize(mesh: Mesh, spec: Sequence, shape: Tuple[int, ...]) -> P:
+    """Drop axes that don't exist on the mesh or don't divide the dim."""
+    spec = tuple(spec)
+    if len(spec) < len(shape):  # left-pad for stacked leading dims
+        spec = (None,) * (len(shape) - len(spec)) + spec
+    spec = spec[-len(shape):] if shape else ()
+    out = []
+    for dim, axis in zip(shape, spec):
+        axis = _filter_axis(mesh, axis)
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            # try single-axis fallback for composite axes
+            if not isinstance(axis, str):
+                axis = next((a for a in axis if dim % _axis_size(mesh, a) == 0),
+                            None)
+            else:
+                axis = None
+        out.append(axis)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (path regex, spec for the *trailing* dims).  First match wins.  "F" is
+# the FSDP axis, "M" the tensor-parallel axis (substituted below).
+_PARAM_RULES = [
+    (r"embed/table$", ("M", None)),                # (V, D) vocab-parallel;
+    # no FSDP on D: tied-unembed contracts over D and an FSDP'd D would
+    # force a weight all-gather along the *batch* axis every step.
+    (r"lm_head/w$", ("F", "M")),                   # (D, V)
+    (r"(wq|wk|wv)/w$", ("F", "M")),                # column-parallel
+    (r"wo/w$", ("M", "F")),                        # row-parallel
+    (r"(w_gate|w_up)/w$", ("F", "M")),             # (d, f) or (E, d, f): EP prefix added
+    (r"w_down/w$", ("M", "F")),                    # (f, d) or (E, f, d)
+    (r"router/w$", ("F", None)),
+    (r"(lin_y|lin_x|gate_a|gate_x)/w$", ("F", "M")),
+    (r"lin_out/w$", ("M", "F")),
+    (r"in_proj/w$", ("F", "M")),
+    (r"out_proj/w$", ("M", "F")),
+    (r"conv_w$", (None, "M")),
+    (r"lambda$", ("M",)),
+    (r"(proj1|proj2|adapter)/w$", ("F", "M")),
+    (r"(A_log|D|dt_bias|conv_b)$", (None,)),
+    (r"(scale|bias)$", (None,)),
+    (r"/b$", ("M",)),                              # linear biases follow out dim
+]
+
+
+def _path_to_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"#{p.idx}")
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspec(path_str: str, shape: Tuple[int, ...], cfg, mesh: Mesh,
+                *, fsdp: bool = True) -> P:
+    fs = "data" if fsdp else None
+    # expert-parallel prefix for stacked expert weights (E, d, f)/(E, f, d)
+    is_expert = bool(re.search(r"(w_gate|w_up|w_down)/w$", path_str)) \
+        and cfg.num_experts > 0
+    for pattern, spec in _PARAM_RULES:
+        if re.search(pattern, path_str):
+            spec = tuple({"F": fs, "M": "model"}.get(s, s) if isinstance(s, str)
+                         else s for s in spec)
+            if is_expert:
+                msize = _axis_size(mesh, "model")
+                if cfg.num_experts % max(msize, 1) == 0 and msize > 1:
+                    # expert parallelism: E on "model", FSDP on d/f
+                    spec = ("model", fs, None)
+                else:
+                    spec = (None,) + spec
+            return sanitize(mesh, spec, shape)
+    return sanitize(mesh, (None,) * len(shape), shape)
+
+
+def param_pspecs(params, cfg, mesh: Mesh, *, fsdp: bool = True):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_pspec(_path_to_str(path), leaf.shape, cfg, mesh, fsdp=fsdp)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state rules (mirror the param spec; factored leaves drop a dim)
+# ---------------------------------------------------------------------------
+
+def opt_pspecs(opt_state, params, cfg, mesh: Mesh, *, fsdp: bool = True):
+    pspecs = param_pspecs(params, cfg, mesh, fsdp=fsdp)
+
+    def mirror(ps, leaf_state):
+        if isinstance(leaf_state, dict) and set(leaf_state) == {"r", "c"}:
+            parts = tuple(ps)
+            rspec = P(*parts[:-1]) if parts else P()
+            cspec = P(*(parts[:-2] + parts[-1:])) if len(parts) >= 2 else P()
+            return {"r": rspec, "c": cspec}
+        return ps
+
+    def walk(state_sub):
+        return jax.tree.map(
+            mirror, pspecs, state_sub,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # state = {"m": tree-like-params, "v": tree with factored leaves}
+    out = {}
+    for key, sub in opt_state.items():
+        out[key] = jax.tree.map(
+            lambda ps, st: mirror(ps, st), pspecs, sub,
+            is_leaf=lambda x: isinstance(x, P) or (
+                isinstance(x, dict) and set(x) == {"r", "c"}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache / state rules
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache, cfg, mesh: Mesh):
+    """Specs matching a stack_cache pytree (leading group dim or not)."""
+    bd = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    bd = bd if bd else None
+    msize = _axis_size(mesh, "model")
+    heads_divisible = msize > 1 and cfg.num_kv_heads % msize == 0
+
+    def kv_component(x, role):
+        # (G?, b, S, hkv, hd) or (G?, b, S) for pos
+        if role == "pos":
+            return sanitize(mesh, (bd, None), x.shape)
+        if heads_divisible:
+            return sanitize(mesh, (bd, None, "model", None), x.shape)
+        # GQA fallback: shard the sequence (SPMD split-K decode)
+        return sanitize(mesh, (bd, "model", None, None), x.shape)
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            return KVCache(k=kv_component(node.k, "k"),
+                           v=kv_component(node.v, "v"),
+                           pos=kv_component(node.pos, "pos"))
+        if isinstance(node, RecurrentState):
+            return RecurrentState(
+                h=sanitize(mesh, (bd, "model"), node.h.shape),
+                conv=sanitize(mesh, (bd, None, "model"), node.conv.shape))
+        if isinstance(node, SSMState):
+            return SSMState(
+                conv=sanitize(mesh, (bd, None, "model"), node.conv.shape),
+                s=sanitize(mesh, (bd, "model", None, None), node.s.shape))
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        if node is None:
+            return None
+        # bare array leaf
+        return sanitize(mesh, (None,) * node.ndim, node.shape)
+
+    return walk(cache)
+
+
+# ---------------------------------------------------------------------------
+# batch rules
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_specs, mesh: Mesh):
+    bd = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    bd = bd if bd else None
+
+    def one(spec):
+        if spec.ndim == 0:
+            return P()
+        return sanitize(mesh, (bd,) + (None,) * (spec.ndim - 1), spec.shape)
+
+    return jax.tree.map(one, batch_specs)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,96 @@
+"""Activation-sharding hooks.
+
+Model code calls :func:`shard_activation` at block boundaries.  Outside a
+mesh context it is a no-op, so single-device tests and examples run
+unchanged; under ``use_mesh`` the hook emits
+``jax.lax.with_sharding_constraint`` with the named axes that exist on the
+active mesh (absent axes are dropped, so the same model code serves the
+(data, model) single-pod mesh, the (pod, data, model) multi-pod mesh, and
+1-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _state.mesh = prev
+
+
+AxisName = Union[None, str, Sequence[str]]
+
+
+def _filter_axes(mesh: Mesh, axes: Sequence[AxisName]) -> P:
+    names = set(mesh.axis_names)
+
+    def keep(a: AxisName):
+        if a is None:
+            return None
+        if isinstance(a, str):
+            return a if a in names else None
+        kept = tuple(x for x in a if x in names)
+        return kept if kept else None
+
+    return P(*[keep(a) for a in axes])
+
+
+def _axis_size(mesh: Mesh, axis: AxisName) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape.get(axis, 1)
+    n = 1
+    for a in axis:
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def shard_activation(x: jax.Array, axes: Sequence[AxisName]) -> jax.Array:
+    """Constrain ``x`` to ``axes`` (by mesh axis name) if a mesh is active.
+
+    Axes absent from the mesh are dropped; axes that do not divide the
+    corresponding dim are dropped too (GQA/odd-head fallback replication).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        # Allow passing logical specs shorter than rank: right-pad with None.
+        axes = tuple(axes) + (None,) * (x.ndim - len(axes))
+    spec = _filter_axes(mesh, axes)
+    cleaned = []
+    for dim, axis in zip(x.shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            if not isinstance(axis, str):
+                axis = next(
+                    (a for a in axis if dim % _axis_size(mesh, a) == 0), None)
+            else:
+                axis = None
+        cleaned.append(axis)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*cleaned)))
+
+
+def named_sharding(mesh: Mesh, *axes: AxisName) -> NamedSharding:
+    return NamedSharding(mesh, _filter_axes(mesh, axes))

@@ -1,0 +1,168 @@
+"""Step builders: train_step / prefill_step / serve_step for any arch.
+
+These are the functions the launcher jits with explicit in/out shardings
+and the dry-run lowers against ShapeDtypeStructs.  All model-family
+branching (dec-only vs enc-dec vs modality prefix) is resolved here, at
+trace time, from the config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import EncoderDecoderModel, LanguageModel
+from repro.models.losses import softmax_cross_entropy
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS = 1e-4
+
+
+def model_for(cfg):
+    return EncoderDecoderModel if cfg.encoder_decoder else LanguageModel
+
+
+def forward(cfg, params, batch: Dict[str, Any], *, cache=None, positions=None,
+            logits_mode="all"):
+    if cfg.encoder_decoder:
+        return EncoderDecoderModel.apply(
+            params, cfg, batch["tokens"], feats=batch.get("modality_feats"),
+            enc_out=batch.get("enc_out"), positions=positions, cache=cache,
+            logits_mode=logits_mode)
+    return LanguageModel.apply(
+        params, cfg, batch["tokens"], positions=positions, cache=cache,
+        modality_feats=batch.get("modality_feats"), logits_mode=logits_mode)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        logits, _, aux = forward(cfg, params, batch)
+        labels = batch["labels"]
+        if cfg.modality == "vision":
+            # loss over the text positions only (prefix carries no labels)
+            logits = logits[:, -labels.shape[1]:]
+        loss, metrics = softmax_cross_entropy(logits, labels, z_loss=Z_LOSS)
+        total = loss + AUX_LOSS_WEIGHT * aux
+        metrics = dict(metrics, aux_loss=aux, loss=total)
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg, optimizer, *, microbatches: int = 1,
+                    grad_compress: bool = False):
+    """Build the jittable train step.
+
+    ``microbatches`` > 1 splits the global batch along the batch dim and
+    accumulates gradients across a ``lax.scan`` — activation memory scales
+    with 1/microbatches while the global batch (and the numerics, up to
+    fp32 grad-sum order) is preserved.  ``grad_compress`` applies int8
+    error-feedback quantization to the accumulated gradient (simulating
+    the compressed cross-pod wire format; see repro.optim.compression).
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            (_, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (_, metrics), grads = grads_of(params, mb)
+                # bf16 accumulation: halves the resident grad buffer (the
+                # Megatron bf16-grad convention; loss scale is 1 in bf16).
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.bfloat16), acc, grads)
+                return acc, metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                                 params)
+            grads, metrics_stack = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_stack)
+
+        if grad_compress:
+            from repro.optim.compression import error_feedback_compress
+            # residual is carried in opt_state["ef_residual"] when enabled
+            res = opt_state.get("ef_residual") if isinstance(opt_state, dict) \
+                else None
+            grads, new_res = error_feedback_compress(grads, res)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state if not grad_compress else
+            {k: v for k, v in opt_state.items() if k != "ef_residual"},
+            params, step)
+        if grad_compress:
+            new_opt = dict(new_opt, ef_residual=new_res)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# inference
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, capacity: int):
+    """Prefill: forward the prompt, return last-position logits + cache."""
+    model = model_for(cfg)
+
+    def prefill_step(params, batch):
+        b = batch["tokens"].shape[0]
+        cache = model.init_cache(cfg, b, capacity)
+        # unembed only the last position: skips a (b, s, V) matmul + its
+        # HBM round-trip (EXPERIMENTS.md §Perf, prefill iteration 1)
+        logits, cache, _ = forward(cfg, params, batch, cache=cache,
+                                   logits_mode="last")
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """One decode step: (params, cache, tokens(b,1), pos) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos, enc_out=None):
+        batch = {"tokens": tokens}
+        if enc_out is not None:
+            batch["enc_out"] = enc_out
+        positions = pos[None] if pos.ndim == 0 else pos
+        logits, new_cache, _ = forward(cfg, params, batch, cache=cache,
+                                       positions=positions)
+        return logits[:, -1], new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shape-only helpers for the dry-run
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg, rng=None):
+    model = model_for(cfg)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    return jax.eval_shape(functools.partial(model.init, cfg=cfg), rng)
+
+
+def cache_shapes(cfg, batch: int, capacity: int):
+    model = model_for(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init_cache, cfg, batch, capacity))
+
+
+def opt_state_shapes(cfg, optimizer, params_shapes):
+    return jax.eval_shape(optimizer.init, params_shapes)

@@ -1,0 +1,8 @@
+import os
+
+# Tests must see the real (single-CPU) device topology; only dryrun.py
+# forces 512 host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,92 @@
+"""Planner unit + property tests (§IV-B reproduction invariants)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GemmDescriptor, plan_gemm, palette
+from repro.core.blocking import Region, ceil_div
+from repro.core.machine import TPU_V5E
+
+
+def desc(m, n, k, **kw):
+    return GemmDescriptor(m=m, n=n, k=k, **kw)
+
+
+class TestPalette:
+    def test_full_budget_shapes_mirror_paper(self):
+        """The full-budget palette is {square, wide, tall} — the 32x32 /
+        16x64 / 64x16 analogue."""
+        full = [(bm, bn) for bm, bn in palette() if bm * bn == 256 * 256]
+        assert (256, 256) in full
+        assert (128, 512) in full
+        assert (512, 128) in full
+
+    def test_alignment(self):
+        sub, lane = TPU_V5E.reg_tile("float32")
+        for bm, bn in palette():
+            assert bm % sub == 0 and bn % lane == 0
+
+    def test_square_has_best_reuse(self):
+        """Paper's loads-per-update argument: among equal-budget blockings
+        the square one loads fewest inputs per accumulator update."""
+        full = [(bm, bn) for bm, bn in palette() if bm * bn == 256 * 256]
+        best = min(full, key=lambda s: s[0] + s[1])
+        assert best == (256, 256)
+
+
+class TestPlans:
+    def test_aligned_problem_is_homogeneous(self):
+        plan = plan_gemm(desc(1024, 1024, 1024))
+        assert len(plan.regions) == 1
+        assert plan.utilization == 1.0
+
+    def test_ragged_problem_covers_exactly(self):
+        plan = plan_gemm(desc(300, 500, 128))
+        plan.validate()
+
+    def test_heterogeneous_beats_homogeneous_on_fig7_shape(self):
+        """80x80-style shape (scaled to TPU granularity: 640x640 with
+        256-blocks) needs fewer microkernels heterogeneously."""
+        d = desc(640, 640, 512)
+        het = plan_gemm(d, heterogeneous=True)
+        hom = plan_gemm(d, heterogeneous=False, force_block=(256, 256))
+        assert het.num_microkernels <= hom.num_microkernels
+        assert het.utilization >= hom.utilization
+
+    def test_force_block(self):
+        plan = plan_gemm(desc(512, 512, 512), force_block=(128, 512),
+                         heterogeneous=False)
+        assert plan.regions[0].bm == 128 and plan.regions[0].bn == 512
+
+    def test_tiny_problem(self):
+        plan = plan_gemm(desc(1, 1, 1))
+        plan.validate()
+        assert plan.num_microkernels == 1
+
+    def test_bk_fits_vmem(self):
+        plan = plan_gemm(desc(4096, 4096, 8192))
+        for r in plan.regions:
+            acc = r.bm * r.bn * 4
+            inputs = 2 * 4 * plan.bk * (r.bm + r.bn)
+            assert acc + inputs <= TPU_V5E.vmem_bytes
+
+
+@settings(max_examples=200, deadline=None)
+@given(m=st.integers(1, 2048), n=st.integers(1, 2048), k=st.integers(1, 4096))
+def test_plan_cover_properties(m, n, k):
+    """Property: every plan covers C exactly once with in-bounds regions,
+    positive utilization, and microkernel count >= ceil-div lower bound."""
+    plan = plan_gemm(desc(m, n, k))
+    plan.validate()
+    assert 0.0 < plan.utilization <= 1.0
+    lower = ceil_div(m, 512) * ceil_div(n, 1024)
+    assert plan.num_microkernels >= 1
+    assert plan.num_microkernels >= lower
+
+
+@settings(max_examples=100, deadline=None)
+@given(m=st.integers(1, 1024), n=st.integers(1, 1024))
+def test_heterogeneous_never_worse_predicted(m, n):
+    d = desc(m, n, 512)
+    het = plan_gemm(d, heterogeneous=True)
+    hom = plan_gemm(d, heterogeneous=False)
+    assert het.predicted_seconds() <= hom.predicted_seconds() * 1.0001

@@ -1,0 +1,114 @@
+"""Trip-count-aware HLO cost walker: validated against analytic FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze, parse_module, _trip_count
+
+
+def test_scan_flops_exact():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.dot(c, w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jnp.ones((128, 256), jnp.float32)
+    ws = jnp.ones((7, 256, 256), jnp.float32)
+    compiled = jax.jit(f).lower(x, ws).compile()
+    rec = analyze(compiled.as_text())
+    assert rec["flops"] == 7 * 2 * 128 * 256 * 256
+
+
+def test_nested_scan_flops_exact():
+    def f(x, ws):
+        def outer(c, _):
+            def inner(c2, w):
+                return jnp.dot(c2, w), None
+            c2, _ = jax.lax.scan(inner, c, ws)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    x = jnp.ones((64, 64), jnp.float32)
+    ws = jnp.ones((5, 64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(x, ws).compile()
+    rec = analyze(compiled.as_text())
+    assert rec["flops"] == 3 * 5 * 2 * 64 * 64 * 64
+
+
+def test_unrolled_matches_module_cost_analysis():
+    def g(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jnp.ones((32, 32), jnp.float32)
+    w = jnp.ones((32, 32), jnp.float32)
+    compiled = jax.jit(g).lower(x, w).compile()
+    rec = analyze(compiled.as_text())
+    xla = compiled.cost_analysis()["flops"]
+    # dots dominate; walker counts only dots, XLA adds elementwise
+    assert rec["flops"] <= xla
+    assert rec["flops"] >= 4 * 2 * 32 * 32 * 32
+
+
+def test_collectives_counted_with_multiplier():
+    """Collective inside a scan counts trip-count times."""
+    import os
+    # This test runs on 1 device: use psum over a trivial axis via pjit is
+    # not available; instead verify the parser on a synthetic HLO snippet.
+    hlo = """
+HloModule test
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(6)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4] get-tuple-element(%p), index=1
+  %ar = f32[4]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4]) tuple(%ni, %ar)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[4]) -> (s32[], f32[4]) {
+  %x = f32[4] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4]) tuple(%z, %x)
+  ROOT %w = (s32[], f32[4]) while(%t0), condition=%cond, body=%body
+}
+"""
+    rec = analyze(hlo)
+    assert rec["collectives"]["all-reduce"]["count"] == 6
+    assert rec["collectives"]["all-reduce"]["bytes"] == 6 * 16
+
+
+def test_trip_count_parse():
+    comps, entry = parse_module("""
+HloModule m
+
+%c (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(28)
+  ROOT %r = pred[] compare(%i, %k), direction=LT
+}
+
+ENTRY %e (x: f32[2]) -> f32[2] {
+  ROOT %x = f32[2] parameter(0)
+}
+""")
+    assert _trip_count(comps["c"]) == 28

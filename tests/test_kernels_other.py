@@ -1,0 +1,126 @@
+"""Transpose / grouped-GEMM / flash-attention kernels vs oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.transpose import transpose, ref_transpose
+from repro.kernels.grouped_gemm import grouped_gemm, ref_grouped_gemm
+from repro.kernels.flash_attention import flash_attention, ref_attention
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+@pytest.mark.parametrize("rows,cols,bt", [
+    (256, 512, 128), (100, 300, 64), (7, 1000, 256), (128, 128, 128),
+    (1, 5, 8),
+])
+def test_transpose(rows, cols, bt):
+    x = rand((rows, cols))
+    np.testing.assert_array_equal(transpose(x, bt=bt), ref_transpose(x))
+
+
+def test_transpose_batched():
+    x = rand((3, 64, 96))
+    np.testing.assert_array_equal(transpose(x, bt=32), ref_transpose(x))
+
+
+@pytest.mark.parametrize("sizes,bm", [
+    ([37, 0, 201, 70], 32), ([128, 64, 0, 64], 64), ([5, 3, 2, 1], 8),
+    ([300], 128), ([0, 0, 17], 16),
+])
+def test_grouped_gemm(sizes, bm):
+    sizes_a = jnp.array(sizes, jnp.int32)
+    e, kdim, n = len(sizes), 96, 160
+    t = int(sizes_a.sum()) + 4
+    x, w = rand((t, kdim)), rand((e, kdim, n))
+    out = grouped_gemm(x, w, sizes_a, bm=bm, bk=64, bn=64)
+    ref = ref_grouped_gemm(x, w, sizes_a)
+    np.testing.assert_allclose(out, ref, atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(0, 60), min_size=1, max_size=5))
+def test_grouped_gemm_property(sizes):
+    sizes_a = jnp.array(sizes, jnp.int32)
+    e, kdim, n = len(sizes), 32, 48
+    t = max(1, int(sizes_a.sum()))
+    x, w = rand((t, kdim)), rand((e, kdim, n))
+    out = grouped_gemm(x, w, sizes_a, bm=16, bk=32, bn=48)
+    ref = ref_grouped_gemm(x, w, sizes_a)
+    np.testing.assert_allclose(out, ref, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,h,d,causal,bq,bk", [
+    (2, 256, 4, 64, True, 128, 128),
+    (1, 384, 2, 128, True, 128, 128),
+    (2, 128, 3, 64, False, 64, 64),
+    (1, 96, 1, 64, True, 64, 64),  # ragged seq vs block
+])
+def test_flash_attention(b, s, h, d, causal, bq, bk):
+    q, k, v = rand((b, s, h, d)), rand((b, s, h, d)), rand((b, s, h, d))
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-3, rtol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = rand((2, 128, 2, 64), jnp.bfloat16)
+    k = rand((2, 128, 2, 64), jnp.bfloat16)
+    v = rand((2, 128, 2, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2,
+                               rtol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel (the small-GEMM ladder in its Mamba-2 habitat)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g,q,n,p", [(6, 64, 32, 64), (2, 128, 128, 64),
+                                     (1, 32, 16, 16)])
+def test_ssd_chunk_kernel(g, q, n, p):
+    from repro.kernels.ssd_chunk import ssd_chunk_diag, ref_ssd_chunk_diag
+    c = rand((g, q, n))
+    b = rand((g, q, n))
+    x = rand((g, q, p))
+    l = jnp.tril(jnp.exp(rand((g, q, q)) * 0.1))
+    out = ssd_chunk_diag(c, b, l, x)
+    ref = ref_ssd_chunk_diag(c, b, l, x)
+    np.testing.assert_allclose(out, ref, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_chunk_matches_model_ladder():
+    """The kernel reproduces the y_diag term of the model's chunked SSD."""
+    from repro.kernels.ssd_chunk import ssd_chunk_diag
+    from repro.models.ssd import _segsum
+    b_, nc, q, h, p, n = 1, 2, 8, 2, 4, 3
+    x = rand((b_, nc, q, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b_, nc, q, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 1.5, (h,)), jnp.float32)
+    B = rand((b_, nc, q, 1, n))
+    C = rand((b_, nc, q, 1, n))
+    da = dt * a[None, None, None, :]
+    L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (b, nc, h, q, q)
+    xdt = x * dt[..., None]
+    # flatten (b, nc, h) into kernel groups
+    cg = jnp.broadcast_to(C.transpose(0, 1, 3, 2, 4), (b_, nc, h, q, n)) \
+        .reshape(-1, q, n)
+    bg = jnp.broadcast_to(B.transpose(0, 1, 3, 2, 4), (b_, nc, h, q, n)) \
+        .reshape(-1, q, n)
+    lg = L.reshape(-1, q, q)
+    xg = xdt.transpose(0, 1, 3, 2, 4).reshape(-1, q, p)
+    y_kernel = ssd_chunk_diag(cg, bg, lg, xg).reshape(b_, nc, h, q, p)
+
+    cb = jnp.einsum("bnqgd,bnkgd->bngqk", C, B)
+    cb = jnp.repeat(cb, h, axis=2)
+    w = cb * L
+    y_ref = jnp.einsum("bnhqk,bnkhp->bnqhp", w.astype(x.dtype), xdt)
+    np.testing.assert_allclose(y_kernel.transpose(0, 1, 3, 2, 4), y_ref,
+                               atol=2e-3, rtol=2e-3)

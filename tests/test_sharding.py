@@ -1,0 +1,114 @@
+"""Sharding policy rules: divisibility sanitation, param/opt/cache specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced_config
+from repro.launch.mesh import make_test_mesh
+from repro.runtime import sharding as shd
+from repro.runtime.steps import param_shapes, cache_shapes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1 device, but with named axes of size 1 — rules exercise name paths.
+    return make_test_mesh(1, 1)
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in to test divisibility logic at 16x16."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+FM = FakeMesh(data=16, model=16)
+
+
+def test_sanitize_drops_nondividing_axis():
+    assert shd.sanitize(FM, ("data", "model"), (48, 512)) == P("data", "model")
+    assert shd.sanitize(FM, ("data", "model"), (7, 512)) == P(None, "model")
+    assert shd.sanitize(FM, ("data", "model"), (48, 9)) == P("data", None)
+
+
+def test_sanitize_left_pads_stacked_dims():
+    # stacked (groups, d, f) with a trailing-2-dim rule
+    assert shd.sanitize(FM, ("data", "model"), (12, 64, 128)) == \
+        P(None, "data", "model")
+
+
+def test_sanitize_composite_fallback():
+    fm = FakeMesh(pod=2, data=16, model=16)
+    # 32 divides pod*data? 32 % 32 == 0 -> keep composite
+    assert shd.sanitize(fm, (("pod", "data"), None), (32, 8)) == \
+        P(("pod", "data"), None)
+    # 16 doesn't divide 32 -> falls back to a single axis that divides
+    spec = shd.sanitize(fm, (("pod", "data"), None), (16, 8))
+    assert spec in (P("data", None), P("pod", None))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "grok-1-314b",
+                                  "recurrentgemma-9b", "mamba2-130m",
+                                  "seamless-m4t-large-v2"])
+def test_param_specs_cover_all_leaves(arch):
+    cfg = get_config(arch)
+    shapes = param_shapes(cfg)
+    specs = shd.param_pspecs(shapes, cfg, FM)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for s, spec in zip(flat_shapes, flat_specs):
+        assert len(spec) <= len(s.shape)
+        for dim, axis in zip(s.shape[-len(spec):] if spec else (), spec):
+            if axis is not None:
+                size = 1
+                for a in ([axis] if isinstance(axis, str) else axis):
+                    size *= FM.shape[a]
+                assert dim % size == 0, (arch, s.shape, spec)
+
+
+def test_expert_parallel_vs_tp_fallback():
+    cfg16 = get_config("phi3.5-moe-42b")  # E=16 == model -> EP
+    shapes = param_shapes(cfg16)
+    specs = shd.param_pspecs(shapes, cfg16, FM)
+    up = specs["blocks"]["groups"]["b0"]["ff"]["w_up"]["w"]
+    assert up[-3] == "model"  # experts on model axis
+
+    cfg8 = get_config("grok-1-314b")  # E=8 < 16 -> TP-f fallback
+    shapes8 = param_shapes(cfg8)
+    specs8 = shd.param_pspecs(shapes8, cfg8, FM)
+    up8 = specs8["blocks"]["groups"]["b0"]["ff"]["w_up"]["w"]
+    assert up8[-3] is None
+    assert up8[-1] == "model"
+
+
+def test_cache_specs_seq_shard_fallback_for_gqa():
+    cfg = get_config("grok-1-314b")  # kv=8 < 16 -> sequence-sharded cache
+    cshapes = cache_shapes(cfg, batch=128, capacity=32768)
+    cspecs = shd.cache_pspecs(cshapes, cfg, FM)
+    kv = cspecs["groups"]["b0"]
+    assert kv.k[2] == "model"  # S dim
+
+    cfg2 = get_config("phi3-mini-3.8b")  # kv=32 divisible -> heads sharded
+    cshapes2 = cache_shapes(cfg2, batch=128, capacity=32768)
+    cspecs2 = shd.cache_pspecs(cshapes2, cfg2, FM)
+    assert cspecs2["groups"]["b0"].k[3] == "model"
+
+
+def test_opt_specs_mirror_params_and_factored(mesh):
+    from repro.optim import scalable_adamw
+    cfg = reduced_config(get_config("qwen3-0.6b"))
+    shapes = param_shapes(cfg)
+    opt = scalable_adamw(1e-3)
+    oshapes = jax.eval_shape(opt.init, shapes)
+    ospecs = shd.opt_pspecs(oshapes, shapes, cfg, FM)
+    assert "m" in ospecs and "v" in ospecs
+
+
+def test_batch_specs(mesh):
+    specs = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    out = shd.batch_pspecs(specs, FM)
+    assert out["tokens"] == P("data", None)
+    assert out["pos"] == P()

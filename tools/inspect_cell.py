@@ -1,0 +1,56 @@
+"""Dump the largest tensors + collectives from one dry-run cell's HLO."""
+import os, sys, re, collections
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, "src")
+
+_B = {"bf16":2,"f32":4,"f16":2,"f64":8,"s32":4,"u32":4,"s8":1,"u8":1,"pred":1,"s64":8,"u64":8,"s16":2,"u16":2}
+
+def main(arch, shape, mesh):
+    from repro.launch import dryrun as dr
+    import repro.launch.dryrun  # ensure env
+    import jax
+    from repro.configs import get_config, shape_for, input_specs
+    # reuse run_cell internals up to lowering by calling run_cell with save=False
+    # then re-lower here to capture hlo: simpler to copy logic via run_cell's compiled
+    rec = None
+    # monkeypatch to capture hlo
+    import repro.launch.dryrun as D
+    orig = D.parse_collectives
+    captured = {}
+    def cap(hlo):
+        captured["hlo"] = hlo
+        return orig(hlo)
+    D.parse_collectives = cap
+    rec = D.run_cell(arch, shape, mesh, save=False)
+    hlo = captured["hlo"]
+    sizes = []
+    for m in re.finditer(r"(bf16|f32|f16|f64|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]+)\]", hlo):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","): n *= int(d)
+        sizes.append((n*_B[dt], f"{dt}[{dims}]"))
+    cnt = collections.Counter(s for _, s in sizes)
+    uniq = {}
+    for b, s in sizes:
+        uniq[s] = b
+    top = sorted(uniq.items(), key=lambda kv: -kv[1])[:15]
+    print("\nTop tensor shapes (unique, per-device):")
+    for s, b in top:
+        print(f"  {b/2**30:8.2f} GiB  {s}   x{cnt[s]} occurrences")
+    print("\nLargest collectives:")
+    coll = []
+    for line in hlo.splitlines():
+        m = re.search(r"=\s+(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\(", line)
+        if m:
+            b = 0
+            for mm in re.finditer(r"(bf16|f32|f16|f64|s32|u32|s8|u8|pred)\[([0-9,]*)\]", m.group(1)):
+                n = 1
+                if mm.group(2):
+                    for d in mm.group(2).split(","): n *= int(d)
+                b += n*_B[mm.group(1)]
+            coll.append((b, m.group(2), line.strip()[:180]))
+    for b, op, line in sorted(coll, key=lambda x: -x[0])[:12]:
+        print(f"  {b/2**30:8.3f} GiB {op}: {line[:150]}")
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2], sys.argv[3] if len(sys.argv) > 3 else "pod")
