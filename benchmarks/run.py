@@ -33,6 +33,16 @@ def main() -> None:
     for name in chosen:
         suites[name]()
 
+    # Engine observability: per-family plan/kernel cache traffic for the
+    # whole benchmark run (the paper's dispatch-layer hit/miss view).
+    from repro.core import engine
+    for fam, c in sorted(engine.stats().items()):
+        print(f"engine/{fam},0,"
+              f"plan_hits={c['plan_hits']};plan_misses={c['plan_misses']};"
+              f"kernel_hits={c['kernel_hits']};"
+              f"kernel_misses={c['kernel_misses']};"
+              f"kernel_evictions={c['kernel_evictions']}")
+
 
 if __name__ == '__main__':
     main()

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import matmul, backend
+from repro.core import matmul, use
 from repro.core.machine import TPU_V5E
 
 M = N = K = 512
@@ -27,7 +27,7 @@ def run():
         a, b = a32.astype(dtype), b32.astype(dtype)
 
         def f(a, b):
-            with backend("xla"):
+            with use(backend="xla"):
                 return matmul(a, b)
 
         jf = jax.jit(f)
@@ -52,7 +52,7 @@ def run():
 
     # engine (pallas interpret) single data point for provenance
     def fp(a, b):
-        with backend("pallas"):
+        with use(backend="pallas"):
             return matmul(a, b)
 
     us = time_fn(jax.jit(fp), a32, b32, iters=3, warmup=1)

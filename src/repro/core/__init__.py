@@ -1,15 +1,29 @@
 """The paper's primary contribution: a JIT small-GEMM engine for matrix
-units, adapted from M4/SME (the paper's target) to TPU/MXU.
+units, adapted from M4/SME (the paper's target) to TPU/MXU — generalized
+to every kernel family in the system (DESIGN.md).
 
   * ``machine``    — hardware model ("Table I" constants)
-  * ``descriptor`` — GEMM metadata (libxsmm descriptor analogue)
-  * ``blocking``   — heterogeneous accumulator-blocking planner (§IV-B)
-  * ``jit_cache``  — kernel registry (libxsmm JIT dispatch analogue)
-  * ``matmul``     — public dispatch used by every model layer
+  * ``config``     — process-wide backend/interpret/machine configuration
+  * ``descriptor`` — per-family kernel metadata (libxsmm descriptor analogue)
+  * ``blocking``   — machine-model tile planners, all families (§IV-B)
+  * ``jit_cache``  — LRU kernel registry (libxsmm JIT dispatch analogue)
+  * ``engine``     — family registry + plan cache + dispatch
+  * ``matmul``     — public GEMM dispatch used by every model layer
   * ``microbench`` — machine-characterization harness (§III analogue)
 """
-from repro.core.descriptor import GemmDescriptor  # noqa: F401
-from repro.core.blocking import BlockingPlan, Region, plan_gemm, palette  # noqa: F401
-from repro.core.machine import MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine  # noqa: F401
-from repro.core.matmul import matmul, set_backend, get_backend, backend  # noqa: F401
-from repro.core.jit_cache import GLOBAL_KERNEL_CACHE, KernelCache  # noqa: F401
+from repro.core.descriptor import (  # noqa: F401
+    FlashDescriptor, GemmDescriptor, GroupedGemmDescriptor,
+    KernelDescriptor, SsdChunkDescriptor, TransposeDescriptor)
+from repro.core.blocking import (  # noqa: F401
+    BlockingPlan, FlashPlan, GroupedGemmPlan, Region, SsdChunkPlan,
+    TransposePlan, palette, plan_flash, plan_gemm, plan_grouped, plan_ssd,
+    plan_transpose)
+from repro.core.machine import (  # noqa: F401
+    MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine)
+from repro.core.config import (  # noqa: F401
+    EngineConfig, backend, configure, get_backend, get_config, set_backend,
+    use)
+from repro.core.matmul import matmul  # noqa: F401
+from repro.core.jit_cache import (  # noqa: F401
+    GLOBAL_KERNEL_CACHE, KernelCache, LruCache)
+from repro.core import engine  # noqa: F401

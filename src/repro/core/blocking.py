@@ -33,7 +33,9 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from .descriptor import GemmDescriptor
+from .descriptor import (FlashDescriptor, GemmDescriptor,
+                         GroupedGemmDescriptor, SsdChunkDescriptor,
+                         TransposeDescriptor)
 from .machine import MachineModel, DEFAULT_MACHINE
 
 # ---------------------------------------------------------------------------
@@ -318,3 +320,193 @@ def _corner_block(rows, cols, shapes) -> Tuple[int, int]:
     covering = sorted(shapes, key=lambda s: (ceil_div(rows, s[0]) * ceil_div(cols, s[1]),
                                              s[0] * s[1]))
     return covering[0]
+
+
+# ---------------------------------------------------------------------------
+# Non-GEMM family planners
+# ---------------------------------------------------------------------------
+# Same discipline as plan_gemm: enumerate machine-legal tilings, rank them
+# under the max(compute, memory) + per-step-overhead cost model, return a
+# frozen plan.  These replace the hardcoded constants the kernel wrappers
+# used to carry (block_q=512, bm=128/bk=512/bn=256, bt=256).
+
+def _tile_candidates(extent: int, align: int, lo: int = 64,
+                     hi: int = 1024) -> List[int]:
+    """Aligned power-of-two tile edges covering [lo, hi], clipped to extent.
+
+    An edge >= extent collapses to the aligned cover of extent itself, so
+    small problems get exactly one full tile instead of a masked giant.
+    """
+    cands = set()
+    t = lo
+    while t <= hi:
+        cands.add(min(t, round_up(extent, align)) if t >= extent else t)
+        t *= 2
+    return sorted(c for c in cands if c % align == 0 or c >= extent)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashPlan:
+    desc: FlashDescriptor
+    block_q: int
+    block_k: int
+
+    def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        return _predict_flash_seconds(self.desc, self.block_q, self.block_k,
+                                      machine)
+
+
+def _predict_flash_seconds(desc: FlashDescriptor, bq: int, bk: int,
+                           machine: MachineModel) -> float:
+    cq, ck = ceil_div(desc.sq, bq), ceil_div(desc.sk, bk)
+    # Active (q, k) tile pairs: causal skips tiles strictly above the
+    # diagonal — the heterogeneous-cover idea applied to the triangle.
+    if desc.causal:
+        active = sum(min(ck, ceil_div((qi + 1) * bq, bk)) for qi in range(cq))
+    else:
+        active = cq * ck
+    steps = desc.batch_heads * active
+    # Issued MACs: tiles are padded to (bq, bk) — masked lanes still occupy
+    # the MXU (the SME predicate analogue).
+    issued = 4 * steps * bq * bk * desc.d
+    compute_s = issued / machine.peak(desc.dtype)
+    isz = jnp.dtype(desc.dtype).itemsize
+    # Each active step streams one K and one V tile; Q tiles stream once
+    # per q-row of active tiles; output written once.
+    traffic = steps * 2 * bk * desc.d * isz
+    traffic += desc.batch_heads * cq * bq * desc.d * isz
+    traffic += desc.out_bytes
+    memory_s = traffic / machine.hbm_bw
+    return max(compute_s, memory_s) + steps * _STEP_OVERHEAD_S
+
+
+def plan_flash(desc: FlashDescriptor,
+               machine: MachineModel = DEFAULT_MACHINE) -> FlashPlan:
+    """Pick (block_q, block_k) from VMEM/MXU constraints + the cost model."""
+    sub, lane = machine.reg_tile(desc.dtype)
+    isz = jnp.dtype(desc.dtype).itemsize
+    best, best_t = None, float("inf")
+    for bq in _tile_candidates(desc.sq, sub):
+        for bk in _tile_candidates(desc.sk, lane):
+            # VMEM: q tile + k/v tiles (double-buffered) + fp32 scratch
+            # (score tile, running max/denom, output accumulator).
+            vmem = (bq * desc.d + 2 * 2 * bk * desc.d) * isz
+            vmem += (bq * bk + 2 * bq + bq * desc.d) * 4
+            if vmem > machine.vmem_bytes // 2:
+                continue
+            t = _predict_flash_seconds(desc, bq, bk, machine)
+            if t < best_t:
+                best, best_t = (bq, bk), t
+    if best is None:  # head dim so large nothing fits: minimal legal tiles
+        best = (sub, lane)
+    return FlashPlan(desc, *best)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedGemmPlan:
+    desc: GroupedGemmDescriptor
+    bm: int
+    bk: int
+    bn: int
+
+    @property
+    def t_padded(self) -> int:
+        """Static row bound: T rounded up plus per-group padding room."""
+        return round_up(self.desc.t, self.bm) + self.desc.num_experts * self.bm
+
+    def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        return _predict_grouped_seconds(self.desc, self.bm, self.bk, self.bn,
+                                        machine)
+
+
+def _predict_grouped_seconds(desc: GroupedGemmDescriptor, bm: int, bk: int,
+                             bn: int, machine: MachineModel) -> float:
+    t_padded = round_up(desc.t, bm) + desc.num_experts * bm
+    gm = ceil_div(t_padded, bm)
+    gn = ceil_div(desc.n, bn)
+    gk = ceil_div(desc.k, bk)
+    steps = gm * gn * gk
+    issued = 2 * gm * bm * gn * bn * desc.k  # padded rows still issue MACs
+    compute_s = issued / machine.peak(desc.dtype)
+    isz = jnp.dtype(desc.dtype).itemsize
+    traffic = steps * (bm * bk + bk * bn) * isz + gm * bm * desc.n * isz
+    memory_s = traffic / machine.hbm_bw
+    return max(compute_s, memory_s) + steps * _STEP_OVERHEAD_S
+
+
+def plan_grouped(desc: GroupedGemmDescriptor,
+                 machine: MachineModel = DEFAULT_MACHINE) -> GroupedGemmPlan:
+    """Pick (bm, bk, bn): bm trades per-group padding against grid size."""
+    sub, lane = machine.reg_tile(desc.dtype)
+    isz = jnp.dtype(desc.dtype).itemsize
+    best, best_t = None, float("inf")
+    for bm in _tile_candidates(desc.t, sub, lo=sub):
+        for bn in _tile_candidates(desc.n, lane, lo=lane):
+            for bk in _tile_candidates(desc.k, lane, lo=lane):
+                vmem = bm * bn * 4 + 2 * (bm * bk + bk * bn) * isz
+                if vmem > machine.vmem_bytes // 2:
+                    continue
+                t = _predict_grouped_seconds(desc, bm, bk, bn, machine)
+                if t < best_t:
+                    best, best_t = (bm, bk, bn), t
+    if best is None:
+        best = (sub, lane, lane)
+    return GroupedGemmPlan(desc, *best)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransposePlan:
+    desc: TransposeDescriptor
+    bt: int
+
+    def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        return _predict_transpose_seconds(self.desc, self.bt, machine)
+
+
+def _predict_transpose_seconds(desc: TransposeDescriptor, bt: int,
+                               machine: MachineModel) -> float:
+    steps = ceil_div(desc.rows, bt) * ceil_div(desc.cols, bt)
+    isz = jnp.dtype(desc.dtype).itemsize
+    traffic = 2 * steps * bt * bt * isz  # read + mirrored write, padded
+    return traffic / machine.hbm_bw + steps * _STEP_OVERHEAD_S
+
+
+def plan_transpose(desc: TransposeDescriptor,
+                   machine: MachineModel = DEFAULT_MACHINE) -> TransposePlan:
+    """Pick the square tile edge: biggest VMEM-legal tile wins on traffic,
+    smaller tiles win on ragged edges (masked-write waste)."""
+    sub, lane = machine.reg_tile(desc.dtype)
+    isz = jnp.dtype(desc.dtype).itemsize
+    extent = max(desc.rows, desc.cols)
+    best, best_t = None, float("inf")
+    for bt in _tile_candidates(extent, max(sub, 8), lo=32):
+        if 2 * bt * bt * isz > machine.vmem_bytes // 2:
+            continue
+        t = _predict_transpose_seconds(desc, bt, machine)
+        if t < best_t:
+            best, best_t = bt, t
+    return TransposePlan(desc, best if best is not None else lane)
+
+
+@dataclasses.dataclass(frozen=True)
+class SsdChunkPlan:
+    """The SSD ladder has no free tiling knobs — the whole (Q, n/p) cell
+    lives in VMEM per grid step — but the uniform plan object carries the
+    VMEM-fit verdict and the cost estimate for the engine's accounting."""
+
+    desc: SsdChunkDescriptor
+    fits_vmem: bool
+
+    def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        d = self.desc
+        compute_s = d.flops / machine.peak(d.dtype)
+        memory_s = (d.in_bytes + d.out_bytes) / machine.hbm_bw
+        return max(compute_s, memory_s) + d.groups * _STEP_OVERHEAD_S
+
+
+def plan_ssd(desc: SsdChunkDescriptor,
+             machine: MachineModel = DEFAULT_MACHINE) -> SsdChunkPlan:
+    isz = jnp.dtype(desc.dtype).itemsize
+    per_step = (2 * desc.q * desc.n + desc.q * desc.q + 2 * desc.q * desc.p) * isz
+    per_step += desc.q * desc.q * 4  # fp32 score scratch
+    return SsdChunkPlan(desc, fits_vmem=per_step <= machine.vmem_bytes // 2)

@@ -1,0 +1,112 @@
+"""Process-wide engine configuration: backend, interpret mode, machine.
+
+The paper's dispatcher has one piece of ambient state — which lowering
+serves a request (generated SME kernel vs vendor BLAS).  Ours has three:
+
+  * ``backend``   — "xla" (dot_general, the vendor-BLAS analogue; default
+                    in CPU containers) or "pallas" (the paper's engine:
+                    descriptor → plan → generated kernel);
+  * ``interpret`` — run Pallas kernels in interpret mode (the CPU
+                    correctness path) or compiled (TPU hardware);
+  * ``machine``   — the :class:`~repro.core.machine.MachineModel` that
+                    parameterizes every tile planner (the "Table I"
+                    constants).
+
+Configuration is layered: a process-wide default (``configure``) under a
+thread-local override stack (``use`` context manager), so a serving thread
+can pin ``backend="pallas"`` without racing a training thread.  This module
+replaces the private ``_state`` that used to live in ``core.matmul`` and
+the ``interpret=`` kwarg that every ``kernels/*/ops.py`` entry point
+threaded through.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+from .machine import DEFAULT_MACHINE, MachineModel, get_machine
+
+BACKENDS = ("xla", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """One immutable snapshot of the engine's ambient configuration."""
+
+    backend: str = "xla"
+    interpret: bool = True
+    machine: MachineModel = DEFAULT_MACHINE
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+
+    def replace(self, **kw) -> "EngineConfig":
+        kw = {k: v for k, v in kw.items() if v is not None}
+        if isinstance(kw.get("machine"), str):
+            kw["machine"] = get_machine(kw["machine"])
+        return dataclasses.replace(self, **kw)
+
+
+_DEFAULT = EngineConfig()
+_default_lock = threading.Lock()
+_tls = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_tls, "stack"):
+        _tls.stack = []
+    return _tls.stack
+
+
+def get_config() -> EngineConfig:
+    """Effective config: innermost thread-local override, else the global."""
+    stack = _stack()
+    return stack[-1] if stack else _DEFAULT
+
+
+def configure(*, backend: Optional[str] = None,
+              interpret: Optional[bool] = None,
+              machine=None) -> EngineConfig:
+    """Mutate the process-wide default (all threads without an override)."""
+    global _DEFAULT
+    with _default_lock:
+        _DEFAULT = _DEFAULT.replace(backend=backend, interpret=interpret,
+                                    machine=machine)
+        return _DEFAULT
+
+
+@contextlib.contextmanager
+def use(*, backend: Optional[str] = None, interpret: Optional[bool] = None,
+        machine=None):
+    """Thread-local override: ``with use(backend="pallas"): ...``."""
+    stack = _stack()
+    stack.append(get_config().replace(backend=backend, interpret=interpret,
+                                      machine=machine))
+    try:
+        yield stack[-1]
+    finally:
+        stack.pop()
+
+
+# ---------------------------------------------------------------------------
+# Back-compat shims (the pre-engine ``core.matmul`` surface)
+# ---------------------------------------------------------------------------
+
+def set_backend(backend: str, interpret: Optional[bool] = None):
+    """Legacy global setter — prefer :func:`configure` / :func:`use`."""
+    configure(backend=backend, interpret=interpret)
+
+
+def get_backend() -> str:
+    return get_config().backend
+
+
+@contextlib.contextmanager
+def backend(name: str, interpret: Optional[bool] = None):
+    """Legacy context manager — alias of :func:`use`."""
+    with use(backend=name, interpret=interpret) as cfg:
+        yield cfg

@@ -1,10 +1,17 @@
-"""GEMM descriptors — the LIBXSMM ``libxsmm_gemm_descriptor`` analogue.
+"""Kernel descriptors — the LIBXSMM ``libxsmm_gemm_descriptor`` analogue.
 
 The paper's JIT code generator "hardwires matrix sizes, datatypes, and
-leading dimensions when generating a matrix kernel" (§IV).  A
-``GemmDescriptor`` carries exactly that metadata; it is the hashable key of
-the JIT cache (``repro.core.jit_cache``) and the input of the blocking
-planner (``repro.core.blocking``).
+leading dimensions when generating a matrix kernel" (§IV).  A descriptor
+carries exactly that metadata; it is the hashable key of both engine
+caches (plan + kernel, see ``repro.core.engine``) and the input of the
+blocking planners (``repro.core.blocking``).
+
+Every kernel family the engine dispatches — dense GEMM, flash attention,
+ragged grouped GEMM, the SSD intra-chunk ladder, and tile transpose — has
+one frozen-dataclass descriptor here, all deriving from
+:class:`KernelDescriptor`.  Each carries flops/bytes accounting so
+``launch/roofline.py`` and ``launch/hlo_cost.py`` can cost any kernel in
+the system, not just GEMMs (DESIGN.md §2).
 
 Layout semantics.  JAX arrays are logically row-major.  We express the
 paper's two studied layouts as contraction forms:
@@ -32,11 +39,55 @@ from .machine import canonical_dtype
 
 LAYOUTS = ("nn", "nt")
 EPILOGUES = (None, "bias", "gelu", "silu", "relu", "bias_gelu", "bias_silu")
+BIAS_EPILOGUES = tuple(e for e in EPILOGUES if e and e.startswith("bias"))
+
+
+def check_bias(epilogue, bias) -> None:
+    """Shared precondition: a bias-consuming epilogue needs a bias operand."""
+    if epilogue in BIAS_EPILOGUES and bias is None:
+        raise ValueError(
+            f"epilogue {epilogue!r} requires a bias operand, got bias=None")
 
 
 @dataclasses.dataclass(frozen=True)
-class GemmDescriptor:
+class KernelDescriptor:
+    """Base of every per-family descriptor.
+
+    Subclasses are frozen dataclasses — hashable and equality-comparable by
+    value — and set ``family`` to the engine registry name.  The engine
+    derives both cache keys (plan and kernel) from :meth:`cache_key`, so no
+    family hand-writes a key tuple.
+    """
+
+    family = "abstract"
+
+    def cache_key(self) -> tuple:
+        return (self.family,) + dataclasses.astuple(self)
+
+    # flops/bytes accounting — subclasses override; base gives the shared
+    # derived metric.
+    @property
+    def flops(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def in_bytes(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def out_bytes(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.in_bytes + self.out_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmDescriptor(KernelDescriptor):
     """Hashable metadata fully specifying one generated GEMM kernel."""
+
+    family = "gemm"
 
     m: int
     n: int
@@ -111,10 +162,6 @@ class GemmDescriptor:
         nb = max(1, self.batch)
         return nb * self.m * self.n * jnp.dtype(self.out_dtype).itemsize
 
-    @property
-    def arithmetic_intensity(self) -> float:
-        return self.flops / max(1, self.in_bytes + self.out_bytes)
-
     def b_shape(self) -> tuple:
         core = (self.k, self.n) if self.layout == "nn" else (self.n, self.k)
         return (self.batch, *core) if self.batch else core
@@ -126,3 +173,165 @@ class GemmDescriptor:
     def c_shape(self) -> tuple:
         core = (self.m, self.n)
         return (self.batch, *core) if self.batch else core
+
+
+# ---------------------------------------------------------------------------
+# Non-GEMM families
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlashDescriptor(KernelDescriptor):
+    """Flash-attention forward: (BH, sq, d) x (BH, sk, d)^2 -> (BH, sq, d)."""
+
+    family = "flash_attention"
+
+    batch_heads: int
+    sq: int
+    sk: int
+    d: int
+    causal: bool = True
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        for v in (self.batch_heads, self.sq, self.sk, self.d):
+            if v <= 0:
+                raise ValueError(f"flash dims must be positive, got {self}")
+
+    @classmethod
+    def from_operands(cls, q, k, *, causal=True):
+        b, sq, h, d = q.shape
+        return cls(batch_heads=b * h, sq=sq, sk=k.shape[1], d=d,
+                   causal=causal, dtype=canonical_dtype(q.dtype))
+
+    @property
+    def flops(self) -> int:
+        # QK^T and PV are each 2*sq*sk*d MACs; causal masking halves the
+        # useful score area (the kernel skips fully-masked tiles).
+        full = 4 * self.batch_heads * self.sq * self.sk * self.d
+        return full // 2 if self.causal else full
+
+    @property
+    def in_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        return self.batch_heads * (self.sq + 2 * self.sk) * self.d * isz
+
+    @property
+    def out_bytes(self) -> int:
+        return self.batch_heads * self.sq * self.d * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedGemmDescriptor(KernelDescriptor):
+    """Ragged grouped GEMM (MoE expert compute): (T, K) x (E, K, N) -> (T, N).
+
+    ``t`` is the static row count; the per-group split (``group_sizes``) is
+    a runtime operand and deliberately NOT part of the descriptor — the
+    kernel is shape-specialized, the routing is data (DESIGN.md §2).
+    """
+
+    family = "grouped_gemm"
+
+    t: int
+    k: int
+    n: int
+    num_experts: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        for v in (self.t, self.k, self.n, self.num_experts):
+            if v <= 0:
+                raise ValueError(f"grouped-GEMM dims must be positive, got {self}")
+
+    @classmethod
+    def from_operands(cls, x, w):
+        t, k = x.shape
+        e, kw, n = w.shape
+        if kw != k:
+            raise ValueError(f"contraction mismatch: x{x.shape} vs w{w.shape}")
+        return cls(t=t, k=k, n=n, num_experts=e,
+                   dtype=canonical_dtype(x.dtype))
+
+    @property
+    def flops(self) -> int:
+        # Each row contracts against exactly one expert's (K, N) panel.
+        return 2 * self.t * self.k * self.n
+
+    @property
+    def in_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        return (self.t * self.k + self.num_experts * self.k * self.n) * isz
+
+    @property
+    def out_bytes(self) -> int:
+        return self.t * self.n * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class SsdChunkDescriptor(KernelDescriptor):
+    """SSD intra-chunk ladder: (G,Q,n) x2, (G,Q,Q), (G,Q,p) -> (G,Q,p)."""
+
+    family = "ssd_chunk"
+
+    groups: int
+    q: int
+    n: int
+    p: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        for v in (self.groups, self.q, self.n, self.p):
+            if v <= 0:
+                raise ValueError(f"SSD dims must be positive, got {self}")
+
+    @classmethod
+    def from_operands(cls, c_mat, xdt):
+        g, q, n = c_mat.shape
+        return cls(groups=g, q=q, n=n, p=xdt.shape[-1],
+                   dtype=canonical_dtype(xdt.dtype))
+
+    @property
+    def flops(self) -> int:
+        # GEMM 1 (Q,n)x(n,Q) + GEMM 2 (Q,Q)x(Q,p), per group.
+        return 2 * self.groups * self.q * self.q * (self.n + self.p)
+
+    @property
+    def in_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        per_g = 2 * self.q * self.n + self.q * self.q + self.q * self.p
+        return self.groups * per_g * isz
+
+    @property
+    def out_bytes(self) -> int:
+        return self.groups * self.q * self.p * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class TransposeDescriptor(KernelDescriptor):
+    """Blocked 2-D transpose: (rows, cols) -> (cols, rows)."""
+
+    family = "transpose"
+
+    rows: int
+    cols: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.rows <= 0 or self.cols <= 0:
+            raise ValueError(f"transpose dims must be positive, got {self}")
+
+    @classmethod
+    def from_operands(cls, x):
+        rows, cols = x.shape
+        return cls(rows=rows, cols=cols, dtype=canonical_dtype(x.dtype))
+
+    @property
+    def flops(self) -> int:
+        return 0  # pure data movement
+
+    @property
+    def in_bytes(self) -> int:
+        return self.rows * self.cols * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def out_bytes(self) -> int:
+        return self.in_bytes

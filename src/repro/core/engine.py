@@ -1,0 +1,186 @@
+"""Descriptor-driven kernel engine — registry, planning and dispatch.
+
+The paper's pipeline is descriptor -> blocking plan -> generated kernel ->
+dispatch cache (the LIBXSMM architecture, §IV).  This module generalizes
+that pipeline from the dense-GEMM family to every kernel family in the
+system.  A family is registered with two callables:
+
+  * ``planner(desc, machine) -> plan`` — machine-model-driven tile
+    selection (``repro.core.blocking``);
+  * ``execute(desc, plan, *operands, interpret=...) -> result`` — runs the
+    (cached) shape-specialized kernel build for that plan.
+
+``dispatch(desc, *operands)`` is the single entry point: it resolves the
+ambient :mod:`~repro.core.config`, serves the plan from an LRU plan cache
+(planning used to re-run on *every* call — only kernel builds were
+memoized), and invokes the family executor, which in turn serves kernel
+builds from the LRU kernel cache.  Both caches key off
+``desc.cache_key()`` — no family hand-writes a cache-key tuple — and both
+expose per-family hit/miss/eviction stats (``stats()``).
+
+Families self-register at import time; ``dispatch`` lazily imports the
+owning ``kernels/<family>/ops`` module on first use, so ``repro.core``
+never statically depends on ``repro.kernels`` (DESIGN.md §1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import threading
+from typing import Any, Callable, Dict, Optional
+
+from .config import get_config
+from .descriptor import KernelDescriptor
+from .jit_cache import GLOBAL_KERNEL_CACHE, LruCache
+from .machine import MachineModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    """One registered kernel family."""
+
+    name: str
+    planner: Callable[[KernelDescriptor, MachineModel], Any]
+    execute: Callable[..., Any]  # (desc, plan, *operands, interpret=...)
+
+
+_REGISTRY: Dict[str, Family] = {}
+_registry_lock = threading.Lock()
+
+# family name -> module that registers it (imported lazily on first use)
+_FAMILY_MODULES = {
+    "gemm": "repro.kernels.gemm.ops",
+    "flash_attention": "repro.kernels.flash_attention.ops",
+    "grouped_gemm": "repro.kernels.grouped_gemm.ops",
+    "ssd_chunk": "repro.kernels.ssd_chunk.ops",
+    "transpose": "repro.kernels.transpose.ops",
+}
+
+# desc -> plan.  Sized for the shape population of a whole model zoo; a
+# plan is a few hundred bytes, so 64k entries is still tiny.
+PLAN_CACHE = LruCache(max_entries=65536)
+
+# Planner invocation counter per family (distinct from plan-cache misses
+# only when callers bypass the cache with an explicit plan).
+_plan_calls: Dict[str, int] = {}
+_plan_calls_lock = threading.Lock()
+
+
+def register_family(name: str, planner, execute) -> Family:
+    """Register (or replace) a kernel family.  Called at ops-module import."""
+    fam = Family(name=name, planner=planner, execute=execute)
+    with _registry_lock:
+        _REGISTRY[name] = fam
+    return fam
+
+
+def get_family(name: str) -> Family:
+    fam = _REGISTRY.get(name)
+    if fam is None:
+        module = _FAMILY_MODULES.get(name)
+        if module is None:
+            raise KeyError(f"unknown kernel family {name!r}; "
+                           f"known: {sorted(_FAMILY_MODULES)}")
+        importlib.import_module(module)  # side effect: register_family()
+        fam = _REGISTRY.get(name)
+        if fam is None:
+            raise RuntimeError(f"module {module} did not register family "
+                               f"{name!r}")
+    return fam
+
+
+def families() -> Dict[str, Family]:
+    with _registry_lock:
+        return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Planning
+# ---------------------------------------------------------------------------
+
+def plan_for(desc: KernelDescriptor,
+             machine: Optional[MachineModel] = None) -> Any:
+    """Plan cache lookup: (descriptor, machine) -> family plan."""
+    fam = get_family(desc.family)
+    machine = machine or get_config().machine
+    key = desc.cache_key() + ("plan", machine.name)
+
+    def build_plan():
+        with _plan_calls_lock:
+            _plan_calls[desc.family] = _plan_calls.get(desc.family, 0) + 1
+        return fam.planner(desc, machine)
+
+    return PLAN_CACHE.get_or_build(key, build_plan)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def dispatch(desc: KernelDescriptor, *operands, plan: Any = None,
+             interpret: Optional[bool] = None, **kw) -> Any:
+    """Run one kernel request through the engine.
+
+    ``plan=None`` consults the plan cache (normal path); an explicit plan
+    (benchmark sweeps, tests pinning tile sizes) bypasses it.  ``interpret``
+    defaults from the ambient config — no per-call plumbing.
+    """
+    fam = get_family(desc.family)
+    cfg = get_config()
+    if plan is None:
+        plan = plan_for(desc, cfg.machine)
+    if interpret is None:
+        interpret = cfg.interpret
+    return fam.execute(desc, plan, *operands, interpret=interpret, **kw)
+
+
+def build_cached(key: tuple, builder: Callable[[], Any]) -> Any:
+    """Kernel-cache helper for family executors.
+
+    ``key`` must be descriptor-derived (``desc.cache_key() + knobs``) so
+    the first element names the family for the per-family stats.
+    """
+    return GLOBAL_KERNEL_CACHE.get_or_build(key, builder)
+
+
+# ---------------------------------------------------------------------------
+# Observability
+# ---------------------------------------------------------------------------
+
+def stats() -> Dict[str, Dict[str, int]]:
+    """Per-family engine stats across both cache layers.
+
+    {family: {plan_hits, plan_misses, plan_evictions, planner_calls,
+              kernel_hits, kernel_misses, kernel_evictions}}
+    """
+    out: Dict[str, Dict[str, int]] = {}
+
+    def bucket(fam: str) -> Dict[str, int]:
+        return out.setdefault(fam, {
+            "plan_hits": 0, "plan_misses": 0, "plan_evictions": 0,
+            "planner_calls": 0,
+            "kernel_hits": 0, "kernel_misses": 0, "kernel_evictions": 0,
+        })
+
+    for fam, c in PLAN_CACHE.family_stats().items():
+        b = bucket(fam)
+        b["plan_hits"] = c["hits"]
+        b["plan_misses"] = c["misses"]
+        b["plan_evictions"] = c["evictions"]
+    with _plan_calls_lock:
+        for fam, n in _plan_calls.items():
+            bucket(fam)["planner_calls"] = n
+    for fam, c in GLOBAL_KERNEL_CACHE.family_stats().items():
+        b = bucket(fam)
+        b["kernel_hits"] = c["hits"]
+        b["kernel_misses"] = c["misses"]
+        b["kernel_evictions"] = c["evictions"]
+    return out
+
+
+def reset_stats():
+    """Clear both caches and all counters (test isolation)."""
+    PLAN_CACHE.clear()
+    GLOBAL_KERNEL_CACHE.clear()
+    with _plan_calls_lock:
+        _plan_calls.clear()

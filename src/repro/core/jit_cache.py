@@ -2,10 +2,16 @@
 
 LIBXSMM generates a kernel per ``libxsmm_gemm_descriptor`` and serves later
 requests from a code registry.  Here, "code generation" is building the
-shape-specialized ``pallas_call`` executors for every region of a
-:class:`BlockingPlan`; this registry memoizes (descriptor, plan-knobs) ->
-built executor so models with thousands of identical small GEMMs pay the
-planning/build cost once per shape.
+shape-specialized ``pallas_call`` executors for every region of a plan;
+this registry memoizes (descriptor-derived key) -> built executor so models
+with thousands of identical small GEMMs pay the planning/build cost once
+per shape.
+
+The cache is a true LRU (hits refresh recency; eviction removes the
+least-recently-used entry) and keeps per-family hit/miss/eviction counters:
+every key is a tuple whose first element is the kernel-family name (the
+engine derives keys from ``KernelDescriptor.cache_key()``), which is also
+how the stats are bucketed.
 
 (``jax.jit`` separately caches *compiled* artifacts by aval; this cache
 avoids re-running the planner and re-tracing kernel builds, and gives us
@@ -13,45 +19,88 @@ the hit/miss observability the paper's dispatch layer has.)
 """
 from __future__ import annotations
 
+import collections
 import threading
 from typing import Any, Callable, Dict, Hashable, Tuple
 
 
-class KernelCache:
+def _family_of(key: Hashable) -> str:
+    if isinstance(key, tuple) and key and isinstance(key[0], str):
+        return key[0]
+    return "other"
+
+
+class LruCache:
+    """Thread-safe LRU mapping with per-family hit/miss/eviction stats.
+
+    Shared by the engine's two layers: plan cache (descriptor -> plan) and
+    kernel cache (descriptor+plan knobs -> built executor).
+    """
+
     def __init__(self, max_entries: int = 4096):
         self._lock = threading.Lock()
-        self._store: Dict[Hashable, Any] = {}
+        self._store: "collections.OrderedDict[Hashable, Any]" = \
+            collections.OrderedDict()
         self._max = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self._by_family: Dict[str, Dict[str, int]] = {}
+
+    def _bucket(self, family: str) -> Dict[str, int]:
+        return self._by_family.setdefault(
+            family, {"hits": 0, "misses": 0, "evictions": 0})
 
     def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
         with self._lock:
             if key in self._store:
+                self._store.move_to_end(key)  # refresh recency
                 self.hits += 1
+                self._bucket(_family_of(key))["hits"] += 1
                 return self._store[key]
         # Build outside the lock (builders trace JAX code and can be slow).
         value = builder()
         with self._lock:
             if key not in self._store:
-                if len(self._store) >= self._max:
-                    # Simple FIFO eviction; shape populations in one model
-                    # are tiny compared to max_entries.
-                    self._store.pop(next(iter(self._store)))
+                while len(self._store) >= self._max:
+                    evicted_key, _ = self._store.popitem(last=False)
+                    self.evictions += 1
+                    self._bucket(_family_of(evicted_key))["evictions"] += 1
                 self._store[key] = value
                 self.misses += 1
+                self._bucket(_family_of(key))["misses"] += 1
             else:
+                # Raced with another builder thread; theirs won.
+                self._store.move_to_end(key)
                 self.hits += 1
+                self._bucket(_family_of(key))["hits"] += 1
             return self._store[key]
 
     def stats(self) -> Tuple[int, int, int]:
         with self._lock:
             return self.hits, self.misses, len(self._store)
 
+    def family_stats(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {fam: dict(c) for fam, c in self._by_family.items()}
+
+    def keys(self) -> list:
+        """Current keys in LRU order (least-recently-used first)."""
+        with self._lock:
+            return list(self._store)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
     def clear(self):
         with self._lock:
             self._store.clear()
-            self.hits = self.misses = 0
+            self.hits = self.misses = self.evictions = 0
+            self._by_family.clear()
 
 
-GLOBAL_KERNEL_CACHE = KernelCache()
+# Back-compat name: pre-engine code imported ``KernelCache``.
+KernelCache = LruCache
+
+GLOBAL_KERNEL_CACHE = LruCache()

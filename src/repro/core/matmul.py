@@ -13,47 +13,15 @@ global default flips to "pallas".
 """
 from __future__ import annotations
 
-import contextlib
-import threading
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from .blocking import BlockingPlan, plan_gemm
-from .descriptor import GemmDescriptor
-
-_state = threading.local()
-
-
-def _cfg():
-    if not hasattr(_state, "backend"):
-        _state.backend = "xla"
-        _state.interpret = True
-    return _state
-
-
-def set_backend(backend: str, interpret: Optional[bool] = None):
-    assert backend in ("xla", "pallas")
-    s = _cfg()
-    s.backend = backend
-    if interpret is not None:
-        s.interpret = interpret
-
-
-def get_backend() -> str:
-    return _cfg().backend
-
-
-@contextlib.contextmanager
-def backend(name: str, interpret: Optional[bool] = None):
-    s = _cfg()
-    prev = (s.backend, s.interpret)
-    try:
-        set_backend(name, interpret)
-        yield
-    finally:
-        s.backend, s.interpret = prev
+# Back-compat re-exports: the backend knobs moved to repro.core.config.
+from .config import backend, get_backend, get_config, set_backend  # noqa: F401
+from .descriptor import GemmDescriptor, check_bias
 
 
 def matmul(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
@@ -67,8 +35,9 @@ def matmul(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
     (N, K) | (..., N, K) for "nt".  Leading dims of ``a`` are flattened
     into M when ``b`` is rank-2 (the dense-layer case).
     """
-    be = backend_override or _cfg().backend
+    be = backend_override or get_config().backend
     out_dtype = out_dtype or a.dtype
+    check_bias(epilogue, bias)
 
     if be == "xla":
         # No flattening: dot_general consumes (..., M, K) directly, so
@@ -82,10 +51,12 @@ def matmul(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
         a = a.reshape(-1, a.shape[-1])
         if c is not None:
             c = c.reshape(-1, c.shape[-1])
-    from repro.kernels.gemm.ops import gemm as pallas_gemm
-    out = pallas_gemm(a, b, c, layout=layout, epilogue=epilogue,
-                      bias=bias, out_dtype=out_dtype,
-                      plan=plan, interpret=_cfg().interpret)
+    # Engine path: descriptor -> cached plan -> cached kernel build.
+    from repro.core import engine
+    desc = GemmDescriptor.from_operands(
+        a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
+        out_dtype=out_dtype)
+    out = engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
     if lead is not None:
         out = out.reshape(*lead, out.shape[-1])
     return out

@@ -1,27 +1,49 @@
-"""jit'd wrapper for the flash-attention kernel."""
+"""Flash-attention family: engine-planned block sizes, engine-cached build.
+
+``block_q``/``block_k`` default to the machine-model-driven plan
+(:func:`repro.core.blocking.plan_flash`) — the hardcoded 512s are gone;
+explicit values pin the plan (benchmark sweeps, tests).
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
-from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+import jax
+
+from repro.core import engine
+from repro.core.blocking import FlashPlan, plan_flash
+from repro.core.descriptor import FlashDescriptor
 from repro.kernels.flash_attention.kernel import build_flash_kernel
 
 
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
-                    block_k: int = 512, interpret: bool = True) -> jax.Array:
+def execute(desc: FlashDescriptor, plan: FlashPlan, qf, kf, vf, *,
+            interpret: bool = False) -> jax.Array:
+    key = desc.cache_key() + ("kernel", plan.block_q, plan.block_k, interpret)
+    kernel = engine.build_cached(key, lambda: build_flash_kernel(
+        batch_heads=desc.batch_heads, sq=desc.sq, sk=desc.sk, d=desc.d,
+        block_q=plan.block_q, block_k=plan.block_k, causal=desc.causal,
+        dtype=qf.dtype, interpret=interpret))
+    return kernel(qf, kf, vf)
+
+
+engine.register_family("flash_attention", planner=plan_flash, execute=execute)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None) -> jax.Array:
     """q/k/v: (b, s, h, d) -> (b, s, h, d)."""
     b, sq, h, d = q.shape
     sk = k.shape[1]
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
-    key = ("flash", b * h, sq, sk, d, causal, block_q, block_k,
-           str(q.dtype), interpret)
-    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
-        key, lambda: build_flash_kernel(
-            batch_heads=b * h, sq=sq, sk=sk, d=d, block_q=block_q,
-            block_k=block_k, causal=causal, dtype=q.dtype,
-            interpret=interpret))
-    out = kernel(qf, kf, vf)
+    desc = FlashDescriptor.from_operands(q, k, causal=causal)
+    plan = None
+    if block_q is not None or block_k is not None:
+        # Fill unpinned knobs from the (cached) engine plan.
+        auto = engine.plan_for(desc)
+        plan = FlashPlan(desc, block_q or auto.block_q,
+                         block_k or auto.block_k)
+    out = engine.dispatch(desc, qf, kf, vf, plan=plan)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,9 +1,13 @@
-"""Public jit'd wrapper for the blocked GEMM kernel.
+"""Blocked GEMM — the engine's founding kernel family.
 
 Executes a :class:`repro.core.blocking.BlockingPlan`: each plan region
 becomes one shape-specialized ``pallas_call`` (the paper's "seven
 microkernel executions", Fig 7), whose outputs are assembled into C with
 ``dynamic_update_slice`` — under ``jit`` XLA fuses the assembly.
+
+Registered with :mod:`repro.core.engine` as family ``"gemm"``: planning,
+caching (plan and kernel layers, descriptor-derived keys) and interpret
+policy all live in the engine; this module owns only the lowering.
 
 Edge strategies (benchmarked against each other in fig45_alignment):
 
@@ -20,9 +24,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.blocking import BlockingPlan, plan_gemm, round_up
-from repro.core.descriptor import GemmDescriptor
-from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.core.descriptor import GemmDescriptor, check_bias
 from repro.kernels.gemm.kernel import build_gemm_kernel
 
 
@@ -35,8 +39,12 @@ def _region_executor(desc: GemmDescriptor, region, bk: int, edge: str,
         rows_p, cols_p, k_p = round_up(rows, bm), round_up(cols, bn), round_up(k, bk)
     else:
         rows_p, cols_p, k_p = rows, cols, k
-    key = ("gemm", rows_p, cols_p, k_p, bm, bn, bk, desc.layout, desc.epilogue,
-           desc.accumulate, desc.in_dtype, desc.out_dtype, edge, interpret)
+    # Key on the region build inputs only — NOT the whole-problem (m, n)
+    # — so descriptors of different shapes share identical region/corner
+    # kernels (the cross-shape reuse the kernel cache exists for).
+    key = (desc.family, "region", rows_p, cols_p, k_p, bm, bn, bk,
+           desc.layout, desc.epilogue, desc.accumulate, desc.in_dtype,
+           desc.out_dtype, interpret)
 
     def builder():
         return build_gemm_kernel(
@@ -46,7 +54,7 @@ def _region_executor(desc: GemmDescriptor, region, bk: int, edge: str,
             in_dtype=jnp.dtype(desc.in_dtype), out_dtype=jnp.dtype(desc.out_dtype),
             interpret=interpret)
 
-    kernel = GLOBAL_KERNEL_CACHE.get_or_build(key, builder)
+    kernel = engine.build_cached(key, builder)
 
     def run(a_r, b_r, bias_r, c_r):
         if edge == "pad":
@@ -68,8 +76,12 @@ def _region_executor(desc: GemmDescriptor, region, bk: int, edge: str,
 
 
 def gemm_region(a, b, region, desc: GemmDescriptor, bk: int,
-                bias=None, c=None, edge: str = "mask", interpret: bool = True):
+                bias=None, c=None, edge: str = "mask",
+                interpret: Optional[bool] = None):
     """Run one region's microkernel on the corresponding operand slices."""
+    if interpret is None:
+        from repro.core.config import get_config
+        interpret = get_config().interpret
     r = region
     a_r = jax.lax.dynamic_slice(a, (r.row0, 0), (r.rows, desc.k))
     if desc.layout == "nn":
@@ -99,23 +111,36 @@ def _gemm2d(a, b, plan: BlockingPlan, bias, c, interpret: bool):
     return out
 
 
-def gemm(a, b, c: Optional[jax.Array] = None, *, layout: str = "nn",
-         epilogue: Optional[str] = None, bias: Optional[jax.Array] = None,
-         out_dtype=None, edge: str = "mask", plan: Optional[BlockingPlan] = None,
-         heterogeneous: bool = True, interpret: bool = True) -> jax.Array:
-    """Planned, shape-specialized (batched) GEMM.
-
-    ``a``: (..., M, K); ``b``: (..., K, N) for layout "nn" or (..., N, K)
-    for "nt"; optional ``c`` accumulator of shape (..., M, N).
-    """
-    desc = GemmDescriptor.from_operands(
-        a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
-        out_dtype=out_dtype or a.dtype, edge=edge)
-    if plan is None:
-        plan = plan_gemm(desc, heterogeneous=heterogeneous)
+def execute(desc: GemmDescriptor, plan: BlockingPlan, a, b, *,
+            bias=None, c=None, interpret: bool = False) -> jax.Array:
+    """Engine executor: run one planned (possibly batched) GEMM."""
+    check_bias(desc.epilogue, bias)
     f = functools.partial(_gemm2d, plan=plan, interpret=interpret)
     if desc.batch:
         def batched(a_, b_, c_):
             return f(a_, b_, bias=bias, c=c_)
         return jax.vmap(batched, in_axes=(0, 0, 0 if c is not None else None))(a, b, c)
     return f(a, b, bias=bias, c=c)
+
+
+engine.register_family("gemm", planner=plan_gemm, execute=execute)
+
+
+def gemm(a, b, c: Optional[jax.Array] = None, *, layout: str = "nn",
+         epilogue: Optional[str] = None, bias: Optional[jax.Array] = None,
+         out_dtype=None, edge: str = "mask", plan: Optional[BlockingPlan] = None,
+         heterogeneous: bool = True) -> jax.Array:
+    """Planned, shape-specialized (batched) GEMM via the engine.
+
+    ``a``: (..., M, K); ``b``: (..., K, N) for layout "nn" or (..., N, K)
+    for "nt"; optional ``c`` accumulator of shape (..., M, N).  Interpret
+    policy comes from :mod:`repro.core.config`.
+    """
+    desc = GemmDescriptor.from_operands(
+        a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
+        out_dtype=out_dtype or a.dtype, edge=edge)
+    if plan is None and not heterogeneous:
+        # Non-default planner knob: plan directly, bypassing the plan cache
+        # (the cache serves only the canonical planner configuration).
+        plan = plan_gemm(desc, heterogeneous=False)
+    return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)

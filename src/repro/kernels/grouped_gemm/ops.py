@@ -1,8 +1,12 @@
-"""jit'd wrapper for the ragged grouped GEMM (MoE expert compute).
+"""Ragged grouped GEMM family (MoE expert compute).
 
 Takes unsorted per-row expert assignments OR pre-sorted rows + group
 sizes.  Pads each group to the row-block multiple (bm), builds the
 block→expert map, and dispatches the scalar-prefetch kernel.
+
+Tile sizes (bm, bk, bn) come from the engine's machine-model planner
+(:func:`repro.core.blocking.plan_grouped`) — the hardcoded 128/512/256
+are gone; explicit kwargs pin the plan.
 """
 from __future__ import annotations
 
@@ -11,7 +15,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.core import engine
+from repro.core.blocking import GroupedGemmPlan, plan_grouped
+from repro.core.descriptor import GroupedGemmDescriptor
 from repro.kernels.grouped_gemm.kernel import build_grouped_gemm_kernel
 
 
@@ -47,30 +53,44 @@ def scatter_rows(x_sorted_by_group, group_sizes, offsets, bm, t_padded):
     return out.at[dest].set(x_sorted_by_group), dest
 
 
+def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
+            group_sizes, *, interpret: bool = False) -> jax.Array:
+    bm, bk, bn = plan.bm, plan.bk, plan.bn
+    t_padded = plan.t_padded
+    offsets, block_expert, nrows = plan_groups(
+        group_sizes, desc.num_experts, bm, t_padded)
+    x_padded, dest = scatter_rows(x, group_sizes, offsets, bm, t_padded)
+
+    key = desc.cache_key() + ("kernel", bm, bk, bn, interpret)
+    kernel = engine.build_cached(key, lambda: build_grouped_gemm_kernel(
+        t_padded=t_padded, k=desc.k, n=desc.n,
+        num_experts=desc.num_experts, bm=bm, bk=bk, bn=bn,
+        in_dtype=x.dtype, out_dtype=x.dtype, interpret=interpret))
+    out_padded = kernel(x_padded, w, block_expert, nrows)
+    # gather back to the caller's (sorted, unpadded) row order; rows past
+    # sum(group_sizes) belong to no group -> zero (matches ref).
+    total = jnp.sum(group_sizes.astype(jnp.int32))
+    valid = (jnp.arange(desc.t, dtype=jnp.int32) < total)[:, None]
+    return jnp.where(valid, out_padded[dest], 0).astype(x.dtype)
+
+
+engine.register_family("grouped_gemm", planner=plan_grouped, execute=execute)
+
+
 def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
-                 bm: int = 128, bk: int = 512, bn: int = 256,
-                 interpret: bool = True) -> jax.Array:
-    """Ragged grouped GEMM.
+                 bm: Optional[int] = None, bk: Optional[int] = None,
+                 bn: Optional[int] = None) -> jax.Array:
+    """Ragged grouped GEMM via the engine.
 
     x: (T, K) rows sorted by group; w: (E, K, N); group_sizes: (E,)
     (dynamic, sum <= T).  Returns (T, N): row i multiplied by its group's
     weight; rows beyond sum(group_sizes) are zero.
     """
-    t, kdim = x.shape
-    e, _, n = w.shape
-    t_padded = ((t + bm - 1) // bm) * bm + e * bm  # room for per-group pad
-    offsets, block_expert, nrows = plan_groups(group_sizes, e, bm, t_padded)
-    x_padded, dest = scatter_rows(x, group_sizes, offsets, bm, t_padded)
-
-    key = ("grouped_gemm", t_padded, kdim, n, e, bm, bk, bn,
-           str(x.dtype), interpret)
-    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
-        key, lambda: build_grouped_gemm_kernel(
-            t_padded=t_padded, k=kdim, n=n, num_experts=e, bm=bm, bk=bk,
-            bn=bn, in_dtype=x.dtype, out_dtype=x.dtype, interpret=interpret))
-    out_padded = kernel(x_padded, w, block_expert, nrows)
-    # gather back to the caller's (sorted, unpadded) row order; rows past
-    # sum(group_sizes) belong to no group -> zero (matches ref).
-    total = jnp.sum(group_sizes.astype(jnp.int32))
-    valid = (jnp.arange(t, dtype=jnp.int32) < total)[:, None]
-    return jnp.where(valid, out_padded[dest], 0).astype(x.dtype)
+    desc = GroupedGemmDescriptor.from_operands(x, w)
+    plan = None
+    if bm is not None or bk is not None or bn is not None:
+        # Fill unpinned knobs from the (cached) engine plan.
+        auto = engine.plan_for(desc)
+        plan = GroupedGemmPlan(desc, bm or auto.bm, bk or auto.bk,
+                               bn or auto.bn)
+    return engine.dispatch(desc, x, w, group_sizes, plan=plan)

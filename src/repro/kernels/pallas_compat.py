@@ -1,0 +1,12 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+The TPU compiler-params dataclass was renamed across jax releases
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this
+container ships so the kernel builders are version-agnostic.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _ssd_chunk_body(c_ref, b_ref, l_ref, x_ref, o_ref, s_ref):
     c = c_ref[0]          # (Q, n)
@@ -48,7 +50,7 @@ def build_ssd_chunk_kernel(*, groups: int, q: int, n: int, p: int,
         out_specs=pl.BlockSpec((1, q, p), lambda g: (g, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((groups, q, p), dtype),
         scratch_shapes=[pltpu.VMEM((q, q), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

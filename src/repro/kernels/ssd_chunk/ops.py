@@ -1,18 +1,27 @@
-"""jit'd wrapper for the SSD intra-chunk kernel."""
+"""SSD intra-chunk family: engine-dispatched small-GEMM ladder."""
 from __future__ import annotations
 
 import jax
 
-from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+from repro.core import engine
+from repro.core.blocking import SsdChunkPlan, plan_ssd
+from repro.core.descriptor import SsdChunkDescriptor
 from repro.kernels.ssd_chunk.kernel import build_ssd_chunk_kernel
 
 
-def ssd_chunk_diag(c_mat, b_mat, l_mat, xdt, *, interpret: bool = True):
-    """Batched intra-chunk SSD: (G,Q,n)x2, (G,Q,Q), (G,Q,p) -> (G,Q,p)."""
-    g, q, n = c_mat.shape
-    p = xdt.shape[-1]
-    key = ("ssd_chunk", g, q, n, p, str(xdt.dtype), interpret)
-    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
-        key, lambda: build_ssd_chunk_kernel(
-            groups=g, q=q, n=n, p=p, dtype=xdt.dtype, interpret=interpret))
+def execute(desc: SsdChunkDescriptor, plan: SsdChunkPlan, c_mat, b_mat,
+            l_mat, xdt, *, interpret: bool = False) -> jax.Array:
+    key = desc.cache_key() + ("kernel", interpret)
+    kernel = engine.build_cached(key, lambda: build_ssd_chunk_kernel(
+        groups=desc.groups, q=desc.q, n=desc.n, p=desc.p,
+        dtype=xdt.dtype, interpret=interpret))
     return kernel(c_mat, b_mat, l_mat, xdt)
+
+
+engine.register_family("ssd_chunk", planner=plan_ssd, execute=execute)
+
+
+def ssd_chunk_diag(c_mat, b_mat, l_mat, xdt):
+    """Batched intra-chunk SSD: (G,Q,n)x2, (G,Q,Q), (G,Q,p) -> (G,Q,p)."""
+    desc = SsdChunkDescriptor.from_operands(c_mat, xdt)
+    return engine.dispatch(desc, c_mat, b_mat, l_mat, xdt)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _transpose_body(x_ref, o_ref, scratch_ref):
     # Stage the tile through scratch (the ZA tile), then emit its transpose.
@@ -43,7 +45,7 @@ def build_transpose_kernel(rows: int, cols: int, bt_r: int = 256,
         out_specs=pl.BlockSpec((bt_c, bt_r), lambda i, j: (j, i)),
         out_shape=jax.ShapeDtypeStruct((cols, rows), dtype),
         scratch_shapes=[pltpu.VMEM((bt_r, bt_c), dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

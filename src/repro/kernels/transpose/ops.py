@@ -1,19 +1,35 @@
-"""jit'd wrapper for the tile-transpose kernel."""
+"""Tile-transpose family: engine-planned tile edge, engine-cached build."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
-from repro.core.jit_cache import GLOBAL_KERNEL_CACHE
+import jax
+
+from repro.core import engine
+from repro.core.blocking import TransposePlan, plan_transpose
+from repro.core.descriptor import TransposeDescriptor
 from repro.kernels.transpose.kernel import build_transpose_kernel
 
 
-def transpose(x: jax.Array, *, bt: int = 256, interpret: bool = True) -> jax.Array:
-    """Blocked 2-D (or batched) transpose through VMEM scratch tiles."""
-    if x.ndim == 3:
-        return jax.vmap(lambda xx: transpose(xx, bt=bt, interpret=interpret))(x)
-    rows, cols = x.shape
-    key = ("transpose", rows, cols, bt, str(x.dtype), interpret)
-    kernel = GLOBAL_KERNEL_CACHE.get_or_build(
-        key, lambda: build_transpose_kernel(rows, cols, bt, bt, x.dtype, interpret))
+def execute(desc: TransposeDescriptor, plan: TransposePlan, x, *,
+            interpret: bool = False) -> jax.Array:
+    key = desc.cache_key() + ("kernel", plan.bt, interpret)
+    kernel = engine.build_cached(key, lambda: build_transpose_kernel(
+        desc.rows, desc.cols, plan.bt, plan.bt, x.dtype, interpret))
     return kernel(x)
+
+
+engine.register_family("transpose", planner=plan_transpose, execute=execute)
+
+
+def transpose(x: jax.Array, *, bt: Optional[int] = None) -> jax.Array:
+    """Blocked 2-D (or batched) transpose through VMEM scratch tiles.
+
+    ``bt=None`` takes the machine-model-planned tile edge
+    (:func:`repro.core.blocking.plan_transpose`).
+    """
+    if x.ndim == 3:
+        return jax.vmap(lambda xx: transpose(xx, bt=bt))(x)
+    desc = TransposeDescriptor.from_operands(x)
+    plan = TransposePlan(desc, bt) if bt is not None else None
+    return engine.dispatch(desc, x, plan=plan)

@@ -265,3 +265,17 @@ def analyze(hlo: str) -> dict:
         "collective_bytes": sum(c["bytes"] for c in colls.values()),
         "num_computations": len(comps),
     }
+
+
+def descriptor_cost(desc) -> dict:
+    """Cost record for one engine kernel descriptor, in :func:`analyze`'s
+    schema — lets dry-run tooling merge engine-dispatched kernels (any
+    family, not just GEMMs) with HLO-derived module costs."""
+    return {
+        "flops": float(desc.flops),
+        "bytes": float(desc.in_bytes + desc.out_bytes),
+        "collectives": {c: {"count": 0.0, "bytes": 0.0}
+                        for c in COLLECTIVE_OPS},
+        "collective_bytes": 0.0,
+        "num_computations": 1,
+    }

@@ -25,6 +25,29 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 HBM_BUDGET = 16 * 1024**3
 
 
+def kernel_roofline(desc, machine=TPU_V5E, chips: int = 1) -> dict:
+    """Roofline terms for ONE engine kernel descriptor — any family.
+
+    Every :class:`repro.core.descriptor.KernelDescriptor` carries
+    flops/bytes accounting, so a flash-attention, grouped-GEMM, SSD or
+    transpose request costs through the same machinery as a GEMM.
+    """
+    compute_s = machine.compute_seconds(desc.flops, desc.dtype
+                                        if hasattr(desc, "dtype")
+                                        else desc.in_dtype, chips)
+    memory_s = machine.memory_seconds(desc.in_bytes + desc.out_bytes, chips)
+    dominant = "compute" if compute_s >= memory_s else "memory"
+    return {
+        "family": desc.family,
+        "flops": desc.flops,
+        "bytes": desc.in_bytes + desc.out_bytes,
+        "arithmetic_intensity": desc.arithmetic_intensity,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "dominant": dominant,
+    }
+
+
 def model_flops(rec: dict, cfg, suite) -> float:
     """Analytic useful FLOPs per step, global."""
     n_active = cfg.active_param_count()

@@ -22,6 +22,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import get_config
 from repro.models import common
 from repro.models.rotary import apply_rope
 from repro.runtime.shardlib import current_mesh, shard_activation
@@ -139,6 +140,15 @@ def _causal_mask(q_pos, k_pos, window: Optional[int]):
 def _attention_seq(q, k, v, q_pos, k_pos, window, softcap):
     """Chunked causal attention, linear activation memory in sq."""
     b, sq, h, hd = q.shape
+    # Engine routing: under the pallas backend the plain-causal full-seq
+    # case lowers to the flash-attention kernel family (descriptor-planned
+    # block sizes, engine-cached build).  Windowing, softcap and ragged
+    # q/k stay on the XLA formulation; positions are assumed contiguous
+    # ascending here (true for the train/prefill callers).
+    if (get_config().backend == "pallas" and window is None
+            and not softcap and sq == k.shape[1]):
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=True)
     if sq <= Q_CHUNK:
         return _attend(q, k, v, _causal_mask(q_pos, k_pos, window), softcap)
 

@@ -17,10 +17,28 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import get_config
 from repro.models import common
 
 
 _MAX_BATCH_SHARDS = 32  # pod x data on the largest production mesh
+
+
+def _expert_gemm_grouped(x4, w):
+    """(n, e, cap, k) x (e, k, f) -> (n, e, cap, f) via the engine's
+    ragged grouped-GEMM family.
+
+    The capacity slots are uniform, so the "ragged" split degenerates to
+    E equal groups of n*cap rows — rows sorted by expert after a
+    transpose, exactly the layout the kernel's scalar-prefetch dispatch
+    expects.
+    """
+    from repro.kernels.grouped_gemm import grouped_gemm
+    n, e, cap, k = x4.shape
+    xt = x4.transpose(1, 0, 2, 3).reshape(e * n * cap, k)
+    sizes = jnp.full((e,), n * cap, jnp.int32)
+    out = grouped_gemm(xt, w, sizes)
+    return out.reshape(e, n, cap, -1).transpose(1, 0, 2, 3)
 
 
 def moe_init(rng, cfg):
@@ -116,19 +134,26 @@ def moe_apply(params, cfg, x):
         h_spec = (bd, None, None, "model")
 
     # --- expert compute (batched small GEMMs over the E dim) --------------
+    # Under the pallas backend the three expert GEMMs route through the
+    # engine's grouped-GEMM family (descriptor-planned tiles); the XLA
+    # default keeps the einsum formulation, which partitions under SPMD.
+    if get_config().backend == "pallas":
+        mm = _expert_gemm_grouped
+    else:
+        def mm(x4, w):
+            return jnp.einsum("neck,ekf->necf", x4, w)
     xin = jnp.einsum("ngec,ngd->necd", dispatch, xg)  # (n, e, cap, d)
     xin = shard_activation(xin, xin_spec)
     w_up = common.cast_param(params["w_up"]["w"], dt)
     w_down = common.cast_param(params["w_down"]["w"], dt)
-    up = shard_activation(jnp.einsum("necd,edf->necf", xin, w_up), h_spec)
+    up = shard_activation(mm(xin, w_up), h_spec)
     if cfg.mlp_gated:
         w_gate = common.cast_param(params["w_gate"]["w"], dt)
-        gate = _act(shard_activation(jnp.einsum("necd,edf->necf", xin, w_gate),
-                                     h_spec), cfg.mlp_act)
+        gate = _act(shard_activation(mm(xin, w_gate), h_spec), cfg.mlp_act)
         h = gate * up
     else:
         h = _act(up, cfg.mlp_act)
-    y_slots = jnp.einsum("necf,efd->necd", h, w_down)
+    y_slots = mm(h, w_down)
     y_slots = shard_activation(y_slots, xin_spec)
     y = jnp.einsum("ngec,necd->ngd", combine, y_slots)
     return y.reshape(b, s, d), aux_loss

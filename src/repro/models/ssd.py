@@ -22,6 +22,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import get_config
 from repro.models import common
 
 
@@ -97,12 +98,26 @@ def _ssd_chunked(x, dt, a, b_mat, c_mat, chunk, s0=None):
 
     # ---- intra-chunk (quadratic within chunk: small GEMM ladder) --------
     L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (b, nc, h, Q, Q)
-    # scores: C_i · B_j over state dim, broadcast groups->heads
-    cb = jnp.einsum("bnqgd,bnkgd->bngqk", cc, bc)   # (b, nc, g, Q, Q)
-    cb = jnp.repeat(cb, rep, axis=2)                 # (b, nc, h, Q, Q)
-    w = cb * L
     xdt = xc * dtc[..., None]                        # (b, nc, Q, h, p)
-    y_diag = jnp.einsum("bnhqk,bnkhp->bnqhp", w.astype(x.dtype), xdt)
+    if get_config().backend == "pallas":
+        # Engine routing: every (batch, chunk, head) cell is one group of
+        # the ssd_chunk kernel family — scores, decay mask and the second
+        # GEMM all stay in VMEM (DESIGN.md §4).
+        from repro.kernels.ssd_chunk import ssd_chunk_diag
+        cg = jnp.repeat(cc, rep, axis=3).transpose(0, 1, 3, 2, 4) \
+            .reshape(-1, chunk, n)
+        bg = jnp.repeat(bc, rep, axis=3).transpose(0, 1, 3, 2, 4) \
+            .reshape(-1, chunk, n)
+        lg = L.reshape(-1, chunk, chunk)
+        xg = xdt.transpose(0, 1, 3, 2, 4).reshape(-1, chunk, p)
+        y_diag = ssd_chunk_diag(cg, bg, lg, xg) \
+            .reshape(bsz, nc, h, chunk, p).transpose(0, 1, 3, 2, 4)
+    else:
+        # scores: C_i · B_j over state dim, broadcast groups->heads
+        cb = jnp.einsum("bnqgd,bnkgd->bngqk", cc, bc)   # (b, nc, g, Q, Q)
+        cb = jnp.repeat(cb, rep, axis=2)                 # (b, nc, h, Q, Q)
+        w = cb * L
+        y_diag = jnp.einsum("bnhqk,bnkhp->bnqhp", w.astype(x.dtype), xdt)
 
     # ---- chunk states ----------------------------------------------------
     decay_out = jnp.exp(da_tot[..., None] - da_cs.transpose(0, 1, 3, 2))  # (b,nc,h,Q)

@@ -70,6 +70,10 @@ def sanitize(mesh: Mesh, spec: Sequence, shape: Tuple[int, ...]) -> P:
                             None)
             else:
                 axis = None
+        if isinstance(axis, tuple) and len(axis) == 1:
+            # collapse 1-element composites: newer jax normalizes
+            # P(('a',),) == P('a'), older releases compare unequal
+            axis = axis[0]
         out.append(axis)
     return P(*out)
 

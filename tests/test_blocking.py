@@ -1,6 +1,16 @@
-"""Planner unit + property tests (§IV-B reproduction invariants)."""
+"""Planner unit + property tests (§IV-B reproduction invariants).
+
+``hypothesis`` is an optional test extra (see pyproject.toml): when
+absent, the property tests degrade to a small deterministic case sweep
+instead of erroring at collection.
+"""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import GemmDescriptor, plan_gemm, palette
 from repro.core.blocking import Region, ceil_div
@@ -70,9 +80,15 @@ class TestPlans:
             assert acc + inputs <= TPU_V5E.vmem_bytes
 
 
-@settings(max_examples=200, deadline=None)
-@given(m=st.integers(1, 2048), n=st.integers(1, 2048), k=st.integers(1, 4096))
-def test_plan_cover_properties(m, n, k):
+# Deterministic fallback cases exercised when hypothesis is unavailable —
+# chosen to cover the planner's branch space (aligned, ragged, strip-only,
+# tiny, deep-K).
+_FALLBACK_MNK = [(1, 1, 1), (7, 33, 100), (128, 128, 128), (300, 500, 128),
+                 (513, 129, 257), (2048, 1024, 4096), (80, 80, 512),
+                 (1, 2048, 64), (2048, 1, 64)]
+
+
+def _check_plan_cover(m, n, k):
     """Property: every plan covers C exactly once with in-bounds regions,
     positive utilization, and microkernel count >= ceil-div lower bound."""
     plan = plan_gemm(desc(m, n, k))
@@ -83,10 +99,29 @@ def test_plan_cover_properties(m, n, k):
     assert plan.num_microkernels >= lower
 
 
-@settings(max_examples=100, deadline=None)
-@given(m=st.integers(1, 1024), n=st.integers(1, 1024))
-def test_heterogeneous_never_worse_predicted(m, n):
+def _check_heterogeneous_never_worse(m, n):
     d = desc(m, n, 512)
     het = plan_gemm(d, heterogeneous=True)
     hom = plan_gemm(d, heterogeneous=False)
     assert het.predicted_seconds() <= hom.predicted_seconds() * 1.0001
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(m=st.integers(1, 2048), n=st.integers(1, 2048),
+           k=st.integers(1, 4096))
+    def test_plan_cover_properties(m, n, k):
+        _check_plan_cover(m, n, k)
+
+    @settings(max_examples=100, deadline=None)
+    @given(m=st.integers(1, 1024), n=st.integers(1, 1024))
+    def test_heterogeneous_never_worse_predicted(m, n):
+        _check_heterogeneous_never_worse(m, n)
+else:
+    @pytest.mark.parametrize("m,n,k", _FALLBACK_MNK)
+    def test_plan_cover_properties(m, n, k):
+        _check_plan_cover(m, n, k)
+
+    @pytest.mark.parametrize("m,n", [(mm, nn) for mm, nn, _ in _FALLBACK_MNK])
+    def test_heterogeneous_never_worse_predicted(m, n):
+        _check_heterogeneous_never_worse(m, n)

@@ -1,0 +1,211 @@
+"""Engine layer: dispatch, plan/kernel caches, descriptors, config."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, matmul, use
+from repro.core.config import get_config
+from repro.core.descriptor import (FlashDescriptor, GemmDescriptor,
+                                   GroupedGemmDescriptor, SsdChunkDescriptor,
+                                   TransposeDescriptor)
+from repro.core.jit_cache import LruCache
+
+RNG = np.random.default_rng(3)
+
+
+def rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+@pytest.fixture(autouse=True)
+def fresh_engine():
+    engine.reset_stats()
+    yield
+    engine.reset_stats()
+
+
+# ---------------------------------------------------------------------------
+# Descriptor round-trips — all five families
+# ---------------------------------------------------------------------------
+
+DESCRIPTORS = [
+    GemmDescriptor(m=64, n=96, k=32, layout="nt", epilogue="gelu"),
+    FlashDescriptor(batch_heads=8, sq=256, sk=256, d=64, causal=True),
+    GroupedGemmDescriptor(t=300, k=96, n=160, num_experts=4),
+    SsdChunkDescriptor(groups=12, q=64, n=32, p=64),
+    TransposeDescriptor(rows=100, cols=300),
+]
+
+
+@pytest.mark.parametrize("desc", DESCRIPTORS, ids=lambda d: d.family)
+def test_descriptor_hash_equality_roundtrip(desc):
+    clone = dataclasses.replace(desc)
+    assert clone == desc and hash(clone) == hash(desc)
+    assert clone.cache_key() == desc.cache_key()
+    assert desc.cache_key()[0] == desc.family
+    # a changed field breaks equality (take the first int field)
+    field = next(f.name for f in dataclasses.fields(desc)
+                 if isinstance(getattr(desc, f.name), int))
+    other = dataclasses.replace(desc, **{field: getattr(desc, field) + 1})
+    assert other != desc and other.cache_key() != desc.cache_key()
+    # usable as a dict key
+    assert {desc: 1, other: 2}[clone] == 1
+
+
+@pytest.mark.parametrize("desc", DESCRIPTORS, ids=lambda d: d.family)
+def test_descriptor_accounting_positive(desc):
+    assert desc.flops >= 0
+    assert desc.in_bytes > 0 and desc.out_bytes > 0
+    assert desc.arithmetic_intensity >= 0.0
+
+
+def test_descriptor_costing_hooks():
+    from repro.launch.hlo_cost import descriptor_cost
+    from repro.launch.roofline import kernel_roofline
+    for desc in DESCRIPTORS:
+        r = kernel_roofline(desc)
+        assert r["dominant"] in ("compute", "memory")
+        c = descriptor_cost(desc)
+        assert c["flops"] == float(desc.flops)
+        assert set(c) >= {"flops", "bytes", "collectives", "collective_bytes"}
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: repeated same-shape matmul plans once
+# ---------------------------------------------------------------------------
+
+def test_matmul_plan_cache_hit_on_repeat():
+    a, b = rand((48, 64)), rand((64, 80))
+    with use(backend="pallas"):
+        out1 = matmul(a, b)
+        out2 = matmul(a, b)
+    np.testing.assert_allclose(out1, out2, atol=0, rtol=0)
+    s = engine.stats()["gemm"]
+    assert s["planner_calls"] == 1, "second call must not re-plan"
+    assert s["plan_misses"] == 1
+    assert s["plan_hits"] >= 1
+    assert s["kernel_misses"] >= 1 and s["kernel_hits"] >= 1
+
+
+def test_different_shapes_plan_separately():
+    with use(backend="pallas"):
+        matmul(rand((32, 32)), rand((32, 32)))
+        matmul(rand((32, 48)), rand((48, 32)))
+    s = engine.stats()["gemm"]
+    assert s["planner_calls"] == 2 and s["plan_misses"] == 2
+
+
+def test_per_family_stats_buckets():
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.transpose import transpose
+    q = rand((1, 64, 1, 64))
+    flash_attention(q, q, q)
+    transpose(rand((40, 56)))
+    s = engine.stats()
+    assert s["flash_attention"]["planner_calls"] == 1
+    assert s["transpose"]["planner_calls"] == 1
+    assert s["flash_attention"]["kernel_misses"] == 1
+    assert s["transpose"]["kernel_misses"] == 1
+    # buckets are independent
+    assert "gemm" not in s or s["gemm"]["planner_calls"] == 0
+
+
+# ---------------------------------------------------------------------------
+# LRU cache mechanics
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_order():
+    c = LruCache(max_entries=2)
+    c.get_or_build(("f", 1), lambda: "a")
+    c.get_or_build(("f", 2), lambda: "b")
+    c.get_or_build(("f", 1), lambda: "a")   # refresh 1 -> 2 is now LRU
+    c.get_or_build(("f", 3), lambda: "c")   # evicts 2, not 1
+    assert c.keys() == [("f", 1), ("f", 3)]
+    assert c.evictions == 1
+    # rebuilding the evicted key is a miss; the refreshed key is a hit
+    calls = []
+    c.get_or_build(("f", 2), lambda: calls.append(1) or "b")
+    assert calls == [1]
+
+
+def test_lru_family_stats():
+    c = LruCache(max_entries=1)
+    c.get_or_build(("gemm", 1), lambda: 1)
+    c.get_or_build(("gemm", 1), lambda: 1)
+    c.get_or_build(("transpose", 1), lambda: 2)  # evicts the gemm entry
+    st = c.family_stats()
+    assert st["gemm"] == {"hits": 1, "misses": 1, "evictions": 1}
+    assert st["transpose"] == {"hits": 0, "misses": 1, "evictions": 0}
+
+
+# ---------------------------------------------------------------------------
+# Config + error paths
+# ---------------------------------------------------------------------------
+
+def test_config_nesting_restores():
+    assert get_config().backend == "xla"
+    with use(backend="pallas", interpret=True):
+        assert get_config().backend == "pallas"
+        with use(backend="xla"):
+            assert get_config().backend == "xla"
+        assert get_config().backend == "pallas"
+    assert get_config().backend == "xla"
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        with use(backend="cuda"):
+            pass
+
+
+def test_bias_epilogue_requires_bias_xla():
+    a, b = rand((16, 16)), rand((16, 16))
+    with pytest.raises(ValueError, match="bias"):
+        matmul(a, b, epilogue="bias")  # xla path
+
+
+def test_bias_epilogue_requires_bias_pallas():
+    from repro.kernels.gemm import gemm
+    a, b = rand((16, 16)), rand((16, 16))
+    with pytest.raises(ValueError, match="bias"):
+        with use(backend="pallas"):
+            matmul(a, b, epilogue="bias_gelu")
+    with pytest.raises(ValueError, match="bias"):
+        gemm(a, b, epilogue="bias_silu")
+
+
+def test_unknown_family_rejected():
+    with pytest.raises(KeyError, match="unknown kernel family"):
+        engine.get_family("conv")
+
+
+# ---------------------------------------------------------------------------
+# Planner sanity for the non-GEMM families
+# ---------------------------------------------------------------------------
+
+def test_planned_tiles_respect_problem_and_machine():
+    from repro.core import (plan_flash, plan_grouped, plan_ssd,
+                            plan_transpose)
+    from repro.core.machine import TPU_V5E
+    fp = plan_flash(FlashDescriptor(batch_heads=4, sq=384, sk=384, d=64))
+    assert fp.block_q >= 8 and fp.block_k >= 8
+    gp = plan_grouped(GroupedGemmDescriptor(t=4096, k=512, n=1024,
+                                            num_experts=8))
+    vmem = gp.bm * gp.bn * 4 + 2 * (gp.bm * gp.bk + gp.bk * gp.bn) * 4
+    assert vmem <= TPU_V5E.vmem_bytes // 2
+    assert gp.t_padded >= 4096
+    tp = plan_transpose(TransposeDescriptor(rows=1000, cols=3000))
+    assert 2 * tp.bt * tp.bt * 4 <= TPU_V5E.vmem_bytes // 2
+    sp = plan_ssd(SsdChunkDescriptor(groups=16, q=128, n=128, p=64))
+    assert sp.fits_vmem
+
+
+def test_plan_cache_key_includes_machine():
+    from repro.core.machine import CPU_HOST
+    d = GemmDescriptor(m=64, n=64, k=64)
+    p1 = engine.plan_for(d)
+    p2 = engine.plan_for(d, machine=CPU_HOST)
+    assert engine.stats()["gemm"]["planner_calls"] == 2
+    assert p1 is engine.plan_for(d)  # cached

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate: byte-compile the package and run the test suite.
+# Usage: bash tools/check.sh   (from anywhere; cd's to the repo root)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m compileall -q src
+python -m pytest -q
