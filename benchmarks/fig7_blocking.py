@@ -5,12 +5,25 @@ only 7 heterogeneous ones.  We sweep ragged output shapes at TPU
 granularity and report microkernel counts, utilization, and the planner's
 predicted v5e time for both strategies — the planner-level reproduction
 of the paper's core optimization.
+
+A second sweep closes the measure→generate loop (DESIGN.md §7): for a
+few shapes it runs the empirical autotuner over the model-ranked
+candidates and reports the measured model-plan vs autotuned-plan delta
+plus each plan's provenance (``plan_source``).
 """
-from benchmarks.common import emit
-from repro.core import GemmDescriptor, plan_gemm
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import GemmDescriptor, autotune, engine, plan_gemm, use
 
 SHAPES = [(640, 640), (320, 320), (896, 384), (2048, 272), (160, 1184),
           (80, 80)]
+# Shapes small enough to time for real in interpret mode on the host.
+MEASURED_SHAPES = [(80, 80), (320, 320)]
+AUTOTUNE_BUDGET = 4
 K = 512
 
 
@@ -24,3 +37,30 @@ def run():
              f"hom_microkernels={hom.num_microkernels};"
              f"het_util={het.utilization:.3f};hom_util={hom.utilization:.3f};"
              f"hom_predicted_us={hom.predicted_seconds()*1e6:.1f}")
+
+    # Measured model-vs-autotuned delta through the engine's BUILD/RUN
+    # stages (the three-tier policy's middle tier, run explicitly).
+    from repro.kernels.gemm import gemm
+    from repro.kernels.gemm.ops import execute as gemm_execute
+    rng = np.random.default_rng(0)
+    for m, n in MEASURED_SHAPES:
+        a = jnp.asarray(rng.standard_normal((m, K)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((K, n)), jnp.float32)
+        d = GemmDescriptor(m=m, n=n, k=K)
+        with use(backend="pallas") as cfg:
+            model_plan = engine.plan_for(d)
+            tuned_plan, timed = autotune.search(
+                gemm_execute, d, cfg.machine, (a, b), {},
+                interpret=cfg.interpret, budget=AUTOTUNE_BUDGET)
+            model_us = time_fn(functools.partial(gemm, plan=model_plan), a, b)
+            if tuned_plan is None:  # every candidate failed: model only
+                emit(f"fig7/measured/{m}x{n}", model_us,
+                     f"model_src={model_plan.plan_source};autotune=failed")
+                continue
+            tuned_us = time_fn(functools.partial(gemm, plan=tuned_plan), a, b)
+        emit(f"fig7/measured/{m}x{n}", model_us,
+             f"autotuned_us={tuned_us:.1f};"
+             f"speedup={model_us / max(tuned_us, 1e-9):.3f};"
+             f"model_src={model_plan.plan_source};"
+             f"tuned_src={tuned_plan.plan_source};"
+             f"candidates_timed={timed}")

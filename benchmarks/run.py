@@ -1,6 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines, followed after each phase
+by per-family engine counters (cache traffic + plan provenance,
+``engine/<phase>/<family>`` rows).  Counters are reset at phase
+boundaries with ``engine.reset_stats(entries=False)`` — caches stay warm
+— so every table is per-phase, not cumulative.
 
   table1  — per-dtype matmul throughput (Table I)
   fig1    — mesh scaling efficiency from dry-run records (Fig 1)
@@ -30,18 +34,30 @@ def main() -> None:
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
-    for name in chosen:
-        suites[name]()
-
-    # Engine observability: per-family plan/kernel cache traffic for the
-    # whole benchmark run (the paper's dispatch-layer hit/miss view).
     from repro.core import engine
+    for name in chosen:
+        # Per-phase counters: zero the stats (keeping every cache warm) so
+        # each phase's table reports its own traffic, not the cumulative
+        # run — `entries=False` avoids charging a phase for rebuilding
+        # kernels an earlier phase already built.
+        engine.reset_stats(entries=False)
+        suites[name]()
+        _emit_engine_stats(name, engine)
+
+
+def _emit_engine_stats(phase: str, engine) -> None:
+    """Per-family plan/kernel cache traffic + plan provenance for one
+    phase (the paper's dispatch-layer hit/miss view)."""
     for fam, c in sorted(engine.stats().items()):
-        print(f"engine/{fam},0,"
+        print(f"engine/{phase}/{fam},0,"
               f"plan_hits={c['plan_hits']};plan_misses={c['plan_misses']};"
               f"kernel_hits={c['kernel_hits']};"
               f"kernel_misses={c['kernel_misses']};"
-              f"kernel_evictions={c['kernel_evictions']}")
+              f"kernel_evictions={c['kernel_evictions']};"
+              f"plan_src_model={c['plan_source_model']};"
+              f"plan_src_autotuned={c['plan_source_autotuned']};"
+              f"plan_src_tuned_cache={c['plan_source_tuned_cache']};"
+              f"autotune_timings={c['autotune_timings']}")
 
 
 if __name__ == '__main__':

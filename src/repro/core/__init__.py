@@ -2,12 +2,13 @@
 units, adapted from M4/SME (the paper's target) to TPU/MXU — generalized
 to every kernel family in the system (DESIGN.md).
 
-  * ``machine``    — hardware model ("Table I" constants)
-  * ``config``     — process-wide backend/interpret/machine configuration
+  * ``machine``    — hardware model ("Table I" constants + calibration)
+  * ``config``     — process-wide backend/interpret/machine/autotune config
   * ``descriptor`` — per-family kernel metadata (libxsmm descriptor analogue)
   * ``blocking``   — machine-model tile planners, all families (§IV-B)
+  * ``autotune``   — empirical plan search + persistent tuning cache (§7)
   * ``jit_cache``  — LRU kernel registry (libxsmm JIT dispatch analogue)
-  * ``engine``     — family registry + plan cache + dispatch
+  * ``engine``     — family registry + three-tier planning + dispatch
   * ``matmul``     — public GEMM dispatch used by every model layer
   * ``microbench`` — machine-characterization harness (§III analogue)
 """
@@ -16,13 +17,14 @@ from repro.core.descriptor import (  # noqa: F401
     KernelDescriptor, SsdChunkDescriptor, TransposeDescriptor)
 from repro.core.blocking import (  # noqa: F401
     BlockingPlan, FlashPlan, GroupedGemmPlan, Region, SsdChunkPlan,
-    TransposePlan, palette, plan_flash, plan_gemm, plan_grouped, plan_ssd,
-    plan_transpose)
+    TransposePlan, candidate_plans, palette, plan_flash, plan_gemm,
+    plan_grouped, plan_ssd, plan_transpose)
 from repro.core.machine import (  # noqa: F401
-    MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine)
+    CPU_HOST, MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine)
 from repro.core.config import (  # noqa: F401
     EngineConfig, backend, configure, get_backend, get_config, set_backend,
     use)
+from repro.core.autotune import TuningCache  # noqa: F401
 from repro.core.matmul import matmul  # noqa: F401
 from repro.core.jit_cache import (  # noqa: F401
     GLOBAL_KERNEL_CACHE, KernelCache, LruCache)

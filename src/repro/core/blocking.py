@@ -52,10 +52,9 @@ ACC_BUDGET_ELEMS = 256 * 256
 _BM_CANDIDATES = (8, 16, 32, 64, 128, 256, 512)
 _BN_CANDIDATES = (128, 256, 512, 1024)
 
-# Fixed cost (seconds) charged per microkernel/grid-step launch.  On TPU
-# this models grid sequencing + pipeline refill; the value only needs to
-# rank plans, not predict wall-clock.
-_STEP_OVERHEAD_S = 2.0e-7
+# Per-microkernel/grid-step launch cost now lives on the machine model
+# (``machine.step_overhead_s``) so calibration can replace the pinned
+# default with the measured dispatch latency (DESIGN.md §7).
 
 
 def palette(budget: int = ACC_BUDGET_ELEMS,
@@ -124,6 +123,9 @@ class BlockingPlan:
     regions: Tuple[Region, ...]
     bk: int
     heterogeneous: bool
+    # Provenance: "model" (analytical planner) or "autotuned" (empirically
+    # timed winner, fresh or replayed from the tuning cache — DESIGN.md §7).
+    plan_source: str = "model"
 
     # ---- aggregate stats (paper Fig 7 metrics) -------------------------
     @property
@@ -195,7 +197,7 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
     memory_s = traffic / machine.hbm_bw
     steps = sum(r.num_microkernels for r in regions) * ceil_div(k, bk)
     # compute and memory overlap in the pipelined kernel: take max + overhead
-    return max(compute_s, memory_s) + steps * _STEP_OVERHEAD_S
+    return max(compute_s, memory_s) + steps * machine.step_overhead_s
 
 
 def _pick_bk(desc: GemmDescriptor, bm: int, bn: int,
@@ -350,6 +352,7 @@ class FlashPlan:
     desc: FlashDescriptor
     block_q: int
     block_k: int
+    plan_source: str = "model"  # see BlockingPlan.plan_source
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
         return _predict_flash_seconds(self.desc, self.block_q, self.block_k,
@@ -377,15 +380,15 @@ def _predict_flash_seconds(desc: FlashDescriptor, bq: int, bk: int,
     traffic += desc.batch_heads * cq * bq * desc.d * isz
     traffic += desc.out_bytes
     memory_s = traffic / machine.hbm_bw
-    return max(compute_s, memory_s) + steps * _STEP_OVERHEAD_S
+    return max(compute_s, memory_s) + steps * machine.step_overhead_s
 
 
-def plan_flash(desc: FlashDescriptor,
-               machine: MachineModel = DEFAULT_MACHINE) -> FlashPlan:
-    """Pick (block_q, block_k) from VMEM/MXU constraints + the cost model."""
+def _flash_legal(desc: FlashDescriptor,
+                 machine: MachineModel) -> List[Tuple[int, int]]:
+    """All VMEM-legal (block_q, block_k) pairs for one flash descriptor."""
     sub, lane = machine.reg_tile(desc.dtype)
     isz = jnp.dtype(desc.dtype).itemsize
-    best, best_t = None, float("inf")
+    legal = []
     for bq in _tile_candidates(desc.sq, sub):
         for bk in _tile_candidates(desc.sk, lane):
             # VMEM: q tile + k/v tiles (double-buffered) + fp32 scratch
@@ -394,11 +397,17 @@ def plan_flash(desc: FlashDescriptor,
             vmem += (bq * bk + 2 * bq + bq * desc.d) * 4
             if vmem > machine.vmem_bytes // 2:
                 continue
-            t = _predict_flash_seconds(desc, bq, bk, machine)
-            if t < best_t:
-                best, best_t = (bq, bk), t
-    if best is None:  # head dim so large nothing fits: minimal legal tiles
-        best = (sub, lane)
+            legal.append((bq, bk))
+    if not legal:  # head dim so large nothing fits: minimal legal tiles
+        legal.append((sub, lane))
+    return legal
+
+
+def plan_flash(desc: FlashDescriptor,
+               machine: MachineModel = DEFAULT_MACHINE) -> FlashPlan:
+    """Pick (block_q, block_k) from VMEM/MXU constraints + the cost model."""
+    best = min(_flash_legal(desc, machine),
+               key=lambda s: _predict_flash_seconds(desc, *s, machine=machine))
     return FlashPlan(desc, *best)
 
 
@@ -408,6 +417,7 @@ class GroupedGemmPlan:
     bm: int
     bk: int
     bn: int
+    plan_source: str = "model"  # see BlockingPlan.plan_source
 
     @property
     def t_padded(self) -> int:
@@ -431,26 +441,32 @@ def _predict_grouped_seconds(desc: GroupedGemmDescriptor, bm: int, bk: int,
     isz = jnp.dtype(desc.dtype).itemsize
     traffic = steps * (bm * bk + bk * bn) * isz + gm * bm * desc.n * isz
     memory_s = traffic / machine.hbm_bw
-    return max(compute_s, memory_s) + steps * _STEP_OVERHEAD_S
+    return max(compute_s, memory_s) + steps * machine.step_overhead_s
 
 
-def plan_grouped(desc: GroupedGemmDescriptor,
-                 machine: MachineModel = DEFAULT_MACHINE) -> GroupedGemmPlan:
-    """Pick (bm, bk, bn): bm trades per-group padding against grid size."""
+def _grouped_legal(desc: GroupedGemmDescriptor,
+                   machine: MachineModel) -> List[Tuple[int, int, int]]:
+    """All VMEM-legal (bm, bk, bn) triples for one grouped descriptor."""
     sub, lane = machine.reg_tile(desc.dtype)
     isz = jnp.dtype(desc.dtype).itemsize
-    best, best_t = None, float("inf")
+    legal = []
     for bm in _tile_candidates(desc.t, sub, lo=sub):
         for bn in _tile_candidates(desc.n, lane, lo=lane):
             for bk in _tile_candidates(desc.k, lane, lo=lane):
                 vmem = bm * bn * 4 + 2 * (bm * bk + bk * bn) * isz
                 if vmem > machine.vmem_bytes // 2:
                     continue
-                t = _predict_grouped_seconds(desc, bm, bk, bn, machine)
-                if t < best_t:
-                    best, best_t = (bm, bk, bn), t
-    if best is None:
-        best = (sub, lane, lane)
+                legal.append((bm, bk, bn))
+    if not legal:
+        legal.append((sub, lane, lane))
+    return legal
+
+
+def plan_grouped(desc: GroupedGemmDescriptor,
+                 machine: MachineModel = DEFAULT_MACHINE) -> GroupedGemmPlan:
+    """Pick (bm, bk, bn): bm trades per-group padding against grid size."""
+    best = min(_grouped_legal(desc, machine),
+               key=lambda s: _predict_grouped_seconds(desc, *s, machine=machine))
     return GroupedGemmPlan(desc, *best)
 
 
@@ -458,6 +474,7 @@ def plan_grouped(desc: GroupedGemmDescriptor,
 class TransposePlan:
     desc: TransposeDescriptor
     bt: int
+    plan_source: str = "model"  # see BlockingPlan.plan_source
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
         return _predict_transpose_seconds(self.desc, self.bt, machine)
@@ -468,24 +485,27 @@ def _predict_transpose_seconds(desc: TransposeDescriptor, bt: int,
     steps = ceil_div(desc.rows, bt) * ceil_div(desc.cols, bt)
     isz = jnp.dtype(desc.dtype).itemsize
     traffic = 2 * steps * bt * bt * isz  # read + mirrored write, padded
-    return traffic / machine.hbm_bw + steps * _STEP_OVERHEAD_S
+    return traffic / machine.hbm_bw + steps * machine.step_overhead_s
+
+
+def _transpose_legal(desc: TransposeDescriptor,
+                     machine: MachineModel) -> List[int]:
+    """All VMEM-legal square tile edges for one transpose descriptor."""
+    sub, lane = machine.reg_tile(desc.dtype)
+    isz = jnp.dtype(desc.dtype).itemsize
+    extent = max(desc.rows, desc.cols)
+    legal = [bt for bt in _tile_candidates(extent, max(sub, 8), lo=32)
+             if 2 * bt * bt * isz <= machine.vmem_bytes // 2]
+    return legal or [lane]
 
 
 def plan_transpose(desc: TransposeDescriptor,
                    machine: MachineModel = DEFAULT_MACHINE) -> TransposePlan:
     """Pick the square tile edge: biggest VMEM-legal tile wins on traffic,
     smaller tiles win on ragged edges (masked-write waste)."""
-    sub, lane = machine.reg_tile(desc.dtype)
-    isz = jnp.dtype(desc.dtype).itemsize
-    extent = max(desc.rows, desc.cols)
-    best, best_t = None, float("inf")
-    for bt in _tile_candidates(extent, max(sub, 8), lo=32):
-        if 2 * bt * bt * isz > machine.vmem_bytes // 2:
-            continue
-        t = _predict_transpose_seconds(desc, bt, machine)
-        if t < best_t:
-            best, best_t = bt, t
-    return TransposePlan(desc, best if best is not None else lane)
+    best = min(_transpose_legal(desc, machine),
+               key=lambda bt: _predict_transpose_seconds(desc, bt, machine))
+    return TransposePlan(desc, best)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -496,12 +516,13 @@ class SsdChunkPlan:
 
     desc: SsdChunkDescriptor
     fits_vmem: bool
+    plan_source: str = "model"  # see BlockingPlan.plan_source
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
         d = self.desc
         compute_s = d.flops / machine.peak(d.dtype)
         memory_s = (d.in_bytes + d.out_bytes) / machine.hbm_bw
-        return max(compute_s, memory_s) + d.groups * _STEP_OVERHEAD_S
+        return max(compute_s, memory_s) + d.groups * machine.step_overhead_s
 
 
 def plan_ssd(desc: SsdChunkDescriptor,
@@ -510,3 +531,53 @@ def plan_ssd(desc: SsdChunkDescriptor,
     per_step = (2 * desc.q * desc.n + desc.q * desc.q + 2 * desc.q * desc.p) * isz
     per_step += desc.q * desc.q * 4  # fp32 score scratch
     return SsdChunkPlan(desc, fits_vmem=per_step <= machine.vmem_bytes // 2)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration (the autotuner's search space)
+# ---------------------------------------------------------------------------
+
+def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
+                    top_k: int = 8) -> List:
+    """Top-``top_k`` machine-legal candidate plans for one descriptor.
+
+    This is the empirical-search half of the measure→generate loop
+    (DESIGN.md §7): the same legality constraints and
+    ``max(compute, memory) + steps·overhead`` cost model that pick *the*
+    plan analytically here rank *all* legal plans, and
+    ``repro.core.autotune`` times the top K for real.  Candidates are
+    deduplicated by their tiling knobs and sorted cheapest-first, so
+    ``candidate_plans(desc, machine, 1)[0]`` always agrees with the
+    family planner.
+    """
+    fam = desc.family
+    cands: List = []
+    seen = set()
+
+    def add(plan, knob_key):
+        if knob_key not in seen:
+            seen.add(knob_key)
+            cands.append(plan)
+
+    if fam == "gemm":
+        for shape in palette(ACC_BUDGET_ELEMS, machine, desc.in_dtype):
+            for het in (True, False):
+                p = plan_gemm(desc, machine, heterogeneous=het,
+                              force_block=shape)
+                add(p, (p.regions, p.bk))
+    elif fam == "flash_attention":
+        for bq, bk in _flash_legal(desc, machine):
+            add(FlashPlan(desc, bq, bk), (bq, bk))
+    elif fam == "grouped_gemm":
+        for bm, bk, bn in _grouped_legal(desc, machine):
+            add(GroupedGemmPlan(desc, bm, bk, bn), (bm, bk, bn))
+    elif fam == "transpose":
+        for bt in _transpose_legal(desc, machine):
+            add(TransposePlan(desc, bt), (bt,))
+    elif fam == "ssd_chunk":
+        add(plan_ssd(desc, machine), ())  # no free knobs: nothing to search
+    else:
+        raise KeyError(f"no candidate enumerator for family {fam!r}")
+
+    cands.sort(key=lambda p: p.predicted_seconds(machine))
+    return cands[:max(1, top_k)]

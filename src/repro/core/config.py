@@ -1,7 +1,7 @@
 """Process-wide engine configuration: backend, interpret mode, machine.
 
 The paper's dispatcher has one piece of ambient state — which lowering
-serves a request (generated SME kernel vs vendor BLAS).  Ours has three:
+serves a request (generated SME kernel vs vendor BLAS).  Ours has more:
 
   * ``backend``   — "xla" (dot_general, the vendor-BLAS analogue; default
                     in CPU containers) or "pallas" (the paper's engine:
@@ -10,7 +10,15 @@ serves a request (generated SME kernel vs vendor BLAS).  Ours has three:
                     correctness path) or compiled (TPU hardware);
   * ``machine``   — the :class:`~repro.core.machine.MachineModel` that
                     parameterizes every tile planner (the "Table I"
-                    constants).
+                    constants, or a microbench-calibrated model);
+  * ``autotune``  — let ``engine.dispatch`` time the top-K candidate
+                    tilings empirically instead of trusting the model
+                    (DESIGN.md §7); ``autotune_budget`` caps K;
+  * ``tuning_cache`` — path of the on-disk JSON tuning cache that makes
+                    autotuned winners survive process restarts.
+
+Env-var overrides seed the process default at import: ``REPRO_AUTOTUNE=1``,
+``REPRO_TUNING_CACHE=/path/to/cache.json``, ``REPRO_AUTOTUNE_BUDGET=K``.
 
 Configuration is layered: a process-wide default (``configure``) under a
 thread-local override stack (``use`` context manager), so a serving thread
@@ -23,6 +31,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import threading
 from typing import Optional
 
@@ -38,11 +47,20 @@ class EngineConfig:
     backend: str = "xla"
     interpret: bool = True
     machine: MachineModel = DEFAULT_MACHINE
+    # Empirical plan search (DESIGN.md §7).  ``tuning_cache`` is a JSON
+    # file path; empty string means "no cache" (``replace`` treats None as
+    # "leave unchanged", so "" is the explicit off switch).
+    autotune: bool = False
+    autotune_budget: int = 8
+    tuning_cache: Optional[str] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {self.backend!r}")
+        if self.autotune_budget < 1:
+            raise ValueError(f"autotune_budget must be >= 1, "
+                             f"got {self.autotune_budget}")
 
     def replace(self, **kw) -> "EngineConfig":
         kw = {k: v for k, v in kw.items() if v is not None}
@@ -51,7 +69,29 @@ class EngineConfig:
         return dataclasses.replace(self, **kw)
 
 
-_DEFAULT = EngineConfig()
+def _env_default() -> EngineConfig:
+    # A malformed env var must not take down `import repro`: warn and
+    # fall back to the field default instead.
+    budget = EngineConfig.autotune_budget
+    raw = os.environ.get("REPRO_AUTOTUNE_BUDGET")
+    if raw:
+        try:
+            budget = int(raw)
+            if budget < 1:
+                raise ValueError("must be >= 1")
+        except ValueError as e:
+            import warnings
+            warnings.warn(f"ignoring REPRO_AUTOTUNE_BUDGET={raw!r}: {e}")
+            budget = EngineConfig.autotune_budget
+    return EngineConfig(
+        autotune=os.environ.get("REPRO_AUTOTUNE", "").lower()
+        in ("1", "true", "yes", "on"),
+        autotune_budget=budget,
+        tuning_cache=os.environ.get("REPRO_TUNING_CACHE") or None,
+    )
+
+
+_DEFAULT = _env_default()
 _default_lock = threading.Lock()
 _tls = threading.local()
 
@@ -70,22 +110,30 @@ def get_config() -> EngineConfig:
 
 def configure(*, backend: Optional[str] = None,
               interpret: Optional[bool] = None,
-              machine=None) -> EngineConfig:
+              machine=None, autotune: Optional[bool] = None,
+              autotune_budget: Optional[int] = None,
+              tuning_cache: Optional[str] = None) -> EngineConfig:
     """Mutate the process-wide default (all threads without an override)."""
     global _DEFAULT
     with _default_lock:
         _DEFAULT = _DEFAULT.replace(backend=backend, interpret=interpret,
-                                    machine=machine)
+                                    machine=machine, autotune=autotune,
+                                    autotune_budget=autotune_budget,
+                                    tuning_cache=tuning_cache)
         return _DEFAULT
 
 
 @contextlib.contextmanager
 def use(*, backend: Optional[str] = None, interpret: Optional[bool] = None,
-        machine=None):
+        machine=None, autotune: Optional[bool] = None,
+        autotune_budget: Optional[int] = None,
+        tuning_cache: Optional[str] = None):
     """Thread-local override: ``with use(backend="pallas"): ...``."""
     stack = _stack()
     stack.append(get_config().replace(backend=backend, interpret=interpret,
-                                      machine=machine))
+                                      machine=machine, autotune=autotune,
+                                      autotune_budget=autotune_budget,
+                                      tuning_cache=tuning_cache))
     try:
         yield stack[-1]
     finally:

@@ -18,6 +18,21 @@ builds from the LRU kernel cache.  Both caches key off
 ``desc.cache_key()`` — no family hand-writes a cache-key tuple — and both
 expose per-family hit/miss/eviction stats (``stats()``).
 
+A plan-cache miss resolves through a three-tier policy (DESIGN.md §7):
+
+  1. **tuned cache** — the on-disk JSON store of previously autotuned
+     winners (``config.tuning_cache``); a warm cache means a process
+     restart re-plans nothing and times nothing;
+  2. **autotune** — when ``config.autotune`` is set and the operands are
+     concrete, time the top-K model-ranked candidates for real
+     (:mod:`repro.core.autotune`) and persist the winner;
+  3. **analytical model** — the family planner ranked by the machine
+     model, as before.
+
+Which tier served each resolution is visible per family in ``stats()``
+(``plan_source_{tuned_cache,autotuned,model}``, ``autotune_timings``) and
+on the plan itself (``plan.plan_source``).
+
 Families self-register at import time; ``dispatch`` lazily imports the
 owning ``kernels/<family>/ops`` module on first use, so ``repro.core``
 never statically depends on ``repro.kernels`` (DESIGN.md §1).
@@ -29,6 +44,7 @@ import importlib
 import threading
 from typing import Any, Callable, Dict, Optional
 
+from . import autotune as _autotune
 from .config import get_config
 from .descriptor import KernelDescriptor
 from .jit_cache import GLOBAL_KERNEL_CACHE, LruCache
@@ -65,6 +81,24 @@ PLAN_CACHE = LruCache(max_entries=65536)
 _plan_calls: Dict[str, int] = {}
 _plan_calls_lock = threading.Lock()
 
+# Three-tier resolution observability (DESIGN.md §7): which tier served
+# each plan-cache miss, and how many candidate executions autotuning timed.
+PLAN_SOURCES = ("tuned_cache", "autotuned", "model")
+_plan_sources: Dict[str, Dict[str, int]] = {}
+_autotune_timings: Dict[str, int] = {}
+
+
+def _note_source(family: str, source: str):
+    with _plan_calls_lock:
+        bucket = _plan_sources.setdefault(family,
+                                          {s: 0 for s in PLAN_SOURCES})
+        bucket[source] += 1
+
+
+def _note_timings(family: str, n: int):
+    with _plan_calls_lock:
+        _autotune_timings[family] = _autotune_timings.get(family, 0) + n
+
 
 def register_family(name: str, planner, execute) -> Family:
     """Register (or replace) a kernel family.  Called at ops-module import."""
@@ -98,19 +132,77 @@ def families() -> Dict[str, Family]:
 # Planning
 # ---------------------------------------------------------------------------
 
-def plan_for(desc: KernelDescriptor,
-             machine: Optional[MachineModel] = None) -> Any:
-    """Plan cache lookup: (descriptor, machine) -> family plan."""
+def _resolve_plan(desc: KernelDescriptor, cfg, *,
+                  machine: Optional[MachineModel] = None,
+                  operands: Optional[tuple] = None,
+                  kw: Optional[dict] = None,
+                  interpret: Optional[bool] = None) -> Any:
+    """Plan-cache lookup; a miss walks the three tiers (DESIGN.md §7)."""
     fam = get_family(desc.family)
-    machine = machine or get_config().machine
-    key = desc.cache_key() + ("plan", machine.name)
+    machine = machine or cfg.machine
+    interpret = cfg.interpret if interpret is None else interpret
+    kw = kw or {}
+    # Timing needs concrete operands: under jit tracing (or from plan_for,
+    # which has no operands) the autotune tier is unavailable.
+    autotunable = (cfg.autotune and operands is not None
+                   and _autotune.can_autotune(operands, kw))
+    tier = "autotune" if autotunable else \
+        ("tuned" if cfg.tuning_cache else "model")
+    # The key names the machine by name AND constants-fingerprint (two
+    # calibrations of one host share a name but not plans) and the
+    # resolution policy (so e.g. a model-tier plan cached during jit
+    # tracing never masks a later concrete-operand autotune).
+    key = desc.cache_key() + ("plan", machine.name, machine.fingerprint,
+                              tier, cfg.tuning_cache or "")
 
     def build_plan():
+        # Tier 1: persistent tuned cache — a warm file re-times nothing.
+        if cfg.tuning_cache:
+            cache = _autotune.get_tuning_cache(cfg.tuning_cache)
+            record = cache.lookup(machine.name, desc, interpret=interpret)
+            if record is not None:
+                plan = _autotune.plan_from_record(desc, record)
+                if plan is not None:
+                    _note_source(desc.family, "tuned_cache")
+                    return plan
+        # Tier 2: budgeted empirical search over the model-ranked top-K.
+        if autotunable:
+            cache = (_autotune.get_tuning_cache(cfg.tuning_cache)
+                     if cfg.tuning_cache else None)
+            plan, timed = _autotune.search(
+                fam.execute, desc, machine, operands, kw,
+                interpret=interpret, budget=cfg.autotune_budget,
+                tuning_cache=cache)
+            _note_timings(desc.family, timed)
+            if plan is not None:
+                _note_source(desc.family, "autotuned")
+                if cfg.tuning_cache:
+                    # Overwrite the tuned-tier entry too: a jit trace that
+                    # resolved before the file was populated may have
+                    # cached a model plan there, and get_or_build would
+                    # keep serving it for the rest of the process.
+                    PLAN_CACHE.put(
+                        desc.cache_key() + ("plan", machine.name,
+                                            machine.fingerprint, "tuned",
+                                            cfg.tuning_cache), plan)
+                return plan
+        # Tier 3: analytical machine-model planner.
         with _plan_calls_lock:
             _plan_calls[desc.family] = _plan_calls.get(desc.family, 0) + 1
+        _note_source(desc.family, "model")
         return fam.planner(desc, machine)
 
     return PLAN_CACHE.get_or_build(key, build_plan)
+
+
+def plan_for(desc: KernelDescriptor,
+             machine: Optional[MachineModel] = None) -> Any:
+    """Plan cache lookup: (descriptor, machine) -> family plan.
+
+    No operands, so the autotune tier is skipped; the tuned cache (when
+    configured) and the analytical model still apply.
+    """
+    return _resolve_plan(desc, get_config(), machine=machine)
 
 
 # ---------------------------------------------------------------------------
@@ -121,16 +213,18 @@ def dispatch(desc: KernelDescriptor, *operands, plan: Any = None,
              interpret: Optional[bool] = None, **kw) -> Any:
     """Run one kernel request through the engine.
 
-    ``plan=None`` consults the plan cache (normal path); an explicit plan
-    (benchmark sweeps, tests pinning tile sizes) bypasses it.  ``interpret``
+    ``plan=None`` resolves via tuned-cache → autotune → analytical-model
+    (DESIGN.md §7), behind the plan cache; an explicit plan (benchmark
+    sweeps, tests pinning tile sizes) bypasses all of it.  ``interpret``
     defaults from the ambient config — no per-call plumbing.
     """
     fam = get_family(desc.family)
     cfg = get_config()
-    if plan is None:
-        plan = plan_for(desc, cfg.machine)
     if interpret is None:
         interpret = cfg.interpret
+    if plan is None:
+        plan = _resolve_plan(desc, cfg, operands=operands, kw=kw,
+                             interpret=interpret)
     return fam.execute(desc, plan, *operands, interpret=interpret, **kw)
 
 
@@ -151,6 +245,8 @@ def stats() -> Dict[str, Dict[str, int]]:
     """Per-family engine stats across both cache layers.
 
     {family: {plan_hits, plan_misses, plan_evictions, planner_calls,
+              plan_source_tuned_cache, plan_source_autotuned,
+              plan_source_model, autotune_timings,
               kernel_hits, kernel_misses, kernel_evictions}}
     """
     out: Dict[str, Dict[str, int]] = {}
@@ -159,6 +255,8 @@ def stats() -> Dict[str, Dict[str, int]]:
         return out.setdefault(fam, {
             "plan_hits": 0, "plan_misses": 0, "plan_evictions": 0,
             "planner_calls": 0,
+            **{f"plan_source_{s}": 0 for s in PLAN_SOURCES},
+            "autotune_timings": 0,
             "kernel_hits": 0, "kernel_misses": 0, "kernel_evictions": 0,
         })
 
@@ -170,6 +268,12 @@ def stats() -> Dict[str, Dict[str, int]]:
     with _plan_calls_lock:
         for fam, n in _plan_calls.items():
             bucket(fam)["planner_calls"] = n
+        for fam, sources in _plan_sources.items():
+            b = bucket(fam)
+            for s, n in sources.items():
+                b[f"plan_source_{s}"] = n
+        for fam, n in _autotune_timings.items():
+            bucket(fam)["autotune_timings"] = n
     for fam, c in GLOBAL_KERNEL_CACHE.family_stats().items():
         b = bucket(fam)
         b["kernel_hits"] = c["hits"]
@@ -178,9 +282,24 @@ def stats() -> Dict[str, Dict[str, int]]:
     return out
 
 
-def reset_stats():
-    """Clear both caches and all counters (test isolation)."""
-    PLAN_CACHE.clear()
-    GLOBAL_KERNEL_CACHE.clear()
+def reset_stats(*, entries: bool = True):
+    """Reset all engine counters.
+
+    ``entries=True`` (test isolation) also drops cached plans, built
+    kernels, and the in-memory tuning-cache mirrors (on-disk files stay —
+    a fresh mirror reloads them, which is how tests simulate a process
+    restart).  ``entries=False`` (benchmark phase boundaries) zeroes the
+    counters but keeps every cache warm, so per-phase tables don't charge
+    one phase for another's builds.
+    """
+    if entries:
+        PLAN_CACHE.clear()
+        GLOBAL_KERNEL_CACHE.clear()
+        _autotune.reset_tuning_caches()
+    else:
+        PLAN_CACHE.reset_stats()
+        GLOBAL_KERNEL_CACHE.reset_stats()
     with _plan_calls_lock:
         _plan_calls.clear()
+        _plan_sources.clear()
+        _autotune_timings.clear()

@@ -76,6 +76,21 @@ class LruCache:
                 self._bucket(_family_of(key))["hits"] += 1
             return self._store[key]
 
+    def put(self, key: Hashable, value: Any) -> None:
+        """Insert or overwrite ``key`` (refreshing recency), no counters.
+
+        The engine uses this to propagate a freshly autotuned winner onto
+        the tuned-tier plan key, overwriting any model plan a jit trace
+        cached there before the tuning-cache file was populated.
+        """
+        with self._lock:
+            self._store[key] = value
+            self._store.move_to_end(key)
+            while len(self._store) > self._max:
+                evicted_key, _ = self._store.popitem(last=False)
+                self.evictions += 1
+                self._bucket(_family_of(evicted_key))["evictions"] += 1
+
     def stats(self) -> Tuple[int, int, int]:
         with self._lock:
             return self.hits, self.misses, len(self._store)
@@ -93,11 +108,24 @@ class LruCache:
         with self._lock:
             return len(self._store)
 
+    def _reset_counters_locked(self):
+        self.hits = self.misses = self.evictions = 0
+        self._by_family.clear()
+
     def clear(self):
         with self._lock:
             self._store.clear()
-            self.hits = self.misses = self.evictions = 0
-            self._by_family.clear()
+            self._reset_counters_locked()
+
+    def reset_stats(self):
+        """Zero the counters but keep the entries (and their recency).
+
+        Benchmark phase boundaries use this: the next phase's table starts
+        from zero without forcing every kernel to rebuild —
+        ``engine.reset_stats(entries=False)`` fans out to both caches.
+        """
+        with self._lock:
+            self._reset_counters_locked()
 
 
 # Back-compat name: pre-engine code imported ``KernelCache``.

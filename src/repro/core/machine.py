@@ -9,17 +9,30 @@ v5e specifications. They feed two consumers:
   * the roofline analysis (``repro.launch.roofline``), which converts
     compiled HLO FLOPs / bytes / collective bytes into seconds.
 
-The container we develop in is CPU-only, so — exactly like the paper uses
-its Sec. III microbenchmarks to parameterize the Sec. IV code generator —
-we use this static model to parameterize kernel generation, and validate
-kernels functionally in interpret mode.
+Models come from two sources, mirroring the paper's two phases:
+
+  * **pinned** — the static Table-I constants below (``TPU_V5E``,
+    ``CPU_HOST``), used when the target is not the host;
+  * **calibrated** — :meth:`MachineModel.from_probes` folds
+    ``repro.core.microbench`` probe results (matmul throughput per dtype,
+    streaming bandwidth, per-dispatch overhead) into a copy of a base
+    model, exactly like the paper's §III measurements parameterize the
+    §IV code generator.  See DESIGN.md §7.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import hashlib
+from typing import Dict, Iterable, Mapping, Union
 
 import jax.numpy as jnp
+
+# Fixed cost (seconds) charged per microkernel/grid-step launch by every
+# planner cost model (``repro.core.blocking``).  On TPU this models grid
+# sequencing + pipeline refill; calibration replaces it with the measured
+# dispatch latency.  The value only needs to rank plans, not predict
+# wall-clock.
+DEFAULT_STEP_OVERHEAD_S = 2.0e-7
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,8 +58,23 @@ class MachineModel:
     ici_bw_per_link: float  # bytes/s per ICI link
     ici_links: int  # links per chip in the 2D torus
     dcn_bw: float  # bytes/s per chip across pods
+    # --- dispatch ----------------------------------------------------------
+    # per-microkernel/grid-step launch overhead charged by plan cost models
+    step_overhead_s: float = DEFAULT_STEP_OVERHEAD_S
 
     # ---------------------------------------------------------------------
+    @property
+    def fingerprint(self) -> str:
+        """Short digest of every model constant.
+
+        Cache keys that would otherwise trust ``name`` alone include this:
+        two calibrations of the same host share a name but can carry
+        different measured constants, and analytical plans derived from
+        one must not be served for the other.
+        """
+        blob = repr(dataclasses.astuple(self)).encode()
+        return hashlib.md5(blob).hexdigest()[:8]
+
     def peak(self, dtype) -> float:
         return self.peak_flops[canonical_dtype(dtype)]
 
@@ -72,6 +100,44 @@ class MachineModel:
     def collective_seconds(self, nbytes: float, chips: int = 1) -> float:
         # Aggregate ICI model: each chip drives ici_links links.
         return nbytes / (self.ici_bw_per_link * chips)
+
+    # Calibration -----------------------------------------------------------
+    @classmethod
+    def from_probes(cls, probes: Union[Mapping[str, "object"], Iterable],
+                    base: "MachineModel" = None,
+                    name: str = "calibrated") -> "MachineModel":
+        """Build a calibrated model from ``repro.core.microbench`` probes.
+
+        ``probes`` is the dict returned by ``microbench.characterize`` (or
+        any iterable of its ``ProbeResult``s).  Recognized probes override
+        the corresponding ``base`` constants (default: ``CPU_HOST``):
+
+          * ``matmul_<dtype>``  [GFLOP/s] -> ``peak_flops[dtype]``
+          * ``copy_bw``         [GB/s]    -> ``hbm_bw``
+          * ``dispatch_latency``[us]      -> ``step_overhead_s``
+
+        Unrecognized probes (e.g. the ``target_*`` echo entries) are
+        ignored; missing probes leave the base constant in place — a
+        partial probe run still yields a usable model (DESIGN.md §7).
+        """
+        base = base if base is not None else CPU_HOST
+        if isinstance(probes, Mapping):
+            probes = probes.values()
+        peak = dict(base.peak_flops)
+        hbm_bw = base.hbm_bw
+        overhead = base.step_overhead_s
+        for p in probes:
+            pname, value = p.name, p.value
+            if pname.startswith("matmul_"):
+                dtype = pname[len("matmul_"):]
+                if dtype in peak and value > 0:
+                    peak[dtype] = value * 1e9
+            elif pname == "copy_bw" and value > 0:
+                hbm_bw = value * 1e9
+            elif pname == "dispatch_latency" and value > 0:
+                overhead = value * 1e-6
+        return dataclasses.replace(base, name=name, peak_flops=peak,
+                                   hbm_bw=hbm_bw, step_overhead_s=overhead)
 
 
 def canonical_dtype(dtype) -> str:

@@ -3,21 +3,26 @@
 The paper microbenchmarks M4 (instruction throughput per dtype, ZA
 load/store strategies, multi-core scaling) and feeds the findings into
 the code generator.  This module provides the same probes for whatever
-device JAX is running on, plus the static v5e model used when the target
-is not the host (this container).  benchmarks/table1_throughput.py,
-fig23_bandwidth.py and fig1_scaling.py are the reporting front-ends.
+device JAX is running on, and — closing the paper's measure→generate
+loop — :func:`calibrate` folds the probe results into a
+:class:`~repro.core.machine.MachineModel` via
+:meth:`~repro.core.machine.MachineModel.from_probes`, so every planner
+cost model in ``repro.core.blocking`` ranks candidate tilings against the
+*measured* host instead of pinned Table-I constants (DESIGN.md §7).
+benchmarks/table1_throughput.py, fig23_bandwidth.py and fig1_scaling.py
+are the reporting front-ends.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .machine import MachineModel, TPU_V5E
+from .machine import CPU_HOST, MachineModel, TPU_V5E
 
 
 @dataclasses.dataclass
@@ -38,13 +43,13 @@ def _timeit(fn, *args, iters=5, warmup=2) -> float:
     return float(np.median(ts))
 
 
-def probe_matmul_flops(dtype="float32", size=512) -> ProbeResult:
+def probe_matmul_flops(dtype="float32", size=512, iters=5) -> ProbeResult:
     """Peak-ish matmul throughput on the host (Table I analogue)."""
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((size, size)), dtype)
     b = jnp.asarray(rng.standard_normal((size, size)), dtype)
     f = jax.jit(lambda a, b: a @ b)
-    s = _timeit(f, a, b)
+    s = _timeit(f, a, b, iters=iters)
     return ProbeResult(f"matmul_{dtype}", 2 * size**3 / s / 1e9, "GFLOP/s")
 
 
@@ -65,15 +70,16 @@ def probe_elementwise_latency() -> ProbeResult:
     return ProbeResult("dispatch_latency", s * 1e6, "us")
 
 
-def characterize(machine: MachineModel = TPU_V5E) -> Dict[str, ProbeResult]:
+def characterize(machine: MachineModel = TPU_V5E, *,
+                 size: int = 512, mbytes: int = 64) -> Dict[str, ProbeResult]:
     """Run all probes; pair host measurements with target-model constants."""
     out = {}
     for dtype in ("float32", "bfloat16"):
-        r = probe_matmul_flops(dtype)
+        r = probe_matmul_flops(dtype, size=size)
         out[r.name] = r
         out[f"target_peak_{dtype}"] = ProbeResult(
             f"target_peak_{dtype}", machine.peak(dtype) / 1e9, "GFLOP/s")
-    r = probe_copy_bandwidth()
+    r = probe_copy_bandwidth(mbytes=mbytes)
     out[r.name] = r
     out["target_hbm_bw"] = ProbeResult("target_hbm_bw",
                                        machine.hbm_bw / 1e9, "GB/s")
@@ -81,6 +87,23 @@ def characterize(machine: MachineModel = TPU_V5E) -> Dict[str, ProbeResult]:
     return out
 
 
+def calibrate(base: Optional[MachineModel] = None, *, size: int = 512,
+              mbytes: int = 64, name: str = "calibrated_host") -> MachineModel:
+    """Probe the host and return the calibrated machine model.
+
+    The measure→generate loop in one call: §III probes in,
+    planner-parameterizing model out.  ``size``/``mbytes`` shrink the
+    probe problem for fast smoke runs; ``base`` supplies the constants
+    the probes don't measure (memory capacities, tile geometry).
+    """
+    probes = characterize(base if base is not None else CPU_HOST,
+                          size=size, mbytes=mbytes)
+    return MachineModel.from_probes(probes, base=base, name=name)
+
+
 if __name__ == "__main__":
     for name, r in characterize().items():
         print(f"{r.name:24s} {r.value:12.2f} {r.unit}")
+    m = calibrate()
+    print(f"calibrated: peak_f32={m.peak('float32')/1e9:.1f} GFLOP/s "
+          f"bw={m.hbm_bw/1e9:.1f} GB/s overhead={m.step_overhead_s*1e6:.2f} us")

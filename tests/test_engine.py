@@ -89,6 +89,19 @@ def test_matmul_plan_cache_hit_on_repeat():
     assert s["kernel_misses"] >= 1 and s["kernel_hits"] >= 1
 
 
+def test_stats_expose_plan_source_counters():
+    """Every stats bucket carries three-tier provenance (DESIGN.md §7);
+    the default policy resolves via the analytical model."""
+    a, b = rand((48, 64)), rand((64, 80))
+    with use(backend="pallas"):
+        matmul(a, b)
+    s = engine.stats()["gemm"]
+    assert s["plan_source_model"] == 1
+    assert s["plan_source_autotuned"] == 0
+    assert s["plan_source_tuned_cache"] == 0
+    assert s["autotune_timings"] == 0
+
+
 def test_different_shapes_plan_separately():
     with use(backend="pallas"):
         matmul(rand((32, 32)), rand((32, 32)))
@@ -128,6 +141,17 @@ def test_lru_eviction_order():
     calls = []
     c.get_or_build(("f", 2), lambda: calls.append(1) or "b")
     assert calls == [1]
+
+
+def test_lru_put_overwrites_and_evicts():
+    c = LruCache(max_entries=2)
+    c.get_or_build(("f", 1), lambda: "a")
+    c.put(("f", 1), "A")  # overwrite in place, no growth
+    assert c.get_or_build(("f", 1), lambda: "x") == "A"
+    c.put(("f", 2), "b")
+    c.put(("f", 3), "c")  # over capacity: evicts the LRU entry ("f", 1)
+    assert c.keys() == [("f", 2), ("f", 3)]
+    assert c.evictions == 1
 
 
 def test_lru_family_stats():

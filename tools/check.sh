@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 gate: byte-compile the package and run the test suite.
+# Tier-1 gate: byte-compile the package, check docs consistency
+# (DESIGN.md section references, README module/path references), and run
+# the test suite.
 # Usage: bash tools/check.sh   (from anywhere; cd's to the repo root)
 set -euo pipefail
 
@@ -9,4 +11,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m compileall -q src
+python tools/check_docs.py
 python -m pytest -q

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Docs consistency gate (run by tools/check.sh and CI).
+
+Two contracts, one per doc surface:
+
+  * every ``DESIGN.md §n`` cited in a ``src/`` docstring (or in README.md)
+    must resolve to a real ``## §n`` section of DESIGN.md — stale section
+    numbers rot silently otherwise;
+  * README.md must only name things that exist: local markdown links,
+    repo paths in backticks, dotted ``repro.*`` module references, and
+    the imports inside fenced python snippets (attribute-verified when
+    the package is importable, file-verified when it is not).
+
+Stdlib only; exits non-zero with one line per violation.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Repo directories README paths may point into.
+_PATH_ROOTS = ("src/", "examples/", "benchmarks/", "tools/", "tests/")
+
+
+def design_sections() -> set:
+    design = (ROOT / "DESIGN.md").read_text()
+    return set(re.findall(r"^##\s+§(\d+)", design, flags=re.M))
+
+
+def check_design_refs(sections: set) -> list:
+    errors = []
+    files = sorted((ROOT / "src").rglob("*.py")) + [ROOT / "README.md"]
+    for path in files:
+        text = path.read_text()
+        for n in re.findall(r"DESIGN\.md\s+§(\d+)", text):
+            if n not in sections:
+                errors.append(f"{path.relative_to(ROOT)}: cites DESIGN.md "
+                              f"§{n}, which has no '## §{n}' section")
+    return errors
+
+
+def _module_exists(dotted: str) -> bool:
+    """True if some prefix of ``dotted`` (>= 2 components) is a module or
+    package under src/ — trailing components may be attributes."""
+    parts = dotted.split(".")
+    for end in range(len(parts), 1, -1):
+        base = ROOT / "src" / pathlib.Path(*parts[:end])
+        if base.with_suffix(".py").exists() or (base / "__init__.py").exists():
+            return True
+    return False
+
+
+def _import_names(module: str, names: list) -> list:
+    """Verify ``from module import names`` resolves; empty list if the
+    environment can't import (no jax): file existence already checked."""
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        import importlib
+        mod = importlib.import_module(module)
+    except Exception:
+        return []
+    finally:
+        sys.path.pop(0)
+    return [n for n in names if not hasattr(mod, n)]
+
+
+def check_readme() -> list:
+    readme = (ROOT / "README.md").read_text()
+    errors = []
+
+    # 1. local markdown links: [text](PAPER.md), [x](DESIGN.md#anchor) etc.
+    for target in re.findall(r"\]\(([^)]+)\)", readme):
+        if "://" in target:
+            continue
+        target = target.split("#", 1)[0]  # file part; anchors not checked
+        if target and not (ROOT / target).exists():
+            errors.append(f"README.md: broken link target {target!r}")
+
+    # 2. backticked repo paths.
+    for token in re.findall(r"`([^`\s]+)`", readme):
+        if token.startswith(_PATH_ROOTS) and not (ROOT / token).exists():
+            errors.append(f"README.md: names missing path {token!r}")
+
+    # 3. dotted repro.* module references anywhere in the doc.
+    for dotted in sorted(set(re.findall(r"\brepro(?:\.\w+)+", readme))):
+        if not _module_exists(dotted):
+            errors.append(f"README.md: names missing module {dotted!r}")
+
+    # 4. fenced snippets: python imports resolve, bash scripts exist.
+    for block in re.findall(r"```(?:python|bash)\n(.*?)```", readme, re.S):
+        for module, imported in re.findall(
+                r"^from\s+([\w.]+)\s+import\s+([\w, ]+)", block, re.M):
+            if not _module_exists(module):
+                errors.append(f"README.md: snippet imports missing module "
+                              f"{module!r}")
+                continue
+            for name in _import_names(module, re.split(r"[,\s]+",
+                                                       imported.strip())):
+                errors.append(f"README.md: snippet imports {name!r}, not an "
+                              f"attribute of {module!r}")
+        for script in re.findall(r"python\s+(?:-m\s+)?([\w/.-]+\.py)", block):
+            if not (ROOT / script).exists():
+                errors.append(f"README.md: snippet runs missing script "
+                              f"{script!r}")
+    return errors
+
+
+def main() -> int:
+    sections = design_sections()
+    if not sections:
+        print("check_docs: DESIGN.md has no '## §n' sections", file=sys.stderr)
+        return 1
+    errors = check_design_refs(sections) + check_readme()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        n_refs = sum(len(re.findall(r"DESIGN\.md\s+§\d+", p.read_text()))
+                     for p in (ROOT / "src").rglob("*.py"))
+        print(f"check_docs: OK ({len(sections)} DESIGN sections, "
+              f"{n_refs} src citations, README verified)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
