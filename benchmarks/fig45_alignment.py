@@ -31,8 +31,12 @@ def run():
         b = jnp.asarray(rng.standard_normal((K, n)), jnp.float32)
         d = GemmDescriptor(m=m, n=n, k=K)
         util = plan_gemm(d).utilization
+        # Edge strategies are a property of the multi-launch lowering
+        # (the fused path masks inherently, DESIGN.md §8) — pin
+        # fused=False so mask-vs-pad compares what it claims to.
         for edge in ("mask", "pad"):
-            f = jax.jit(lambda a, b, e=edge: gemm(a, b, edge=e))
+            f = jax.jit(lambda a, b, e=edge: gemm(a, b, edge=e,
+                                                  fused=False))
             us = time_fn(f, a, b, iters=3, warmup=1)
             emit(f"fig45/{name}_{edge}", us,
                  f"m={m};n={n};planner_utilization={util:.3f}")

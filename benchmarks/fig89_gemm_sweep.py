@@ -7,24 +7,71 @@ correctness path) and the XLA ``dot_general`` baseline (the "vendor
 library"), wall-clock on CPU, plus the planner's modeled v5e time.  For
 "nn"-with-strided-B we additionally compare the fused in-kernel transpose
 vs the two-pass scratch-panel transpose (§IV-C).
+
+Since the single-launch rework (DESIGN.md §8) the sweep also times the
+fused lowering against the multi-launch lowering of the *same* plan and
+reports per-call traced launch counts; the whole fused-vs-multi table is
+written to ``BENCH_gemm_fused.json`` so the perf trajectory is tracked
+across PRs.  ``run(smoke=True)`` is the CI end-to-end exercise of the
+fused path (reduced sizes/iterations, same code paths).
 """
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import GemmDescriptor, plan_gemm, matmul, backend
+from repro.core import GemmDescriptor, engine, plan_gemm, matmul, backend
 from repro.kernels.gemm import gemm
 from repro.kernels.transpose import transpose
 
 SIZES = [16, 64, 80, 128, 250, 512]
+SMOKE_SIZES = [16, 80]
 K = 512
+FUSED_JSON = "BENCH_gemm_fused.json"
 
 
-def run():
+def _launches(fn) -> int:
+    """Traced pallas_call launches one eager call emits (engine counter)."""
+    before = engine.stats().get("gemm", {}).get("launches", 0)
+    jax.block_until_ready(fn())
+    return engine.stats()["gemm"]["launches"] - before
+
+
+def _fused_vs_multi(label, plan, a, b, layout, iters, warmup, entries):
+    """Time the fused vs multi-launch lowering of one plan; record both
+    the wall-clock delta and the traced launch counts (DESIGN.md §8)."""
+    ff = jax.jit(lambda a, b: gemm(a, b, layout=layout, plan=plan,
+                                   fused=True))
+    fm = jax.jit(lambda a, b: gemm(a, b, layout=layout, plan=plan,
+                                   fused=False))
+    us_f = time_fn(ff, a, b, iters=iters, warmup=warmup)
+    us_m = time_fn(fm, a, b, iters=iters, warmup=warmup)
+    lf = _launches(lambda: gemm(a, b, layout=layout, plan=plan, fused=True))
+    lm = _launches(lambda: gemm(a, b, layout=layout, plan=plan, fused=False))
+    d = plan.desc
+    entries[label] = {
+        "m": d.m, "n": d.n, "k": d.k, "layout": layout,
+        "fused_us": round(us_f, 1), "multi_us": round(us_m, 1),
+        "delta_us": round(us_m - us_f, 1),
+        "speedup": round(us_m / us_f, 3) if us_f else None,
+        "launches_fused": lf, "launches_multi": lm,
+        "regions": len(plan.regions),
+    }
+    emit(f"fig89_fused/{label}", us_f,
+         f"multi_launch_us={us_m:.0f};delta_us={us_m - us_f:.0f};"
+         f"regions={len(plan.regions)};"
+         f"launches_fused={lf};launches_multi={lm}")
+
+
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
+    sizes = SMOKE_SIZES if smoke else SIZES
+    iters, warmup = (2, 1) if smoke else (3, 1)
+    fused_entries = {}
     for layout in ("nt", "nn"):
-        for mn in SIZES:
+        for mn in sizes:
             a = jnp.asarray(rng.standard_normal((mn, K)), jnp.float32)
             bshape = (mn, K) if layout == "nt" else (K, mn)
             b = jnp.asarray(rng.standard_normal(bshape), jnp.float32)
@@ -35,14 +82,40 @@ def run():
             us_x = time_fn(fx, a, b)
 
             fp = jax.jit(lambda a, b, l=layout: gemm(a, b, layout=l))
-            us_p = time_fn(fp, a, b, iters=3, warmup=1)
+            us_p = time_fn(fp, a, b, iters=iters, warmup=warmup)
 
             d = GemmDescriptor(m=mn, n=mn, k=K, layout=layout)
-            model_us = plan_gemm(d).predicted_seconds() * 1e6
+            plan = plan_gemm(d)
+            model_us = plan.predicted_seconds() * 1e6
             emit(f"fig89/{layout}_{mn}", us_x,
                  f"xla_gflops={flops/us_x/1e3:.1f};"
                  f"pallas_interpret_us={us_p:.0f};"
                  f"planner_v5e_model_us={model_us:.2f}")
+
+            # Fused single-launch vs multi-launch lowering of the same
+            # plan (DESIGN.md §8): wall-clock + traced launch counts.
+            _fused_vs_multi(f"{layout}_{mn}", plan, a, b, layout,
+                            iters, warmup, fused_entries)
+
+    # A genuinely multi-region plan (Fig 7 geometry scaled to the MXU):
+    # the fused path collapses its per-region launches to exactly one.
+    mn_h = 640
+    plan = plan_gemm(GemmDescriptor(m=mn_h, n=mn_h, k=K),
+                     force_block=(256, 256))
+    assert len(plan.regions) > 1, "hetero benchmark point must be multi-region"
+    a = jnp.asarray(rng.standard_normal((mn_h, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, mn_h)), jnp.float32)
+    _fused_vs_multi(f"hetero_{mn_h}", plan, a, b, "nn",
+                    iters, warmup, fused_entries)
+
+    with open(FUSED_JSON, "w") as f:
+        json.dump({"k": K, "mode": "smoke" if smoke else "full",
+                   "entries": fused_entries}, f, indent=1, sort_keys=True)
+    emit("fig89_fused/json", 0, f"wrote={FUSED_JSON};"
+         f"entries={len(fused_entries)}")
+
+    if smoke:
+        return
 
     # §IV-C: fused transpose vs two-pass panel transpose for strided B
     mn = 256

@@ -1,17 +1,22 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines, followed after each phase
-by per-family engine counters (cache traffic + plan provenance,
-``engine/<phase>/<family>`` rows).  Counters are reset at phase
-boundaries with ``engine.reset_stats(entries=False)`` — caches stay warm
-— so every table is per-phase, not cumulative.
+by per-family engine counters (cache traffic + plan provenance + traced
+launch counts, ``engine/<phase>/<family>`` rows).  Counters are reset at
+phase boundaries with ``engine.reset_stats(entries=False)`` — caches stay
+warm — so every table is per-phase, not cumulative.
 
   table1  — per-dtype matmul throughput (Table I)
   fig1    — mesh scaling efficiency from dry-run records (Fig 1)
   fig23   — data-movement staging strategies (Figs 2/3)
   fig45   — alignment / edge-handling strategies (Figs 4/5)
   fig7    — homogeneous vs heterogeneous blocking (Fig 7)
-  fig89   — small-GEMM sweep vs the vendor (XLA) baseline (Figs 8/9)
+  fig89   — small-GEMM sweep vs the vendor (XLA) baseline (Figs 8/9),
+            incl. fused-vs-multi-launch deltas (BENCH_gemm_fused.json)
+
+``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep at
+reduced size, exercising the fused single-launch GEMM path end-to-end on
+every PR and still emitting ``BENCH_gemm_fused.json``.
 """
 import argparse
 import sys
@@ -21,6 +26,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig7,fig89")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-size CI run of the GEMM sweep "
+                         "(fused path end-to-end)")
     args = ap.parse_args()
     from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
                             fig45_alignment, fig7_blocking, fig89_gemm_sweep)
@@ -32,6 +40,10 @@ def main() -> None:
         "fig7": fig7_blocking.run,
         "fig89": fig89_gemm_sweep.run,
     }
+    if args.smoke:
+        if args.only:
+            ap.error("--smoke selects its own suite; drop --only")
+        suites = {"fig89": lambda: fig89_gemm_sweep.run(smoke=True)}
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     from repro.core import engine
@@ -46,14 +58,15 @@ def main() -> None:
 
 
 def _emit_engine_stats(phase: str, engine) -> None:
-    """Per-family plan/kernel cache traffic + plan provenance for one
-    phase (the paper's dispatch-layer hit/miss view)."""
+    """Per-family plan/kernel cache traffic, plan provenance and traced
+    launch counts for one phase (the paper's dispatch-layer view)."""
     for fam, c in sorted(engine.stats().items()):
         print(f"engine/{phase}/{fam},0,"
               f"plan_hits={c['plan_hits']};plan_misses={c['plan_misses']};"
               f"kernel_hits={c['kernel_hits']};"
               f"kernel_misses={c['kernel_misses']};"
               f"kernel_evictions={c['kernel_evictions']};"
+              f"launches={c['launches']};"
               f"plan_src_model={c['plan_source_model']};"
               f"plan_src_autotuned={c['plan_source_autotuned']};"
               f"plan_src_tuned_cache={c['plan_source_tuned_cache']};"

@@ -17,8 +17,8 @@ from repro.core.descriptor import (  # noqa: F401
     KernelDescriptor, SsdChunkDescriptor, TransposeDescriptor)
 from repro.core.blocking import (  # noqa: F401
     BlockingPlan, FlashPlan, GroupedGemmPlan, Region, SsdChunkPlan,
-    TransposePlan, candidate_plans, palette, plan_flash, plan_gemm,
-    plan_grouped, plan_ssd, plan_transpose)
+    TileSchedule, TransposePlan, candidate_plans, fused_legal, palette,
+    plan_flash, plan_gemm, plan_grouped, plan_ssd, plan_transpose)
 from repro.core.machine import (  # noqa: F401
     CPU_HOST, MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine)
 from repro.core.config import (  # noqa: F401

@@ -58,7 +58,8 @@ def plan_to_record(plan: Any) -> Dict[str, Any]:
         return {"family": "gemm",
                 "regions": [[r.row0, r.col0, r.rows, r.cols, r.bm, r.bn]
                             for r in plan.regions],
-                "bk": plan.bk, "heterogeneous": plan.heterogeneous}
+                "bk": plan.bk, "heterogeneous": plan.heterogeneous,
+                "fused": plan.fused}
     if isinstance(plan, FlashPlan):
         return {"family": "flash_attention",
                 "block_q": plan.block_q, "block_k": plan.block_k}
@@ -82,8 +83,11 @@ def plan_from_record(desc: KernelDescriptor,
             return None
         if family == "gemm":
             regions = tuple(Region(*map(int, r)) for r in record["regions"])
+            # Pre-fusion cache entries lack "fused": replay them on the
+            # multi-launch path they were actually timed on.
             return BlockingPlan(desc, regions, int(record["bk"]),
                                 bool(record["heterogeneous"]),
+                                fused=bool(record.get("fused", False)),
                                 plan_source="autotuned")
         if family == "flash_attention":
             return FlashPlan(desc, int(record["block_q"]),
@@ -256,6 +260,17 @@ def search(execute, desc: KernelDescriptor, machine: MachineModel,
     the analytical tier (winner ``None``).
     """
     candidates = candidate_plans(desc, machine, top_k=budget)
+    # A forced execution-path override (config.fused="on"/"off") makes the
+    # executor ignore the candidate's ``fused`` bit, so the two lowerings
+    # of one region cover would be timed on the identical path and an
+    # *untimed* fused bit could be persisted.  Keep only candidates whose
+    # bit matches the path that will actually run (DESIGN.md §8).
+    from .config import get_config
+    mode = get_config().fused
+    if mode != "auto":
+        want = mode == "on"
+        candidates = [c for c in candidates
+                      if getattr(c, "fused", want) == want]
     if len(candidates) < 2:
         # Nothing to choose between (e.g. ssd_chunk has no free knobs):
         # timing would cost real executions with no decision to make, and

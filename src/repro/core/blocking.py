@@ -118,11 +118,63 @@ class Region:
 
 
 @dataclasses.dataclass(frozen=True)
+class TileSchedule:
+    """Flattened tile schedule of one :class:`BlockingPlan` (DESIGN.md §8).
+
+    The fused single-launch GEMM kernel walks this instead of launching one
+    ``pallas_call`` per region: every region's grid is unrolled into a flat
+    tuple of tiles, all trace-time constants, which the kernel receives as
+    a scalar-prefetch table and indexes by ``pl.program_id``.
+
+    ``blocks`` are the distinct effective block geometries (region blocks
+    clamped to the matrix so a clamped load window always fits the operand
+    buffers); each tile row is
+
+        (row0, col0, row_end, col_end, row_start, col_start, block_id)
+
+    where ``[row0, row_end) x [col0, col_end)`` is the set of C elements
+    the tile owns (the predicate mask) and ``(row_start, col_start)`` is
+    the clamped origin of its fixed-shape load/store window — the paper's
+    two-step load/store path: edge windows slide inward and the mask keeps
+    each element owned by exactly one tile.
+    """
+
+    m: int
+    n: int
+    k: int
+    bk: int
+    k_steps: int
+    blocks: Tuple[Tuple[int, int], ...]
+    tiles: Tuple[Tuple[int, int, int, int, int, int, int], ...]
+
+    @property
+    def num_tiles(self) -> int:
+        return len(self.tiles)
+
+    def validate(self):
+        """Every C element owned by exactly one tile mask."""
+        owned = 0
+        for row0, col0, row_end, col_end, rs, cs, bid in self.tiles:
+            bm_e, bn_e = self.blocks[bid]
+            assert 0 <= rs and rs + bm_e <= self.m, (rs, bm_e, self.m)
+            assert 0 <= cs and cs + bn_e <= self.n, (cs, bn_e, self.n)
+            assert rs <= row0 and row_end <= rs + bm_e
+            assert cs <= col0 and col_end <= cs + bn_e
+            owned += (row_end - row0) * (col_end - col0)
+        assert owned == self.m * self.n, (owned, self.m * self.n)
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
 class BlockingPlan:
     desc: GemmDescriptor
     regions: Tuple[Region, ...]
     bk: int
     heterogeneous: bool
+    # Execute the whole plan (regions + batch) in ONE pallas_call via the
+    # flattened tile schedule (DESIGN.md §8) instead of one launch per
+    # region stitched with dynamic_slice / dynamic_update_slice.
+    fused: bool = False
     # Provenance: "model" (analytical planner) or "autotuned" (empirically
     # timed winner, fresh or replayed from the tuning cache — DESIGN.md §7).
     plan_source: str = "model"
@@ -144,7 +196,40 @@ class BlockingPlan:
         return sum(r.input_elems(self.desc.k) for r in self.regions)
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
-        return _predict_seconds(self.regions, self.desc, self.bk, machine)
+        return _predict_seconds(self.regions, self.desc, self.bk, machine,
+                                fused=self.fused)
+
+    def tile_schedule(self) -> TileSchedule:
+        """Flatten the region cover into the fused kernel's tile tables.
+
+        Region blocks are clamped to the matrix (``bm_e = min(bm, m)``) so
+        every fixed-shape window fits the real operand buffers; a clamped
+        block walks its region with the *effective* stride, so raggedness
+        is absorbed by the per-tile ownership mask, never by the shapes.
+        """
+        desc = self.desc
+        m, n, k = desc.m, desc.n, desc.k
+        bk = max(1, min(self.bk, k))
+        blocks: List[Tuple[int, int]] = []
+        ids = {}
+        tiles = []
+        for r in self.regions:
+            bm_e, bn_e = min(r.bm, m), min(r.bn, n)
+            bid = ids.get((bm_e, bn_e))
+            if bid is None:
+                bid = ids[(bm_e, bn_e)] = len(blocks)
+                blocks.append((bm_e, bn_e))
+            for i in range(ceil_div(r.rows, bm_e)):
+                row0 = r.row0 + i * bm_e
+                row_end = min(row0 + bm_e, r.row0 + r.rows)
+                for j in range(ceil_div(r.cols, bn_e)):
+                    col0 = r.col0 + j * bn_e
+                    col_end = min(col0 + bn_e, r.col0 + r.cols)
+                    tiles.append((row0, col0, row_end, col_end,
+                                  min(row0, m - bm_e), min(col0, n - bn_e),
+                                  bid))
+        return TileSchedule(m=m, n=n, k=k, bk=bk, k_steps=ceil_div(k, bk),
+                            blocks=tuple(blocks), tiles=tuple(tiles))
 
     def validate(self):
         """Every C element covered exactly once (tested by hypothesis)."""
@@ -179,13 +264,17 @@ def round_up(a: int, b: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
-                     machine: MachineModel) -> float:
+                     machine: MachineModel, fused: bool = False) -> float:
     """Napkin-math time model used to rank candidate plans.
 
-    Three terms, mirroring the roofline decomposition used throughout the
+    Four terms, mirroring the roofline decomposition used throughout the
     system: systolic compute on *issued* MACs (masked lanes still occupy
-    the MXU — the SME predicate analogue), HBM traffic for inputs + C, and
-    per-grid-step overhead.
+    the MXU — the SME predicate analogue), HBM traffic for inputs + C,
+    per-grid-step overhead, and per-``pallas_call`` dispatch overhead.
+    The fused path (DESIGN.md §8) pays dispatch once; the multi-launch
+    path pays it per region plus the inter-region stitching traffic
+    (``dynamic_slice`` operand copies and the ``zeros`` +
+    ``dynamic_update_slice`` assembly of C).
     """
     k = desc.k
     in_sz = jnp.dtype(desc.in_dtype).itemsize
@@ -193,11 +282,21 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
     issued = sum(r.issued_macs(k) for r in regions)
     compute_s = 2.0 * issued / machine.peak(desc.in_dtype)
     traffic = sum(r.input_elems(k) for r in regions) * in_sz
-    traffic += sum(r.rows * r.cols for r in regions) * out_sz * (2 if desc.accumulate else 1)
+    out_elems = sum(r.rows * r.cols for r in regions)
+    traffic += out_elems * out_sz * (2 if desc.accumulate else 1)
     memory_s = traffic / machine.hbm_bw
     steps = sum(r.num_microkernels for r in regions) * ceil_div(k, bk)
+    launches = 1 if fused else len(regions)
+    stitch_s = 0.0
+    if not fused and len(regions) > 1:
+        # Operand slices are copied in and region outputs copied out again
+        # when stitching C — traffic the fused path never generates.
+        stitch_bytes = sum((r.rows + r.cols) * k for r in regions) * in_sz
+        stitch_bytes += 2 * out_elems * out_sz
+        stitch_s = stitch_bytes / machine.hbm_bw
     # compute and memory overlap in the pipelined kernel: take max + overhead
-    return max(compute_s, memory_s) + steps * machine.step_overhead_s
+    return (max(compute_s, memory_s) + steps * machine.step_overhead_s
+            + launches * machine.launch_overhead_s + stitch_s)
 
 
 def _pick_bk(desc: GemmDescriptor, bm: int, bn: int,
@@ -225,6 +324,23 @@ def _pick_bk(desc: GemmDescriptor, bm: int, bn: int,
 # Planner
 # ---------------------------------------------------------------------------
 
+def fused_legal(desc: GemmDescriptor,
+                machine: MachineModel = DEFAULT_MACHINE) -> bool:
+    """Can this GEMM run as one fused ``pallas_call`` (DESIGN.md §8)?
+
+    The fused kernel stages the whole per-batch-element operands (plus the
+    output and the accumulator scratch) in VMEM and slides tile windows
+    over them in-kernel, so it is only legal when they all fit.  Batch is a
+    grid dimension — only one batch slice is resident at a time.
+    """
+    in_sz = jnp.dtype(desc.in_dtype).itemsize
+    out_sz = jnp.dtype(desc.out_dtype).itemsize
+    need = (desc.m * desc.k + desc.k * desc.n) * in_sz
+    need += desc.m * desc.n * out_sz * (2 if desc.accumulate else 1)
+    need += ACC_BUDGET_ELEMS * 4  # accumulator scratch upper bound
+    return need <= machine.vmem_bytes
+
+
 def plan_gemm(desc: GemmDescriptor,
               machine: MachineModel = DEFAULT_MACHINE,
               budget: int = ACC_BUDGET_ELEMS,
@@ -234,10 +350,14 @@ def plan_gemm(desc: GemmDescriptor,
 
     ``heterogeneous=False`` reproduces the paper's baseline (Fig 7 left):
     one blocking tiles the whole matrix.  ``force_block`` pins the primary
-    blocking (used by benchmarks and the perf hillclimb).
+    blocking (used by benchmarks and the perf hillclimb).  The analytical
+    planner takes the paper's stance on dispatch: one kernel per GEMM —
+    plans come out ``fused`` whenever the operands fit VMEM
+    (:func:`fused_legal`); the autotuner refines that choice empirically.
     """
     m, n = desc.m, desc.n
     shapes = palette(budget, machine, desc.in_dtype)
+    fused = fused_legal(desc, machine)
 
     if force_block is not None:
         primary = force_block
@@ -247,15 +367,18 @@ def plan_gemm(desc: GemmDescriptor,
     if not heterogeneous:
         regions = (Region(0, 0, m, n, *primary),)
         bk = _pick_bk(desc, *primary, machine)
-        plan = BlockingPlan(desc, regions, bk, heterogeneous=False)
+        plan = BlockingPlan(desc, regions, bk, heterogeneous=False,
+                            fused=fused)
         return plan
 
     regions = _heterogeneous_cover(m, n, primary, shapes, desc, machine)
     # Compare against the best homogeneous plan and keep the cheaper one —
     # for aligned shapes the interior cover *is* the homogeneous plan.
     bk = _pick_bk(desc, *primary, machine)
-    plan = BlockingPlan(desc, tuple(regions), bk, heterogeneous=len(regions) > 1)
-    homo = BlockingPlan(desc, (Region(0, 0, m, n, *primary),), bk, False)
+    plan = BlockingPlan(desc, tuple(regions), bk,
+                        heterogeneous=len(regions) > 1, fused=fused)
+    homo = BlockingPlan(desc, (Region(0, 0, m, n, *primary),), bk, False,
+                        fused=fused)
     if homo.predicted_seconds(machine) < plan.predicted_seconds(machine):
         return homo
     return plan
@@ -560,11 +683,17 @@ def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
             cands.append(plan)
 
     if fam == "gemm":
+        # Fused (single-launch) and multi-launch lowerings of one region
+        # cover are distinct candidates: the autotuner times both and the
+        # tuned cache records which won (DESIGN.md §8).
+        fused_ok = fused_legal(desc, machine)
         for shape in palette(ACC_BUDGET_ELEMS, machine, desc.in_dtype):
             for het in (True, False):
                 p = plan_gemm(desc, machine, heterogeneous=het,
                               force_block=shape)
-                add(p, (p.regions, p.bk))
+                for fused in ((True, False) if fused_ok else (False,)):
+                    q = dataclasses.replace(p, fused=fused)
+                    add(q, (q.regions, q.bk, fused))
     elif fam == "flash_attention":
         for bq, bk in _flash_legal(desc, machine):
             add(FlashPlan(desc, bq, bk), (bq, bk))

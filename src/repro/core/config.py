@@ -15,10 +15,15 @@ serves a request (generated SME kernel vs vendor BLAS).  Ours has more:
                     tilings empirically instead of trusting the model
                     (DESIGN.md §7); ``autotune_budget`` caps K;
   * ``tuning_cache`` — path of the on-disk JSON tuning cache that makes
-                    autotuned winners survive process restarts.
+                    autotuned winners survive process restarts;
+  * ``fused``     — GEMM plan-execution policy (DESIGN.md §8): "auto"
+                    follows the plan's ``fused`` bit (planner/autotuner
+                    choice), "on"/"off" force the single-launch fused or
+                    the per-region multi-launch lowering.
 
 Env-var overrides seed the process default at import: ``REPRO_AUTOTUNE=1``,
-``REPRO_TUNING_CACHE=/path/to/cache.json``, ``REPRO_AUTOTUNE_BUDGET=K``.
+``REPRO_TUNING_CACHE=/path/to/cache.json``, ``REPRO_AUTOTUNE_BUDGET=K``,
+``REPRO_FUSED=auto|on|off``.
 
 Configuration is layered: a process-wide default (``configure``) under a
 thread-local override stack (``use`` context manager), so a serving thread
@@ -38,6 +43,7 @@ from typing import Optional
 from .machine import DEFAULT_MACHINE, MachineModel, get_machine
 
 BACKENDS = ("xla", "pallas")
+FUSED_MODES = ("auto", "on", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +59,9 @@ class EngineConfig:
     autotune: bool = False
     autotune_budget: int = 8
     tuning_cache: Optional[str] = None
+    # GEMM plan-execution policy (DESIGN.md §8): "auto" honors the plan's
+    # fused bit; "on"/"off" force single-launch / multi-launch lowering.
+    fused: str = "auto"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -61,6 +70,9 @@ class EngineConfig:
         if self.autotune_budget < 1:
             raise ValueError(f"autotune_budget must be >= 1, "
                              f"got {self.autotune_budget}")
+        if self.fused not in FUSED_MODES:
+            raise ValueError(f"fused must be one of {FUSED_MODES}, "
+                             f"got {self.fused!r}")
 
     def replace(self, **kw) -> "EngineConfig":
         kw = {k: v for k, v in kw.items() if v is not None}
@@ -83,11 +95,23 @@ def _env_default() -> EngineConfig:
             import warnings
             warnings.warn(f"ignoring REPRO_AUTOTUNE_BUDGET={raw!r}: {e}")
             budget = EngineConfig.autotune_budget
+    fused = os.environ.get("REPRO_FUSED", "").lower()
+    if fused in ("1", "true", "yes"):
+        fused = "on"
+    elif fused in ("0", "false", "no"):
+        fused = "off"
+    if fused not in FUSED_MODES:
+        if fused:
+            import warnings
+            warnings.warn(f"ignoring REPRO_FUSED={fused!r}: "
+                          f"must be one of {FUSED_MODES}")
+        fused = "auto"
     return EngineConfig(
         autotune=os.environ.get("REPRO_AUTOTUNE", "").lower()
         in ("1", "true", "yes", "on"),
         autotune_budget=budget,
         tuning_cache=os.environ.get("REPRO_TUNING_CACHE") or None,
+        fused=fused,
     )
 
 
@@ -112,14 +136,15 @@ def configure(*, backend: Optional[str] = None,
               interpret: Optional[bool] = None,
               machine=None, autotune: Optional[bool] = None,
               autotune_budget: Optional[int] = None,
-              tuning_cache: Optional[str] = None) -> EngineConfig:
+              tuning_cache: Optional[str] = None,
+              fused: Optional[str] = None) -> EngineConfig:
     """Mutate the process-wide default (all threads without an override)."""
     global _DEFAULT
     with _default_lock:
         _DEFAULT = _DEFAULT.replace(backend=backend, interpret=interpret,
                                     machine=machine, autotune=autotune,
                                     autotune_budget=autotune_budget,
-                                    tuning_cache=tuning_cache)
+                                    tuning_cache=tuning_cache, fused=fused)
         return _DEFAULT
 
 
@@ -127,13 +152,14 @@ def configure(*, backend: Optional[str] = None,
 def use(*, backend: Optional[str] = None, interpret: Optional[bool] = None,
         machine=None, autotune: Optional[bool] = None,
         autotune_budget: Optional[int] = None,
-        tuning_cache: Optional[str] = None):
+        tuning_cache: Optional[str] = None, fused: Optional[str] = None):
     """Thread-local override: ``with use(backend="pallas"): ...``."""
     stack = _stack()
     stack.append(get_config().replace(backend=backend, interpret=interpret,
                                       machine=machine, autotune=autotune,
                                       autotune_budget=autotune_budget,
-                                      tuning_cache=tuning_cache))
+                                      tuning_cache=tuning_cache,
+                                      fused=fused))
     try:
         yield stack[-1]
     finally:

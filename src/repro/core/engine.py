@@ -87,6 +87,13 @@ PLAN_SOURCES = ("tuned_cache", "autotuned", "model")
 _plan_sources: Dict[str, Dict[str, int]] = {}
 _autotune_timings: Dict[str, int] = {}
 
+# Traced pallas_call launches per family (DESIGN.md §8): each family
+# executor reports how many kernel launches one execute() emits — the
+# fused GEMM path reports exactly 1 where the multi-launch path reports
+# one per plan region.  Counted at trace/execute time, so a jit-compiled
+# repeat call (which never re-enters Python) does not re-count.
+_launches: Dict[str, int] = {}
+
 
 def _note_source(family: str, source: str):
     with _plan_calls_lock:
@@ -98,6 +105,13 @@ def _note_source(family: str, source: str):
 def _note_timings(family: str, n: int):
     with _plan_calls_lock:
         _autotune_timings[family] = _autotune_timings.get(family, 0) + n
+
+
+def count_launches(family: str, n: int = 1):
+    """Family executors call this once per execute() with the number of
+    kernel launches they are about to emit (``stats()["…"]["launches"]``)."""
+    with _plan_calls_lock:
+        _launches[family] = _launches.get(family, 0) + n
 
 
 def register_family(name: str, planner, execute) -> Family:
@@ -246,7 +260,7 @@ def stats() -> Dict[str, Dict[str, int]]:
 
     {family: {plan_hits, plan_misses, plan_evictions, planner_calls,
               plan_source_tuned_cache, plan_source_autotuned,
-              plan_source_model, autotune_timings,
+              plan_source_model, autotune_timings, launches,
               kernel_hits, kernel_misses, kernel_evictions}}
     """
     out: Dict[str, Dict[str, int]] = {}
@@ -256,7 +270,7 @@ def stats() -> Dict[str, Dict[str, int]]:
             "plan_hits": 0, "plan_misses": 0, "plan_evictions": 0,
             "planner_calls": 0,
             **{f"plan_source_{s}": 0 for s in PLAN_SOURCES},
-            "autotune_timings": 0,
+            "autotune_timings": 0, "launches": 0,
             "kernel_hits": 0, "kernel_misses": 0, "kernel_evictions": 0,
         })
 
@@ -274,6 +288,8 @@ def stats() -> Dict[str, Dict[str, int]]:
                 b[f"plan_source_{s}"] = n
         for fam, n in _autotune_timings.items():
             bucket(fam)["autotune_timings"] = n
+        for fam, n in _launches.items():
+            bucket(fam)["launches"] = n
     for fam, c in GLOBAL_KERNEL_CACHE.family_stats().items():
         b = bucket(fam)
         b["kernel_hits"] = c["hits"]
@@ -303,3 +319,4 @@ def reset_stats(*, entries: bool = True):
         _plan_calls.clear()
         _plan_sources.clear()
         _autotune_timings.clear()
+        _launches.clear()

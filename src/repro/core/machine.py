@@ -34,6 +34,12 @@ import jax.numpy as jnp
 # wall-clock.
 DEFAULT_STEP_OVERHEAD_S = 2.0e-7
 
+# Fixed cost (seconds) charged per *kernel launch* (one ``pallas_call``
+# dispatch: argument marshalling, grid setup, pipeline warm-up).  This is
+# what the fused single-launch GEMM path (DESIGN.md §8) amortizes: a
+# multi-launch plan pays it once per region, the fused plan exactly once.
+DEFAULT_LAUNCH_OVERHEAD_S = 2.0e-6
+
 
 @dataclasses.dataclass(frozen=True)
 class MachineModel:
@@ -61,6 +67,9 @@ class MachineModel:
     # --- dispatch ----------------------------------------------------------
     # per-microkernel/grid-step launch overhead charged by plan cost models
     step_overhead_s: float = DEFAULT_STEP_OVERHEAD_S
+    # per-pallas_call dispatch overhead (the cost the fused single-launch
+    # path pays once and the multi-launch path pays per region)
+    launch_overhead_s: float = DEFAULT_LAUNCH_OVERHEAD_S
 
     # ---------------------------------------------------------------------
     @property
@@ -126,6 +135,7 @@ class MachineModel:
         peak = dict(base.peak_flops)
         hbm_bw = base.hbm_bw
         overhead = base.step_overhead_s
+        launch = base.launch_overhead_s
         for p in probes:
             pname, value = p.name, p.value
             if pname.startswith("matmul_"):
@@ -135,9 +145,15 @@ class MachineModel:
             elif pname == "copy_bw" and value > 0:
                 hbm_bw = value * 1e9
             elif pname == "dispatch_latency" and value > 0:
+                # The probe measures one full dispatch round-trip: it is
+                # both the per-step pipeline cost bound (PR 2 semantics)
+                # and the per-pallas_call launch cost the fused GEMM path
+                # amortizes (DESIGN.md §8).
                 overhead = value * 1e-6
+                launch = value * 1e-6
         return dataclasses.replace(base, name=name, peak_flops=peak,
-                                   hbm_bw=hbm_bw, step_overhead_s=overhead)
+                                   hbm_bw=hbm_bw, step_overhead_s=overhead,
+                                   launch_overhead_s=launch)
 
 
 def canonical_dtype(dtype) -> str:

@@ -29,6 +29,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -145,6 +146,170 @@ def build_gemm_kernel(*, m: int, n: int, k: int, bm: int, bn: int, bk: int,
     def run(a, b, bias=None, c_in=None):
         args = [a, b]
         if epilogue in ("bias", "bias_gelu", "bias_silu"):
+            assert bias is not None
+            args.append(bias.reshape(1, n))
+        if accumulate:
+            assert c_in is not None
+            args.append(c_in)
+        return kernel(*args)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Fused single-launch plan execution (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
+                       epilogue, accumulate, out_dtype):
+    """Walk the flattened tile schedule: one grid step = one (tile, K-panel).
+
+    refs: a, b, [bias], [c_in], out, acc_scratch — each a full per-batch
+    operand block.  The tile table rides in scalar-prefetch SMEM; per-tile
+    geometry is selected by ``lax.switch`` over the distinct effective
+    block shapes, and every load/store is the paper's two-step path: a
+    fixed-shape window at a clamped origin plus an ownership mask.
+    """
+    idx = 0
+    a_ref = refs[idx]; idx += 1
+    b_ref = refs[idx]; idx += 1
+    bias_ref = None
+    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+        bias_ref = refs[idx]; idx += 1
+    c_ref = None
+    if accumulate:
+        c_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    acc_ref = refs[idx]
+
+    t = pl.program_id(1)
+    ks = pl.program_id(2)
+    row0, col0 = tbl_ref[t, 0], tbl_ref[t, 1]
+    row_end, col_end = tbl_ref[t, 2], tbl_ref[t, 3]
+    rs, cs = tbl_ref[t, 4], tbl_ref[t, 5]
+
+    k0 = ks * bk                       # nominal K-panel start
+    kstart = jnp.minimum(k0, k - bk)   # clamped load origin (K tail)
+
+    def make_branch(bm_e, bn_e):
+        def branch():
+            @pl.when(ks == 0)
+            def _init():
+                if accumulate:
+                    cw = c_ref[0, pl.ds(rs, bm_e), pl.ds(cs, bn_e)]
+                    acc_ref[0:bm_e, 0:bn_e] = cw.astype(jnp.float32)
+                else:
+                    acc_ref[0:bm_e, 0:bn_e] = jnp.zeros((bm_e, bn_e),
+                                                        jnp.float32)
+
+            a = a_ref[0, pl.ds(rs, bm_e), pl.ds(kstart, bk)]
+            if layout == "nn":
+                b = b_ref[0, pl.ds(kstart, bk), pl.ds(cs, bn_e)]
+                dn = (((1,), (0,)), ((), ()))
+                b_k_dim = 0
+            else:  # nt: B window is (bn_e, bk); contract minor dims
+                b = b_ref[0, pl.ds(cs, bn_e), pl.ds(kstart, bk)]
+                dn = (((1,), (1,)), ((), ()))
+                b_k_dim = 1
+            if k % bk:
+                # K-tail predication: the clamped window overlaps the
+                # previous panel, so keep only lanes at/after the nominal
+                # start.  `where` on both operands (not multiply) because
+                # the overlap may hold non-finite user data.
+                kk = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1) + kstart
+                a = jnp.where(kk >= k0, a, 0)
+                kkb = jax.lax.broadcasted_iota(jnp.int32, b.shape,
+                                               b_k_dim) + kstart
+                b = jnp.where(kkb >= k0, b, 0)
+            acc_ref[0:bm_e, 0:bn_e] += jax.lax.dot_general(
+                a, b, dn, preferred_element_type=jnp.float32)
+
+            @pl.when(ks == k_steps - 1)
+            def _store():
+                out = acc_ref[0:bm_e, 0:bn_e]
+                bias_blk = None
+                if bias_ref is not None:
+                    bias_blk = bias_ref[0:1, pl.ds(cs, bn_e)]
+                out = _apply_epilogue(out, epilogue, bias_blk)
+                out = out.astype(out_dtype)
+                # Predicated two-step store: write only the elements this
+                # tile owns, preserving neighbours under the clamped
+                # window (each C element is owned by exactly one tile).
+                rows = jax.lax.broadcasted_iota(
+                    jnp.int32, (bm_e, bn_e), 0) + rs
+                cols = jax.lax.broadcasted_iota(
+                    jnp.int32, (bm_e, bn_e), 1) + cs
+                own = ((rows >= row0) & (rows < row_end)
+                       & (cols >= col0) & (cols < col_end))
+                old = o_ref[0, pl.ds(rs, bm_e), pl.ds(cs, bn_e)]
+                o_ref[0, pl.ds(rs, bm_e), pl.ds(cs, bn_e)] = \
+                    jnp.where(own, out, old)
+        return branch
+
+    branches = [make_branch(bm_e, bn_e) for bm_e, bn_e in blocks]
+    if len(branches) == 1:
+        branches[0]()
+    else:
+        jax.lax.switch(tbl_ref[t, 6], branches)
+
+
+def build_fused_gemm_kernel(*, schedule, batch: int = 0, layout: str = "nn",
+                            epilogue: Optional[str] = None,
+                            accumulate: bool = False, in_dtype=jnp.float32,
+                            out_dtype=jnp.float32, interpret: bool = True):
+    """Generate ONE pallas_call executing a whole blocking plan + batch.
+
+    ``schedule`` is a :class:`repro.core.blocking.TileSchedule`.  Returns
+    ``f(a, b, [bias], [c_in]) -> out`` over rank-3 operands
+    ``a:(nb,m,k)``, ``b:(nb,k,n)|(nb,n,k)``, ``out:(nb,m,n)`` with
+    ``nb = max(1, batch)`` — the batch is a leading grid dimension, not a
+    ``vmap``.  The supergrid is ``(batch, tiles, k_steps)``; the tile
+    table travels as a scalar-prefetch operand (DESIGN.md §8).
+    """
+    m, n, k = schedule.m, schedule.n, schedule.k
+    bk, k_steps = schedule.bk, schedule.k_steps
+    nb = max(1, batch)
+    has_bias = epilogue in ("bias", "bias_gelu", "bias_silu")
+    bm_max = max(b[0] for b in schedule.blocks)
+    bn_max = max(b[1] for b in schedule.blocks)
+    # numpy, not jnp: the builder may run inside a jit trace, and a traced
+    # constant must not leak into the closure the kernel cache keeps.
+    table = np.asarray(schedule.tiles, dtype=np.int32)  # (tiles, 7)
+
+    body = functools.partial(
+        _fused_kernel_body, blocks=schedule.blocks, layout=layout, k=k,
+        bk=bk, k_steps=k_steps, epilogue=epilogue, accumulate=accumulate,
+        out_dtype=jnp.dtype(out_dtype))
+
+    in_specs = [
+        pl.BlockSpec((1, m, k), lambda b, t, ks, tbl: (b, 0, 0)),
+        pl.BlockSpec((1, k, n) if layout == "nn" else (1, n, k),
+                     lambda b, t, ks, tbl: (b, 0, 0)),
+    ]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, n), lambda b, t, ks, tbl: (0, 0)))
+    if accumulate:
+        in_specs.append(pl.BlockSpec((1, m, n),
+                                     lambda b, t, ks, tbl: (b, 0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the tile table
+        grid=(nb, schedule.num_tiles, k_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, m, n), lambda b, t, ks, tbl: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm_max, bn_max), jnp.float32)],
+    )
+
+    kernel = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )
+
+    def run(a, b, bias=None, c_in=None):
+        args = [table, a, b]
+        if has_bias:
             assert bias is not None
             args.append(bias.reshape(1, n))
         if accumulate:

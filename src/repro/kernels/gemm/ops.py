@@ -1,23 +1,42 @@
 """Blocked GEMM — the engine's founding kernel family.
 
-Executes a :class:`repro.core.blocking.BlockingPlan`: each plan region
-becomes one shape-specialized ``pallas_call`` (the paper's "seven
-microkernel executions", Fig 7), whose outputs are assembled into C with
-``dynamic_update_slice`` — under ``jit`` XLA fuses the assembly.
+Executes a :class:`repro.core.blocking.BlockingPlan` one of two ways
+(DESIGN.md §8):
+
+  * **fused** (``plan.fused``, the paper's §IV stance): the whole plan —
+    every region's tile grid *and* the batch — runs in ONE
+    ``pallas_call``.  The plan's flattened :meth:`tile_schedule` rides in
+    a scalar-prefetch table; the kernel walks a ``(batch, tiles, k)``
+    supergrid, selects per-region block geometry by static table, and
+    writes each tile straight into the real output buffer with predicated
+    two-step stores.  No ``dynamic_slice`` operand copies, no ``zeros`` +
+    ``dynamic_update_slice`` assembly, no ``vmap``.
+  * **multi-launch** (the pre-fusion lowering, kept for VMEM-oversized
+    problems and as the autotuner's alternative): each plan region becomes
+    one shape-specialized ``pallas_call`` (the paper's "seven microkernel
+    executions", Fig 7) whose outputs are stitched into C with
+    ``dynamic_update_slice``; batch goes through ``jax.vmap``.
+
+Which path runs is ``config.fused`` ("auto" follows the plan bit that the
+planner/autotuner set; "on"/"off" force it).  Both paths report traced
+launch counts through ``engine.count_launches`` → ``engine.stats()``.
 
 Registered with :mod:`repro.core.engine` as family ``"gemm"``: planning,
 caching (plan and kernel layers, descriptor-derived keys) and interpret
 policy all live in the engine; this module owns only the lowering.
 
-Edge strategies (benchmarked against each other in fig45_alignment):
+Edge strategies for the multi-launch path (benchmarked in fig45_alignment):
 
   * ``mask`` — exact-shape kernels; Pallas clips partial output blocks and
     the kernel masks the K tail (the SME predication analogue);
   * ``pad``  — operands zero-padded to block multiples outside the kernel
     (the copy-based strategy the paper's predication avoids).
+
+The fused path subsumes both: masking is inherent to its tile schedule.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -27,7 +46,8 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core.blocking import BlockingPlan, plan_gemm, round_up
 from repro.core.descriptor import GemmDescriptor, check_bias
-from repro.kernels.gemm.kernel import build_gemm_kernel
+from repro.kernels.gemm.kernel import (build_fused_gemm_kernel,
+                                       build_gemm_kernel)
 
 
 def _region_executor(desc: GemmDescriptor, region, bk: int, edge: str,
@@ -47,8 +67,10 @@ def _region_executor(desc: GemmDescriptor, region, bk: int, edge: str,
            desc.out_dtype, interpret)
 
     def builder():
+        # bk clamps to the (padded) K extent: tiny-K builds must not stage
+        # oversized K panels (k_p is already bk-aligned under "pad").
         return build_gemm_kernel(
-            m=rows_p, n=cols_p, k=k_p, bm=bm, bn=bn, bk=min(bk, round_up(k_p, 128)),
+            m=rows_p, n=cols_p, k=k_p, bm=bm, bn=bn, bk=min(bk, k_p),
             layout=desc.layout, epilogue=desc.epilogue,
             accumulate=desc.accumulate,
             in_dtype=jnp.dtype(desc.in_dtype), out_dtype=jnp.dtype(desc.out_dtype),
@@ -111,10 +133,54 @@ def _gemm2d(a, b, plan: BlockingPlan, bias, c, interpret: bool):
     return out
 
 
+def _fused_executor(desc: GemmDescriptor, plan: BlockingPlan,
+                    interpret: bool):
+    """Build (and cache) the single fused kernel for a whole plan.
+
+    ``(regions, bk)`` fully determine the tile schedule, so the cache key
+    stays O(regions) and the O(tiles) flattening only runs on a miss.
+    ``desc.edge`` is normalized out: it selects between multi-launch edge
+    strategies and the fused kernel ignores it (masking is inherent).
+    """
+    key = (dataclasses.replace(desc, edge="mask").cache_key()
+           + ("fused", plan.regions, plan.bk, interpret))
+
+    def builder():
+        return build_fused_gemm_kernel(
+            schedule=plan.tile_schedule(), batch=desc.batch,
+            layout=desc.layout, epilogue=desc.epilogue,
+            accumulate=desc.accumulate, in_dtype=jnp.dtype(desc.in_dtype),
+            out_dtype=jnp.dtype(desc.out_dtype), interpret=interpret)
+
+    return engine.build_cached(key, builder)
+
+
+def _fused_path(plan: BlockingPlan) -> bool:
+    """Resolve the execution path: config override, else the plan bit."""
+    from repro.core.config import get_config
+    mode = get_config().fused
+    if mode == "on":
+        return True
+    if mode == "off":
+        return False
+    return plan.fused
+
+
 def execute(desc: GemmDescriptor, plan: BlockingPlan, a, b, *,
             bias=None, c=None, interpret: bool = False) -> jax.Array:
     """Engine executor: run one planned (possibly batched) GEMM."""
     check_bias(desc.epilogue, bias)
+    if _fused_path(plan):
+        engine.count_launches("gemm", 1)
+        run = _fused_executor(desc, plan, interpret)
+        if desc.batch:
+            out = run(a, b, bias, c)
+        else:
+            out = run(a[None], b[None], bias,
+                      None if c is None else c[None])
+            out = out[0]
+        return out
+    engine.count_launches("gemm", len(plan.regions))
     f = functools.partial(_gemm2d, plan=plan, interpret=interpret)
     if desc.batch:
         def batched(a_, b_, c_):
@@ -129,12 +195,15 @@ engine.register_family("gemm", planner=plan_gemm, execute=execute)
 def gemm(a, b, c: Optional[jax.Array] = None, *, layout: str = "nn",
          epilogue: Optional[str] = None, bias: Optional[jax.Array] = None,
          out_dtype=None, edge: str = "mask", plan: Optional[BlockingPlan] = None,
-         heterogeneous: bool = True) -> jax.Array:
+         heterogeneous: bool = True,
+         fused: Optional[bool] = None) -> jax.Array:
     """Planned, shape-specialized (batched) GEMM via the engine.
 
     ``a``: (..., M, K); ``b``: (..., K, N) for layout "nn" or (..., N, K)
     for "nt"; optional ``c`` accumulator of shape (..., M, N).  Interpret
-    policy comes from :mod:`repro.core.config`.
+    policy comes from :mod:`repro.core.config`; ``fused=True/False`` pins
+    the single-launch vs multi-launch lowering for this call (default:
+    follow config + plan, DESIGN.md §8).
     """
     desc = GemmDescriptor.from_operands(
         a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
@@ -143,4 +212,8 @@ def gemm(a, b, c: Optional[jax.Array] = None, *, layout: str = "nn",
         # Non-default planner knob: plan directly, bypassing the plan cache
         # (the cache serves only the canonical planner configuration).
         plan = plan_gemm(desc, heterogeneous=False)
-    return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
+    if fused is None:
+        return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
+    from repro.core.config import use
+    with use(fused="on" if fused else "off"):
+        return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)

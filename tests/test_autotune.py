@@ -113,9 +113,11 @@ def test_gemm_candidates_ranked_and_agree_with_planner():
         plan_gemm(d).predicted_seconds(TPU_V5E))
     for p in cands:
         p.validate()  # every candidate covers C exactly once
-    # knob-level dedup
-    knobs = [(p.regions, p.bk) for p in cands]
+    # knob-level dedup: fused and multi-launch lowerings of one region
+    # cover are distinct candidates (DESIGN.md §8)
+    knobs = [(p.regions, p.bk, p.fused) for p in cands]
     assert len(set(knobs)) == len(knobs)
+    assert any(p.fused for p in cands) and any(not p.fused for p in cands)
 
 
 def test_flash_and_transpose_candidates():
@@ -163,6 +165,20 @@ def test_plan_record_roundtrip(plan):
     assert back is not None
     assert back.plan_source == "autotuned"
     assert dataclasses.replace(back, plan_source=plan.plan_source) == plan
+
+
+def test_forced_fused_mode_filters_candidates(tmp_path):
+    """A config.fused override makes the executor ignore candidate fused
+    bits, so search must only time (and persist) matching candidates —
+    never record an untimed lowering (DESIGN.md §8)."""
+    path = str(tmp_path / "tune.json")
+    a, b = rand((48, 64)), rand((64, 80))
+    with use(backend="pallas", autotune=True, autotune_budget=6,
+             tuning_cache=path, fused="off"):
+        matmul(a, b)
+    entries = json.load(open(path))["entries"]
+    assert entries and all(rec["fused"] is False
+                           for rec in entries.values())
 
 
 def test_plan_from_record_degrades_to_none():

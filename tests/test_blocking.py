@@ -12,7 +12,7 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from repro.core import GemmDescriptor, plan_gemm, palette
+from repro.core import GemmDescriptor, fused_legal, plan_gemm, palette
 from repro.core.blocking import Region, ceil_div
 from repro.core.machine import TPU_V5E
 
@@ -78,6 +78,57 @@ class TestPlans:
             acc = r.bm * r.bn * 4
             inputs = 2 * 4 * plan.bk * (r.bm + r.bn)
             assert acc + inputs <= TPU_V5E.vmem_bytes
+
+
+class TestTileSchedule:
+    """Flattened fused-execution schedules (DESIGN.md §8)."""
+
+    def test_heterogeneous_schedule_covers_exactly_once(self):
+        plan = plan_gemm(GemmDescriptor(m=640, n=640, k=512),
+                         force_block=(256, 256))
+        assert len(plan.regions) >= 3
+        sched = plan.tile_schedule()
+        sched.validate()  # exact cover + in-bounds clamped windows
+        assert len(sched.blocks) >= 2  # heterogeneous geometry survives
+
+    def test_blocks_clamped_to_matrix(self):
+        """A region block larger than the matrix clamps so its fixed-shape
+        window fits the real operand buffers."""
+        d = GemmDescriptor(m=7, n=33, k=100)
+        sched = plan_gemm(d, force_block=(512, 1024),
+                          heterogeneous=False).tile_schedule()
+        sched.validate()
+        assert all(bm <= 7 and bn <= 33 for bm, bn in sched.blocks)
+
+    def test_bk_clamped_to_k(self):
+        d = GemmDescriptor(m=128, n=128, k=100)
+        sched = plan_gemm(d).tile_schedule()
+        assert sched.bk <= 100
+        assert sched.k_steps == ceil_div(100, sched.bk)
+
+    def test_aligned_single_region_single_tile(self):
+        sched = plan_gemm(GemmDescriptor(m=256, n=256, k=256),
+                          force_block=(256, 256),
+                          heterogeneous=False).tile_schedule()
+        assert sched.num_tiles == 1 and sched.blocks == ((256, 256),)
+
+    def test_fused_legality_gates_plan_bit(self):
+        small = GemmDescriptor(m=128, n=128, k=128)
+        assert fused_legal(small, TPU_V5E)
+        assert plan_gemm(small).fused
+        huge = GemmDescriptor(m=8192, n=8192, k=8192)
+        assert not fused_legal(huge, TPU_V5E)  # operands exceed VMEM
+        assert not plan_gemm(huge).fused
+
+    def test_fused_plan_predicted_cheaper_when_multiregion(self):
+        """The cost model charges multi-launch plans per-region dispatch
+        plus stitching traffic; fused amortizes both."""
+        import dataclasses
+        plan = plan_gemm(GemmDescriptor(m=640, n=640, k=512),
+                         force_block=(256, 256))
+        multi = dataclasses.replace(plan, fused=False)
+        fused = dataclasses.replace(plan, fused=True)
+        assert fused.predicted_seconds() < multi.predicted_seconds()
 
 
 # Deterministic fallback cases exercised when hypothesis is unavailable —

@@ -100,6 +100,7 @@ def test_stats_expose_plan_source_counters():
     assert s["plan_source_autotuned"] == 0
     assert s["plan_source_tuned_cache"] == 0
     assert s["autotune_timings"] == 0
+    assert s["launches"] >= 1  # traced pallas_call launches (DESIGN.md §8)
 
 
 def test_different_shapes_plan_separately():

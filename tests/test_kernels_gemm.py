@@ -1,10 +1,11 @@
-"""Pallas GEMM kernel vs pure-jnp oracle: shape/dtype/layout sweeps."""
+"""Pallas GEMM kernel vs pure-jnp oracle: shape/dtype/layout sweeps,
+plus the fused-vs-multi-launch parity matrix (DESIGN.md §8)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import GemmDescriptor, plan_gemm, backend, matmul
+from repro.core import GemmDescriptor, engine, plan_gemm, backend, matmul
 from repro.kernels.gemm import gemm, ref_gemm
 
 RNG = np.random.default_rng(42)
@@ -91,6 +92,101 @@ def test_region_plan_execution_matches_fig7():
     a, b = rand((640, 512)), rand((512, 640))
     out = gemm(a, b, plan=plan)
     np.testing.assert_allclose(out, ref_gemm(a, b), atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-launch execution (DESIGN.md §8): the fused path must be
+# bit-identical to the multi-launch path — same bk chunking, same fp32
+# accumulation order, masking instead of stitching.
+# ---------------------------------------------------------------------------
+
+PARITY_SHAPES = [
+    (128, 128, 128),   # fully aligned
+    (80, 80, 512),     # paper Fig 7 shape
+    (70, 90, 130),     # M/N/K tails everywhere
+    (128, 128, 100),   # K tail only
+    (7, 33, 100),      # sub-register-tile
+    (513, 129, 257),   # off-by-one everywhere
+]
+
+
+def assert_bit_identical(fused, multi):
+    assert fused.dtype == multi.dtype and fused.shape == multi.shape
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(multi))
+
+
+@pytest.mark.parametrize("m,n,k", PARITY_SHAPES)
+@pytest.mark.parametrize("layout", ["nn", "nt"])
+def test_fused_matches_multilaunch_bitwise(m, n, k, layout):
+    a = rand((m, k))
+    b = rand((k, n) if layout == "nn" else (n, k))
+    fused = gemm(a, b, layout=layout, fused=True)
+    multi = gemm(a, b, layout=layout, fused=False)
+    assert_bit_identical(fused, multi)
+    np.testing.assert_allclose(fused, ref_gemm(a, b, layout=layout),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("epilogue", [None, "bias", "gelu", "silu", "relu",
+                                      "bias_gelu", "bias_silu"])
+@pytest.mark.parametrize("accumulate", [False, True])
+def test_fused_parity_epilogues(epilogue, accumulate):
+    m, n, k = 70, 90, 130  # tails on every dim
+    a, b = rand((m, k)), rand((k, n))
+    c = rand((m, n)) if accumulate else None
+    bias = rand((n,)) if epilogue and "bias" in epilogue else None
+    fused = gemm(a, b, c=c, epilogue=epilogue, bias=bias, fused=True)
+    multi = gemm(a, b, c=c, epilogue=epilogue, bias=bias, fused=False)
+    assert_bit_identical(fused, multi)
+    ref = ref_gemm(a, b, c=c, epilogue=epilogue, bias=bias)
+    np.testing.assert_allclose(fused, ref, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("layout", ["nn", "nt"])
+@pytest.mark.parametrize("accumulate", [False, True])
+def test_fused_parity_batched(layout, accumulate):
+    """desc.batch rides as a leading grid dimension, not a vmap."""
+    nb, m, n, k = 3, 40, 70, 50
+    a = rand((nb, m, k))
+    b = rand((nb, k, n) if layout == "nn" else (nb, n, k))
+    c = rand((nb, m, n)) if accumulate else None
+    fused = gemm(a, b, c=c, layout=layout, fused=True)
+    multi = gemm(a, b, c=c, layout=layout, fused=False)
+    assert_bit_identical(fused, multi)
+    np.testing.assert_allclose(fused, ref_gemm(a, b, c=c, layout=layout),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_parity_dtypes(dtype):
+    a, b = rand((96, 160), dtype), rand((160, 224), dtype)
+    assert_bit_identical(gemm(a, b, fused=True), gemm(a, b, fused=False))
+
+
+def test_multiregion_plan_is_single_launch():
+    """Acceptance: a multi-region descriptor resolves to exactly ONE
+    pallas_call on the fused path (engine.stats launch counter), and the
+    result is bit-identical to the multi-launch lowering."""
+    engine.reset_stats()
+    d = GemmDescriptor(m=640, n=640, k=512)
+    plan = plan_gemm(d, force_block=(256, 256))
+    assert len(plan.regions) >= 3 and plan.fused
+    a, b = rand((640, 512)), rand((512, 640))
+    fused = gemm(a, b, plan=plan)
+    assert engine.stats()["gemm"]["launches"] == 1
+    multi = gemm(a, b, plan=plan, fused=False)
+    assert engine.stats()["gemm"]["launches"] == 1 + len(plan.regions)
+    assert_bit_identical(fused, multi)
+
+
+def test_fused_schedule_matches_plan_regions():
+    """The flattened schedule covers C exactly once and its windows stay
+    inside the operand buffers (clamped two-step load/store)."""
+    d = GemmDescriptor(m=513, n=129, k=257)
+    sched = plan_gemm(d, force_block=(256, 128)).tile_schedule()
+    sched.validate()
+    assert sched.bk <= d.k
+    assert sched.num_tiles >= len(plan_gemm(d, force_block=(256, 128)).regions)
 
 
 def test_dispatcher_backends_agree():
