@@ -1,0 +1,88 @@
+"""Scheduled grouped GEMM: fused single-launch vs pad/scatter lowering.
+
+The grouped-GEMM analogue of fig89's fused-vs-multi table (DESIGN.md §9):
+for each MoE-shaped ragged dispatch the suite times the fused scheduled
+lowering (runtime tile tables, direct ragged stores) against the
+pad/scatter lowering (pad-to-``t_padded`` intermediate + gather-back) of
+the *same* plan, records traced launch counts, and writes the whole table
+to ``BENCH_grouped_fused.json`` so the perf trajectory is tracked across
+PRs alongside ``BENCH_gemm_fused.json``.
+
+``run(smoke=True)`` is the CI end-to-end exercise of the scheduled
+grouped path (reduced sizes/iterations, same code paths), wired into
+``benchmarks/run.py --smoke``.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import GroupedGemmDescriptor, engine, plan_grouped
+from repro.kernels.grouped_gemm import grouped_gemm
+
+GROUPED_JSON = "BENCH_grouped_fused.json"
+
+# (label, group_sizes, extra rows past sum, K, N) — ragged MoE dispatch
+# populations: balanced, skewed, zero-size experts, sum < T.
+CASES = [
+    ("balanced_8x64", [64] * 8, 0, 256, 512),
+    ("skewed", [300, 5, 0, 150, 25, 32], 0, 256, 512),
+    ("ragged_tail", [37, 0, 201, 70], 52, 192, 320),
+]
+SMOKE_CASES = [
+    ("skewed", [60, 5, 0, 30], 0, 96, 128),
+    ("ragged_tail", [17, 0, 41], 14, 96, 128),
+]
+
+
+def _launches(fn) -> int:
+    """Traced pallas_call launches one eager call emits (engine counter)."""
+    before = engine.stats().get("grouped_gemm", {}).get("launches", 0)
+    jax.block_until_ready(fn())
+    return engine.stats()["grouped_gemm"]["launches"] - before
+
+
+def run(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    cases = SMOKE_CASES if smoke else CASES
+    iters, warmup = (2, 1) if smoke else (3, 1)
+    entries = {}
+    for label, sizes, t_extra, kdim, n in cases:
+        sizes_a = jnp.asarray(sizes, jnp.int32)
+        e = len(sizes)
+        t = int(sizes_a.sum()) + t_extra
+        x = jnp.asarray(rng.standard_normal((t, kdim)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((e, kdim, n)), jnp.float32)
+        desc = GroupedGemmDescriptor(t=t, k=kdim, n=n, num_experts=e)
+        plan = plan_grouped(desc)
+
+        ff = jax.jit(lambda x, w, s: grouped_gemm(x, w, s, fused=True))
+        fp = jax.jit(lambda x, w, s: grouped_gemm(x, w, s, fused=False))
+        us_f = time_fn(ff, x, w, sizes_a, iters=iters, warmup=warmup)
+        us_p = time_fn(fp, x, w, sizes_a, iters=iters, warmup=warmup)
+        lf = _launches(lambda: grouped_gemm(x, w, sizes_a, fused=True))
+        lp = _launches(lambda: grouped_gemm(x, w, sizes_a, fused=False))
+        err = float(jnp.max(jnp.abs(ff(x, w, sizes_a) - fp(x, w, sizes_a))))
+
+        entries[label] = {
+            "t": t, "k": kdim, "n": n, "num_experts": e,
+            "group_sizes": list(map(int, sizes)),
+            "fused_us": round(us_f, 1), "padscatter_us": round(us_p, 1),
+            "delta_us": round(us_p - us_f, 1),
+            "speedup": round(us_p / us_f, 3) if us_f else None,
+            "launches_fused": lf, "launches_padscatter": lp,
+            "plan_fused": plan.fused,
+            "agreement_err": err,
+        }
+        emit(f"grouped_fused/{label}", us_f,
+             f"padscatter_us={us_p:.0f};delta_us={us_p - us_f:.0f};"
+             f"launches_fused={lf};launches_padscatter={lp};"
+             f"agreement_err={err:.1e}")
+
+    with open(GROUPED_JSON, "w") as f:
+        json.dump({"mode": "smoke" if smoke else "full",
+                   "entries": entries}, f, indent=1, sort_keys=True)
+    emit("grouped_fused/json", 0, f"wrote={GROUPED_JSON};"
+         f"entries={len(entries)}")

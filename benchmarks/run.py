@@ -13,10 +13,13 @@ warm — so every table is per-phase, not cumulative.
   fig7    — homogeneous vs heterogeneous blocking (Fig 7)
   fig89   — small-GEMM sweep vs the vendor (XLA) baseline (Figs 8/9),
             incl. fused-vs-multi-launch deltas (BENCH_gemm_fused.json)
+  grouped — scheduled grouped GEMM: fused single-launch vs pad/scatter
+            deltas + launch counts (BENCH_grouped_fused.json)
 
-``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep at
-reduced size, exercising the fused single-launch GEMM path end-to-end on
-every PR and still emitting ``BENCH_gemm_fused.json``.
+``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep and
+the grouped suite at reduced size, exercising the fused single-launch
+GEMM *and* scheduled grouped-GEMM paths end-to-end on every PR and still
+emitting ``BENCH_gemm_fused.json`` + ``BENCH_grouped_fused.json``.
 """
 import argparse
 import sys
@@ -31,7 +34,8 @@ def main() -> None:
                          "(fused path end-to-end)")
     args = ap.parse_args()
     from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
-                            fig45_alignment, fig7_blocking, fig89_gemm_sweep)
+                            fig45_alignment, fig7_blocking, fig89_gemm_sweep,
+                            grouped_fused)
     suites = {
         "table1": table1_throughput.run,
         "fig1": fig1_scaling.run,
@@ -39,11 +43,13 @@ def main() -> None:
         "fig45": fig45_alignment.run,
         "fig7": fig7_blocking.run,
         "fig89": fig89_gemm_sweep.run,
+        "grouped": grouped_fused.run,
     }
     if args.smoke:
         if args.only:
             ap.error("--smoke selects its own suite; drop --only")
-        suites = {"fig89": lambda: fig89_gemm_sweep.run(smoke=True)}
+        suites = {"fig89": lambda: fig89_gemm_sweep.run(smoke=True),
+                  "grouped": lambda: grouped_fused.run(smoke=True)}
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     from repro.core import engine

@@ -6,6 +6,7 @@ to every kernel family in the system (DESIGN.md).
   * ``config``     — process-wide backend/interpret/machine/autotune config
   * ``descriptor`` — per-family kernel metadata (libxsmm descriptor analogue)
   * ``blocking``   — machine-model tile planners, all families (§IV-B)
+  * ``schedule``   — fused-execution tile schedules + predication helpers
   * ``autotune``   — empirical plan search + persistent tuning cache (§7)
   * ``jit_cache``  — LRU kernel registry (libxsmm JIT dispatch analogue)
   * ``engine``     — family registry + three-tier planning + dispatch
@@ -17,8 +18,10 @@ from repro.core.descriptor import (  # noqa: F401
     KernelDescriptor, SsdChunkDescriptor, TransposeDescriptor)
 from repro.core.blocking import (  # noqa: F401
     BlockingPlan, FlashPlan, GroupedGemmPlan, Region, SsdChunkPlan,
-    TileSchedule, TransposePlan, candidate_plans, fused_legal, palette,
-    plan_flash, plan_gemm, plan_grouped, plan_ssd, plan_transpose)
+    TransposePlan, candidate_plans, fused_legal, grouped_fused_legal,
+    palette, plan_flash, plan_gemm, plan_grouped, plan_ssd, plan_transpose)
+from repro.core.schedule import (  # noqa: F401
+    GroupedTileSchedule, TileSchedule, flatten_regions, plan_launches)
 from repro.core.machine import (  # noqa: F401
     CPU_HOST, MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine)
 from repro.core.config import (  # noqa: F401

@@ -65,7 +65,8 @@ def plan_to_record(plan: Any) -> Dict[str, Any]:
                 "block_q": plan.block_q, "block_k": plan.block_k}
     if isinstance(plan, GroupedGemmPlan):
         return {"family": "grouped_gemm",
-                "bm": plan.bm, "bk": plan.bk, "bn": plan.bn}
+                "bm": plan.bm, "bk": plan.bk, "bn": plan.bn,
+                "fused": plan.fused}
     if isinstance(plan, TransposePlan):
         return {"family": "transpose", "bt": plan.bt}
     if isinstance(plan, SsdChunkPlan):
@@ -93,8 +94,12 @@ def plan_from_record(desc: KernelDescriptor,
             return FlashPlan(desc, int(record["block_q"]),
                              int(record["block_k"]), plan_source="autotuned")
         if family == "grouped_gemm":
+            # Pre-schedule cache entries lack "fused": replay them on the
+            # pad/scatter path they were actually timed on.
             return GroupedGemmPlan(desc, int(record["bm"]), int(record["bk"]),
-                                   int(record["bn"]), plan_source="autotuned")
+                                   int(record["bn"]),
+                                   fused=bool(record.get("fused", False)),
+                                   plan_source="autotuned")
         if family == "transpose":
             return TransposePlan(desc, int(record["bt"]),
                                  plan_source="autotuned")

@@ -37,6 +37,11 @@ from .descriptor import (FlashDescriptor, GemmDescriptor,
                          GroupedGemmDescriptor, SsdChunkDescriptor,
                          TransposeDescriptor)
 from .machine import MachineModel, DEFAULT_MACHINE
+# The flattening/predication machinery lives in the schedule layer
+# (DESIGN.md §9); re-exported here for compatibility — plans *produce*
+# schedules, so blocking is the schedule layer's only upstream.
+from .schedule import (GroupedTileSchedule, TileSchedule,  # noqa: F401
+                       ceil_div, flatten_regions, plan_launches, round_up)
 
 # ---------------------------------------------------------------------------
 # Palette
@@ -118,54 +123,6 @@ class Region:
 
 
 @dataclasses.dataclass(frozen=True)
-class TileSchedule:
-    """Flattened tile schedule of one :class:`BlockingPlan` (DESIGN.md §8).
-
-    The fused single-launch GEMM kernel walks this instead of launching one
-    ``pallas_call`` per region: every region's grid is unrolled into a flat
-    tuple of tiles, all trace-time constants, which the kernel receives as
-    a scalar-prefetch table and indexes by ``pl.program_id``.
-
-    ``blocks`` are the distinct effective block geometries (region blocks
-    clamped to the matrix so a clamped load window always fits the operand
-    buffers); each tile row is
-
-        (row0, col0, row_end, col_end, row_start, col_start, block_id)
-
-    where ``[row0, row_end) x [col0, col_end)`` is the set of C elements
-    the tile owns (the predicate mask) and ``(row_start, col_start)`` is
-    the clamped origin of its fixed-shape load/store window — the paper's
-    two-step load/store path: edge windows slide inward and the mask keeps
-    each element owned by exactly one tile.
-    """
-
-    m: int
-    n: int
-    k: int
-    bk: int
-    k_steps: int
-    blocks: Tuple[Tuple[int, int], ...]
-    tiles: Tuple[Tuple[int, int, int, int, int, int, int], ...]
-
-    @property
-    def num_tiles(self) -> int:
-        return len(self.tiles)
-
-    def validate(self):
-        """Every C element owned by exactly one tile mask."""
-        owned = 0
-        for row0, col0, row_end, col_end, rs, cs, bid in self.tiles:
-            bm_e, bn_e = self.blocks[bid]
-            assert 0 <= rs and rs + bm_e <= self.m, (rs, bm_e, self.m)
-            assert 0 <= cs and cs + bn_e <= self.n, (cs, bn_e, self.n)
-            assert rs <= row0 and row_end <= rs + bm_e
-            assert cs <= col0 and col_end <= cs + bn_e
-            owned += (row_end - row0) * (col_end - col0)
-        assert owned == self.m * self.n, (owned, self.m * self.n)
-        return True
-
-
-@dataclasses.dataclass(frozen=True)
 class BlockingPlan:
     desc: GemmDescriptor
     regions: Tuple[Region, ...]
@@ -200,36 +157,10 @@ class BlockingPlan:
                                 fused=self.fused)
 
     def tile_schedule(self) -> TileSchedule:
-        """Flatten the region cover into the fused kernel's tile tables.
-
-        Region blocks are clamped to the matrix (``bm_e = min(bm, m)``) so
-        every fixed-shape window fits the real operand buffers; a clamped
-        block walks its region with the *effective* stride, so raggedness
-        is absorbed by the per-tile ownership mask, never by the shapes.
-        """
+        """Flatten the region cover into the fused kernel's tile tables
+        (delegates to the schedule layer, DESIGN.md §9)."""
         desc = self.desc
-        m, n, k = desc.m, desc.n, desc.k
-        bk = max(1, min(self.bk, k))
-        blocks: List[Tuple[int, int]] = []
-        ids = {}
-        tiles = []
-        for r in self.regions:
-            bm_e, bn_e = min(r.bm, m), min(r.bn, n)
-            bid = ids.get((bm_e, bn_e))
-            if bid is None:
-                bid = ids[(bm_e, bn_e)] = len(blocks)
-                blocks.append((bm_e, bn_e))
-            for i in range(ceil_div(r.rows, bm_e)):
-                row0 = r.row0 + i * bm_e
-                row_end = min(row0 + bm_e, r.row0 + r.rows)
-                for j in range(ceil_div(r.cols, bn_e)):
-                    col0 = r.col0 + j * bn_e
-                    col_end = min(col0 + bn_e, r.col0 + r.cols)
-                    tiles.append((row0, col0, row_end, col_end,
-                                  min(row0, m - bm_e), min(col0, n - bn_e),
-                                  bid))
-        return TileSchedule(m=m, n=n, k=k, bk=bk, k_steps=ceil_div(k, bk),
-                            blocks=tuple(blocks), tiles=tuple(tiles))
+        return flatten_regions(desc.m, desc.n, desc.k, self.bk, self.regions)
 
     def validate(self):
         """Every C element covered exactly once (tested by hypothesis)."""
@@ -249,14 +180,6 @@ class BlockingPlan:
                 if not (a[2] <= b[0] or b[2] <= a[0] or a[3] <= b[1] or b[3] <= a[1]):
                     raise AssertionError(f"regions overlap: {a} {b}")
         return True
-
-
-def ceil_div(a: int, b: int) -> int:
-    return -(-a // b)
-
-
-def round_up(a: int, b: int) -> int:
-    return ceil_div(a, b) * b
 
 
 # ---------------------------------------------------------------------------
@@ -540,31 +463,74 @@ class GroupedGemmPlan:
     bm: int
     bk: int
     bn: int
+    # Execute the ragged dispatch as ONE pallas_call walking runtime tile
+    # tables (DESIGN.md §9) instead of the host-side pad/scatter +
+    # gather-back lowering.  Mirrors BlockingPlan.fused.
+    fused: bool = False
     plan_source: str = "model"  # see BlockingPlan.plan_source
 
     @property
     def t_padded(self) -> int:
-        """Static row bound: T rounded up plus per-group padding room."""
+        """Static row bound of the pad/scatter lowering: T rounded up plus
+        per-group padding room."""
         return round_up(self.desc.t, self.bm) + self.desc.num_experts * self.bm
+
+    def tile_schedule(self) -> GroupedTileSchedule:
+        """The static geometry of the fused lowering (DESIGN.md §9); the
+        tables themselves are runtime data built from ``group_sizes``."""
+        d = self.desc
+        return GroupedTileSchedule(
+            t=d.t, k=d.k, n=d.n, num_experts=d.num_experts,
+            bm=min(self.bm, d.t), bk=min(self.bk, d.k), bn=min(self.bn, d.n))
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
         return _predict_grouped_seconds(self.desc, self.bm, self.bk, self.bn,
-                                        machine)
+                                        machine, fused=self.fused)
+
+
+def grouped_fused_legal(desc: GroupedGemmDescriptor,
+                        machine: MachineModel = DEFAULT_MACHINE) -> bool:
+    """Can this grouped GEMM run as one scheduled ``pallas_call``?
+
+    The fused kernel stages the whole token block and output in VMEM
+    (clamped row windows need element-granular origins, which BlockSpec
+    block indices cannot express) plus one double-buffered expert weight
+    panel; legal only when they all fit.
+    """
+    isz = jnp.dtype(desc.dtype).itemsize
+    need = (desc.t * desc.k + desc.t * desc.n) * isz
+    need += 2 * desc.k * desc.n * isz  # double-buffered expert panel
+    need += ACC_BUDGET_ELEMS * 4       # accumulator scratch upper bound
+    return need <= machine.vmem_bytes
 
 
 def _predict_grouped_seconds(desc: GroupedGemmDescriptor, bm: int, bk: int,
-                             bn: int, machine: MachineModel) -> float:
-    t_padded = round_up(desc.t, bm) + desc.num_experts * bm
-    gm = ceil_div(t_padded, bm)
+                             bn: int, machine: MachineModel,
+                             fused: bool = False) -> float:
+    isz = jnp.dtype(desc.dtype).itemsize
     gn = ceil_div(desc.n, bn)
     gk = ceil_div(desc.k, bk)
+    if fused:
+        # Ragged row blocks: each expert may add one partial block, plus
+        # the zero-fill tail; no padded intermediate, no gather.
+        gm = ceil_div(desc.t, bm) + desc.num_experts + 1
+        stitch_s = 0.0
+    else:
+        # Pad/scatter lowering: padded rows still issue MACs, and the
+        # scatter-in + gather-back copies are traffic the fused path
+        # never generates.
+        t_padded = round_up(desc.t, bm) + desc.num_experts * bm
+        gm = ceil_div(t_padded, bm)
+        stitch_bytes = 2 * desc.t * desc.k * isz          # scatter x
+        stitch_bytes += (gm * bm + desc.t) * desc.n * isz  # gather out
+        stitch_s = stitch_bytes / machine.hbm_bw
     steps = gm * gn * gk
-    issued = 2 * gm * bm * gn * bn * desc.k  # padded rows still issue MACs
+    issued = 2 * gm * bm * gn * bn * desc.k
     compute_s = issued / machine.peak(desc.dtype)
-    isz = jnp.dtype(desc.dtype).itemsize
     traffic = steps * (bm * bk + bk * bn) * isz + gm * bm * desc.n * isz
     memory_s = traffic / machine.hbm_bw
-    return max(compute_s, memory_s) + steps * machine.step_overhead_s
+    return (max(compute_s, memory_s) + steps * machine.step_overhead_s
+            + machine.launch_overhead_s + stitch_s)
 
 
 def _grouped_legal(desc: GroupedGemmDescriptor,
@@ -587,10 +553,19 @@ def _grouped_legal(desc: GroupedGemmDescriptor,
 
 def plan_grouped(desc: GroupedGemmDescriptor,
                  machine: MachineModel = DEFAULT_MACHINE) -> GroupedGemmPlan:
-    """Pick (bm, bk, bn): bm trades per-group padding against grid size."""
+    """Pick (bm, bk, bn): bm trades per-group padding against grid size.
+
+    Like ``plan_gemm``, the analytical planner takes the paper's stance on
+    dispatch: plans come out ``fused`` (single scheduled launch, no
+    pad/scatter) whenever the staged operands fit VMEM
+    (:func:`grouped_fused_legal`); the autotuner refines empirically.
+    """
+    fused = grouped_fused_legal(desc, machine)
     best = min(_grouped_legal(desc, machine),
-               key=lambda s: _predict_grouped_seconds(desc, *s, machine=machine))
-    return GroupedGemmPlan(desc, *best)
+               key=lambda s: _predict_grouped_seconds(desc, *s,
+                                                      machine=machine,
+                                                      fused=fused))
+    return GroupedGemmPlan(desc, *best, fused=fused)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -605,10 +580,13 @@ class TransposePlan:
 
 def _predict_transpose_seconds(desc: TransposeDescriptor, bt: int,
                                machine: MachineModel) -> float:
-    steps = ceil_div(desc.rows, bt) * ceil_div(desc.cols, bt)
+    # Batch is a grid dimension of the single launch (DESIGN.md §9).
+    nb = max(1, desc.batch)
+    steps = nb * ceil_div(desc.rows, bt) * ceil_div(desc.cols, bt)
     isz = jnp.dtype(desc.dtype).itemsize
     traffic = 2 * steps * bt * bt * isz  # read + mirrored write, padded
-    return traffic / machine.hbm_bw + steps * machine.step_overhead_s
+    return (traffic / machine.hbm_bw + steps * machine.step_overhead_s
+            + machine.launch_overhead_s)
 
 
 def _transpose_legal(desc: TransposeDescriptor,
@@ -698,8 +676,13 @@ def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
         for bq, bk in _flash_legal(desc, machine):
             add(FlashPlan(desc, bq, bk), (bq, bk))
     elif fam == "grouped_gemm":
+        # Fused (scheduled single-launch) and pad/scatter lowerings of one
+        # tiling are distinct candidates, exactly as for dense GEMM.
+        fused_ok = grouped_fused_legal(desc, machine)
         for bm, bk, bn in _grouped_legal(desc, machine):
-            add(GroupedGemmPlan(desc, bm, bk, bn), (bm, bk, bn))
+            for fused in ((True, False) if fused_ok else (False,)):
+                add(GroupedGemmPlan(desc, bm, bk, bn, fused=fused),
+                    (bm, bk, bn, fused))
     elif fam == "transpose":
         for bt in _transpose_legal(desc, machine):
             add(TransposePlan(desc, bt), (bt,))

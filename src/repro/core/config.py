@@ -16,10 +16,12 @@ serves a request (generated SME kernel vs vendor BLAS).  Ours has more:
                     (DESIGN.md §7); ``autotune_budget`` caps K;
   * ``tuning_cache`` — path of the on-disk JSON tuning cache that makes
                     autotuned winners survive process restarts;
-  * ``fused``     — GEMM plan-execution policy (DESIGN.md §8): "auto"
-                    follows the plan's ``fused`` bit (planner/autotuner
-                    choice), "on"/"off" force the single-launch fused or
-                    the per-region multi-launch lowering.
+  * ``fused``     — plan-execution policy for families with a fused
+                    single-launch lowering (GEMM, grouped GEMM —
+                    DESIGN.md §8/§9): "auto" follows the plan's ``fused``
+                    bit (planner/autotuner choice), "on"/"off" force the
+                    single-launch fused or the multi-launch / pad-scatter
+                    lowering (``engine.resolve_fused``).
 
 Env-var overrides seed the process default at import: ``REPRO_AUTOTUNE=1``,
 ``REPRO_TUNING_CACHE=/path/to/cache.json``, ``REPRO_AUTOTUNE_BUDGET=K``,
@@ -59,8 +61,9 @@ class EngineConfig:
     autotune: bool = False
     autotune_budget: int = 8
     tuning_cache: Optional[str] = None
-    # GEMM plan-execution policy (DESIGN.md §8): "auto" honors the plan's
-    # fused bit; "on"/"off" force single-launch / multi-launch lowering.
+    # Plan-execution policy for fused-capable families (DESIGN.md §8/§9):
+    # "auto" honors the plan's fused bit; "on"/"off" force the
+    # single-launch / multi-launch (or pad-scatter) lowering.
     fused: str = "auto"
 
     def __post_init__(self):

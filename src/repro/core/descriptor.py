@@ -227,6 +227,8 @@ class GroupedGemmDescriptor(KernelDescriptor):
     ``t`` is the static row count; the per-group split (``group_sizes``) is
     a runtime operand and deliberately NOT part of the descriptor — the
     kernel is shape-specialized, the routing is data (DESIGN.md §2).
+    ``epilogue`` mirrors the GEMM vocabulary; the ``bias`` operand is
+    per-expert, shape (E, N).
     """
 
     family = "grouped_gemm"
@@ -236,20 +238,23 @@ class GroupedGemmDescriptor(KernelDescriptor):
     n: int
     num_experts: int
     dtype: str = "float32"
+    epilogue: Optional[str] = None
 
     def __post_init__(self):
         for v in (self.t, self.k, self.n, self.num_experts):
             if v <= 0:
                 raise ValueError(f"grouped-GEMM dims must be positive, got {self}")
+        if self.epilogue not in EPILOGUES:
+            raise ValueError(f"epilogue must be one of {EPILOGUES}")
 
     @classmethod
-    def from_operands(cls, x, w):
+    def from_operands(cls, x, w, epilogue=None):
         t, k = x.shape
         e, kw, n = w.shape
         if kw != k:
             raise ValueError(f"contraction mismatch: x{x.shape} vs w{w.shape}")
         return cls(t=t, k=k, n=n, num_experts=e,
-                   dtype=canonical_dtype(x.dtype))
+                   dtype=canonical_dtype(x.dtype), epilogue=epilogue)
 
     @property
     def flops(self) -> int:
@@ -307,13 +312,19 @@ class SsdChunkDescriptor(KernelDescriptor):
 
 @dataclasses.dataclass(frozen=True)
 class TransposeDescriptor(KernelDescriptor):
-    """Blocked 2-D transpose: (rows, cols) -> (cols, rows)."""
+    """Blocked (batched) 2-D transpose: (..., rows, cols) -> (..., cols, rows).
+
+    ``batch`` is a leading grid dimension of the generated kernel, not a
+    ``vmap`` — a batched transpose is ONE launch (DESIGN.md §9).
+    """
 
     family = "transpose"
 
     rows: int
     cols: int
     dtype: str = "float32"
+    # leading batch dim shared by in/out; 0 => unbatched 2-D transpose
+    batch: int = 0
 
     def __post_init__(self):
         if self.rows <= 0 or self.cols <= 0:
@@ -321,8 +332,15 @@ class TransposeDescriptor(KernelDescriptor):
 
     @classmethod
     def from_operands(cls, x):
-        rows, cols = x.shape
-        return cls(rows=rows, cols=cols, dtype=canonical_dtype(x.dtype))
+        batch = 0
+        if x.ndim == 3:
+            batch = x.shape[0]
+        elif x.ndim != 2:
+            raise ValueError(f"transpose operand must be rank 2 or 3, "
+                             f"got {x.ndim}")
+        rows, cols = x.shape[-2], x.shape[-1]
+        return cls(rows=rows, cols=cols, dtype=canonical_dtype(x.dtype),
+                   batch=batch)
 
     @property
     def flops(self) -> int:
@@ -330,7 +348,8 @@ class TransposeDescriptor(KernelDescriptor):
 
     @property
     def in_bytes(self) -> int:
-        return self.rows * self.cols * jnp.dtype(self.dtype).itemsize
+        nb = max(1, self.batch)
+        return nb * self.rows * self.cols * jnp.dtype(self.dtype).itemsize
 
     @property
     def out_bytes(self) -> int:

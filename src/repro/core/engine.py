@@ -242,6 +242,19 @@ def dispatch(desc: KernelDescriptor, *operands, plan: Any = None,
     return fam.execute(desc, plan, *operands, interpret=interpret, **kw)
 
 
+def resolve_fused(plan: Any) -> bool:
+    """Resolve a plan's execution path (DESIGN.md §9): the ambient
+    ``config.fused`` override wins ("on"/"off"), else the ``fused`` bit
+    the planner/autotuner set on the plan.  Shared by every family with a
+    fused single-launch lowering (gemm, grouped_gemm)."""
+    mode = get_config().fused
+    if mode == "on":
+        return True
+    if mode == "off":
+        return False
+    return bool(getattr(plan, "fused", False))
+
+
 def build_cached(key: tuple, builder: Callable[[], Any]) -> Any:
     """Kernel-cache helper for family executors.
 

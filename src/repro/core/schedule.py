@@ -1,0 +1,321 @@
+"""The schedule layer — family-generic fused-execution machinery (DESIGN.md §9).
+
+The paper's generator emits ONE kernel per problem: main tiles and edge
+tiles are covered inside it by predication and a two-step load/store path,
+so raggedness never costs extra dispatches or operand copies (§IV, Fig 7).
+PR 3 built that machinery for dense GEMM only, inlined into
+``core/blocking.py`` + ``kernels/gemm/kernel.py``.  This module hoists it
+into a family-generic subsystem so every ragged family can flatten its
+work-list into tile tables walked by a single ``pallas_call``:
+
+  * :class:`TileSchedule` — the trace-time flattening of a dense region
+    cover (GEMM): per-tile ownership rectangles + clamped window origins;
+  * :class:`GroupedTileSchedule` — the *runtime* flattening of a ragged
+    expert row partition (grouped GEMM / MoE): the geometry is static,
+    the tables are data, computed from ``group_sizes`` with jnp ops and
+    shipped to the kernel as a scalar-prefetch operand;
+  * scalar-prefetch table packing (``pack_table`` — int32, the SMEM
+    currency);
+  * in-kernel predication helpers shared by every fused kernel body:
+    clamped K windows + tail masks (the predicate-register analogue) and
+    ownership-masked read-modify-write stores (the two-step store path);
+  * launch accounting (:func:`plan_launches`) — the per-plan
+    ``pallas_call`` count that executors report via
+    ``engine.count_launches`` and cost models charge at
+    ``machine.launch_overhead_s``.
+
+``repro.core.blocking`` builds schedules from plans; ``repro.kernels.*``
+consume them.  This module imports neither — it is the seam between the
+planning layer and the generated kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+# ---------------------------------------------------------------------------
+# Dense (GEMM) tile schedules — trace-time tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileSchedule:
+    """Flattened tile schedule of one dense region cover (DESIGN.md §9).
+
+    The fused single-launch GEMM kernel walks this instead of launching one
+    ``pallas_call`` per region: every region's grid is unrolled into a flat
+    tuple of tiles, all trace-time constants, which the kernel receives as
+    a scalar-prefetch table and indexes by ``pl.program_id``.
+
+    ``blocks`` are the distinct effective block geometries (region blocks
+    clamped to the matrix so a clamped load window always fits the operand
+    buffers); each tile row is
+
+        (row0, col0, row_end, col_end, row_start, col_start, block_id)
+
+    where ``[row0, row_end) x [col0, col_end)`` is the set of C elements
+    the tile owns (the predicate mask) and ``(row_start, col_start)`` is
+    the clamped origin of its fixed-shape load/store window — the paper's
+    two-step load/store path: edge windows slide inward and the mask keeps
+    each element owned by exactly one tile.
+    """
+
+    m: int
+    n: int
+    k: int
+    bk: int
+    k_steps: int
+    blocks: Tuple[Tuple[int, int], ...]
+    tiles: Tuple[Tuple[int, int, int, int, int, int, int], ...]
+
+    @property
+    def num_tiles(self) -> int:
+        return len(self.tiles)
+
+    def validate(self):
+        """Every C element owned by exactly one tile mask."""
+        owned = 0
+        for row0, col0, row_end, col_end, rs, cs, bid in self.tiles:
+            bm_e, bn_e = self.blocks[bid]
+            assert 0 <= rs and rs + bm_e <= self.m, (rs, bm_e, self.m)
+            assert 0 <= cs and cs + bn_e <= self.n, (cs, bn_e, self.n)
+            assert rs <= row0 and row_end <= rs + bm_e
+            assert cs <= col0 and col_end <= cs + bn_e
+            owned += (row_end - row0) * (col_end - col0)
+        assert owned == self.m * self.n, (owned, self.m * self.n)
+        return True
+
+
+def flatten_regions(m: int, n: int, k: int, bk: int,
+                    regions: Sequence) -> TileSchedule:
+    """Flatten a region cover into the fused kernel's tile tables.
+
+    ``regions`` is any sequence of objects with ``row0/col0/rows/cols``
+    ownership rectangles and ``bm/bn`` block geometry (the
+    :class:`repro.core.blocking.Region` shape).  Region blocks are clamped
+    to the matrix (``bm_e = min(bm, m)``) so every fixed-shape window fits
+    the real operand buffers; a clamped block walks its region with the
+    *effective* stride, so raggedness is absorbed by the per-tile
+    ownership mask, never by the shapes.
+    """
+    bk = max(1, min(bk, k))
+    blocks: List[Tuple[int, int]] = []
+    ids = {}
+    tiles = []
+    for r in regions:
+        bm_e, bn_e = min(r.bm, m), min(r.bn, n)
+        bid = ids.get((bm_e, bn_e))
+        if bid is None:
+            bid = ids[(bm_e, bn_e)] = len(blocks)
+            blocks.append((bm_e, bn_e))
+        for i in range(ceil_div(r.rows, bm_e)):
+            row0 = r.row0 + i * bm_e
+            row_end = min(row0 + bm_e, r.row0 + r.rows)
+            for j in range(ceil_div(r.cols, bn_e)):
+                col0 = r.col0 + j * bn_e
+                col_end = min(col0 + bn_e, r.col0 + r.cols)
+                tiles.append((row0, col0, row_end, col_end,
+                              min(row0, m - bm_e), min(col0, n - bn_e),
+                              bid))
+    return TileSchedule(m=m, n=n, k=k, bk=bk, k_steps=ceil_div(k, bk),
+                        blocks=tuple(blocks), tiles=tuple(tiles))
+
+
+def pack_table(rows: Sequence[Sequence[int]]) -> np.ndarray:
+    """Pack tile rows into the int32 scalar-prefetch table the kernels ride.
+
+    numpy, not jnp: trace-time tables are baked into the kernel closure,
+    and a traced constant must not leak into the kernel cache (runtime
+    tables — :meth:`GroupedTileSchedule.tables` — are jnp by construction
+    and travel as operands instead).
+    """
+    table = np.asarray(rows, dtype=np.int32)
+    assert table.ndim == 2, table.shape
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Ragged (grouped) tile schedules — runtime tables, static geometry
+# ---------------------------------------------------------------------------
+
+# Tile states in the grouped table's ``state`` column.
+TILE_SKIP = 0     # beyond the active tile count: no work
+TILE_COMPUTE = 1  # owns rows of one expert: accumulate + store
+TILE_ZERO = 2     # owns rows past sum(group_sizes): store zeros
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedTileSchedule:
+    """Schedule of a ragged row partition (grouped GEMM, DESIGN.md §9).
+
+    The *geometry* is trace-time (effective blocks, grid extents, the
+    static ``max_tiles`` bound) but the *tables* are runtime data: the
+    router decides ``group_sizes`` per call, so each expert's row blocks
+    are computed with jnp ops (:meth:`tables`) and ride to the kernel as
+    a scalar-prefetch operand — no host-side pad/scatter, no padded
+    intermediate, no gather-back.
+
+    Each table row is ``(row0, row_end, row_start, expert, state)``:
+    ``[row0, row_end)`` are the x/out rows the tile owns, ``row_start``
+    is the clamped origin of its fixed ``bm``-row window, ``expert``
+    selects the weight (and bias) panel, and ``state`` marks the tile as
+    compute / zero-fill (rows past ``sum(group_sizes)``) / skip.
+    """
+
+    t: int
+    k: int
+    n: int
+    num_experts: int
+    bm: int
+    bk: int
+    bn: int
+
+    def __post_init__(self):
+        assert self.bm <= self.t and self.bn <= self.n and self.bk <= self.k
+
+    @property
+    def max_tiles(self) -> int:
+        """Static row-tile bound: every expert may add one partial block,
+        plus the zero-fill tail region."""
+        return ceil_div(self.t, self.bm) + self.num_experts + 1
+
+    @property
+    def k_steps(self) -> int:
+        return ceil_div(self.k, self.bk)
+
+    @property
+    def n_steps(self) -> int:
+        return ceil_div(self.n, self.bn)
+
+    def tables(self, group_sizes: jax.Array) -> jax.Array:
+        """Runtime tile table: ``(max_tiles, 5)`` int32 from the router's
+        ``group_sizes``.  All shapes static, values dynamic — traceable
+        under ``jit``.  Rows past ``sum(group_sizes)`` form a zero-fill
+        pseudo-group so the kernel covers every output row exactly once.
+        """
+        bm, t, e = self.bm, self.t, self.num_experts
+        sizes = group_sizes.astype(jnp.int32)
+        tail = t - jnp.sum(sizes)
+        all_sizes = jnp.concatenate([sizes, tail[None]])          # (E+1,)
+        all_off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(all_sizes)])        # (E+2,)
+        nblocks = (all_sizes + bm - 1) // bm                      # (E+1,)
+        bstart = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(nblocks)])           # (E+2,)
+        g = jnp.arange(self.max_tiles, dtype=jnp.int32)
+        # Which (pseudo-)group owns tile g; empty groups contribute no
+        # tiles (their bstart span is empty, searchsorted skips them).
+        owner = jnp.clip(
+            jnp.searchsorted(bstart, g, side="right") - 1, 0, e)
+        local = g - bstart[owner]
+        row0 = all_off[owner] + local * bm
+        row_end = jnp.minimum(row0 + bm, all_off[owner] + all_sizes[owner])
+        active = g < bstart[-1]
+        row0 = jnp.where(active, row0, t)
+        row_end = jnp.where(active, row_end, t)
+        rs = jnp.clip(jnp.minimum(row0, t - bm), 0)
+        expert = jnp.minimum(owner, e - 1)  # always a legal panel index
+        state = jnp.where(
+            active & (row_end > row0),
+            jnp.where(owner < e, TILE_COMPUTE, TILE_ZERO), TILE_SKIP)
+        return jnp.stack([row0, row_end, rs, expert, state],
+                         axis=1).astype(jnp.int32)
+
+    def validate_tables(self, table, group_sizes) -> bool:
+        """Property check on one concrete table (tests): every output row
+        owned by exactly one tile, windows in bounds, experts consistent.
+        """
+        table = np.asarray(table)
+        sizes = np.asarray(group_sizes, dtype=np.int64)
+        offsets = np.concatenate([[0], np.cumsum(sizes)])
+        assert table.shape == (self.max_tiles, 5), table.shape
+        assert table.dtype == np.int32, table.dtype
+        owner_of = np.full(self.t, -1, dtype=np.int64)
+        for row0, row_end, rs, expert, state in table:
+            if state == TILE_SKIP:
+                assert row0 == row_end, (row0, row_end)
+                continue
+            assert 0 <= rs and rs + self.bm <= self.t, (rs, self.bm, self.t)
+            assert rs <= row0 and row_end <= rs + self.bm
+            assert 0 <= expert < self.num_experts
+            assert (owner_of[row0:row_end] == -1).all(), "row owned twice"
+            owner_of[row0:row_end] = expert if state == TILE_COMPUTE else -2
+            if state == TILE_COMPUTE:
+                # owned rows really belong to that expert
+                assert offsets[expert] <= row0
+                assert row_end <= offsets[expert + 1]
+            else:  # TILE_ZERO: rows past the ragged total
+                assert row0 >= offsets[-1]
+        assert (owner_of != -1).all(), "uncovered output rows"
+        return True
+
+
+# ---------------------------------------------------------------------------
+# In-kernel predication helpers (shared by every fused kernel body)
+# ---------------------------------------------------------------------------
+
+def clamped_k_window(ks, bk: int, k: int):
+    """Two-step K load: ``(k0, kstart)`` for K-panel ``ks``.
+
+    ``k0`` is the nominal panel start; ``kstart`` the clamped origin of
+    the fixed-``bk`` window (the last panel slides inward instead of
+    shrinking).  When they differ the window revisits lanes the previous
+    panel already summed — mask with :func:`k_tail_mask`.
+    """
+    k0 = ks * bk
+    return k0, jnp.minimum(k0, k - bk)
+
+
+def k_tail_mask(x, axis: int, k0, kstart):
+    """Predicate the clamped-K overlap: keep only lanes at/after the
+    nominal panel start.  ``where`` (not multiply) because the overlap may
+    hold non-finite user data."""
+    kk = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis) + kstart
+    return jnp.where(kk >= k0, x, 0)
+
+
+def ownership_mask(shape: Tuple[int, int], rs, cs, row0, row_end,
+                   col0, col_end):
+    """Boolean mask of the window elements this tile *owns* (the predicate
+    that keeps every output element owned by exactly one tile)."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + rs
+    cols = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + cs
+    return ((rows >= row0) & (rows < row_end)
+            & (cols >= col0) & (cols < col_end))
+
+
+def predicated_store(ref, idx, values, own):
+    """Predicated two-step RMW store: write only owned elements of the
+    clamped window, preserving neighbours written by other tiles."""
+    old = ref[idx]
+    ref[idx] = jnp.where(own, values, old)
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting
+# ---------------------------------------------------------------------------
+
+def plan_launches(plan, fused: bool) -> int:
+    """``pallas_call`` count one plan's lowering emits.
+
+    Fused lowerings are single-launch by construction; a multi-launch
+    dense plan pays one dispatch per region.  Executors report this via
+    ``engine.count_launches`` and cost models charge it at
+    ``machine.launch_overhead_s``.
+    """
+    if fused:
+        return 1
+    regions = getattr(plan, "regions", None)
+    return len(regions) if regions is not None else 1

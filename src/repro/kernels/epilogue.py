@@ -1,0 +1,44 @@
+"""Shared epilogue lowering — one fusion vocabulary for every family.
+
+The paper's generator fuses the C-update tail (bias add, activation) into
+the kernel it emits instead of launching follow-up elementwise passes.
+:func:`apply_epilogue` is that tail, shared by the dense GEMM bodies and
+the grouped-GEMM bodies (per-expert bias: the caller passes the bias
+*block* its scalar-prefetch dispatch selected — the epilogue itself is
+family-agnostic).  The legal epilogue names live on the descriptor layer
+(:data:`repro.core.descriptor.EPILOGUES`).
+
+Applied to the fp32 accumulator before the output cast, so fused and
+multi-launch lowerings of one plan stay bit-identical.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.descriptor import BIAS_EPILOGUES
+
+
+def needs_bias(epilogue: Optional[str]) -> bool:
+    """Does this epilogue consume a bias operand?"""
+    return epilogue in BIAS_EPILOGUES
+
+
+def apply_epilogue(x, epilogue: Optional[str], bias_blk=None):
+    """Lower one epilogue onto an accumulator block.
+
+    ``bias_blk`` is the (1, bn)-broadcastable bias window of the output
+    block — for grouped GEMM, the dispatching kernel has already selected
+    the owning expert's row.
+    """
+    if needs_bias(epilogue):
+        x = x + bias_blk.astype(x.dtype)
+    if epilogue in ("gelu", "bias_gelu"):
+        x = jax.nn.gelu(x)
+    elif epilogue in ("silu", "bias_silu"):
+        x = jax.nn.silu(x)
+    elif epilogue == "relu":
+        x = jnp.maximum(x, 0)
+    return x

@@ -29,23 +29,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.schedule import (clamped_k_window, k_tail_mask,
+                                 ownership_mask, pack_table,
+                                 predicated_store)
+from repro.kernels.epilogue import apply_epilogue, needs_bias
 from repro.kernels.pallas_compat import CompilerParams
-
-
-def _apply_epilogue(x, epilogue: Optional[str], bias_blk):
-    if epilogue in ("bias", "bias_gelu", "bias_silu"):
-        x = x + bias_blk.astype(x.dtype)
-    if epilogue in ("gelu", "bias_gelu"):
-        x = jax.nn.gelu(x)
-    elif epilogue in ("silu", "bias_silu"):
-        x = jax.nn.silu(x)
-    elif epilogue == "relu":
-        x = jnp.maximum(x, 0)
-    return x
 
 
 def _gemm_kernel_body(*refs, layout, k_steps, k_rem, bk, epilogue,
@@ -55,7 +46,7 @@ def _gemm_kernel_body(*refs, layout, k_steps, k_rem, bk, epilogue,
     a_ref = refs[idx]; idx += 1
     b_ref = refs[idx]; idx += 1
     bias_ref = None
-    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+    if needs_bias(epilogue):
         bias_ref = refs[idx]; idx += 1
     c_ref = None
     if accumulate:
@@ -98,7 +89,7 @@ def _gemm_kernel_body(*refs, layout, k_steps, k_rem, bk, epilogue,
     def _store():
         out = acc_ref[...]
         bias_blk = bias_ref[...] if bias_ref is not None else None
-        out = _apply_epilogue(out, epilogue, bias_blk)
+        out = apply_epilogue(out, epilogue, bias_blk)
         o_ref[...] = out.astype(out_dtype)
 
 
@@ -125,7 +116,7 @@ def build_gemm_kernel(*, m: int, n: int, k: int, bm: int, bn: int, bk: int,
         pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)) if layout == "nn"
         else pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
     ]
-    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+    if needs_bias(epilogue):
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
     if accumulate:
         in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
@@ -145,7 +136,7 @@ def build_gemm_kernel(*, m: int, n: int, k: int, bm: int, bn: int, bk: int,
 
     def run(a, b, bias=None, c_in=None):
         args = [a, b]
-        if epilogue in ("bias", "bias_gelu", "bias_silu"):
+        if needs_bias(epilogue):
             assert bias is not None
             args.append(bias.reshape(1, n))
         if accumulate:
@@ -157,7 +148,7 @@ def build_gemm_kernel(*, m: int, n: int, k: int, bm: int, bn: int, bk: int,
 
 
 # ---------------------------------------------------------------------------
-# Fused single-launch plan execution (DESIGN.md §8)
+# Fused single-launch plan execution (DESIGN.md §8/§9)
 # ---------------------------------------------------------------------------
 
 def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
@@ -168,13 +159,14 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
     operand block.  The tile table rides in scalar-prefetch SMEM; per-tile
     geometry is selected by ``lax.switch`` over the distinct effective
     block shapes, and every load/store is the paper's two-step path: a
-    fixed-shape window at a clamped origin plus an ownership mask.
+    fixed-shape window at a clamped origin plus an ownership mask (the
+    predication helpers of ``repro.core.schedule``, DESIGN.md §9).
     """
     idx = 0
     a_ref = refs[idx]; idx += 1
     b_ref = refs[idx]; idx += 1
     bias_ref = None
-    if epilogue in ("bias", "bias_gelu", "bias_silu"):
+    if needs_bias(epilogue):
         bias_ref = refs[idx]; idx += 1
     c_ref = None
     if accumulate:
@@ -188,8 +180,7 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
     row_end, col_end = tbl_ref[t, 2], tbl_ref[t, 3]
     rs, cs = tbl_ref[t, 4], tbl_ref[t, 5]
 
-    k0 = ks * bk                       # nominal K-panel start
-    kstart = jnp.minimum(k0, k - bk)   # clamped load origin (K tail)
+    k0, kstart = clamped_k_window(ks, bk, k)  # two-step K load (tail)
 
     def make_branch(bm_e, bn_e):
         def branch():
@@ -213,14 +204,10 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
                 b_k_dim = 1
             if k % bk:
                 # K-tail predication: the clamped window overlaps the
-                # previous panel, so keep only lanes at/after the nominal
-                # start.  `where` on both operands (not multiply) because
-                # the overlap may hold non-finite user data.
-                kk = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1) + kstart
-                a = jnp.where(kk >= k0, a, 0)
-                kkb = jax.lax.broadcasted_iota(jnp.int32, b.shape,
-                                               b_k_dim) + kstart
-                b = jnp.where(kkb >= k0, b, 0)
+                # previous panel; keep only lanes at/after the nominal
+                # start (repro.core.schedule.k_tail_mask).
+                a = k_tail_mask(a, 1, k0, kstart)
+                b = k_tail_mask(b, b_k_dim, k0, kstart)
             acc_ref[0:bm_e, 0:bn_e] += jax.lax.dot_general(
                 a, b, dn, preferred_element_type=jnp.float32)
 
@@ -230,20 +217,15 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
                 bias_blk = None
                 if bias_ref is not None:
                     bias_blk = bias_ref[0:1, pl.ds(cs, bn_e)]
-                out = _apply_epilogue(out, epilogue, bias_blk)
+                out = apply_epilogue(out, epilogue, bias_blk)
                 out = out.astype(out_dtype)
                 # Predicated two-step store: write only the elements this
                 # tile owns, preserving neighbours under the clamped
                 # window (each C element is owned by exactly one tile).
-                rows = jax.lax.broadcasted_iota(
-                    jnp.int32, (bm_e, bn_e), 0) + rs
-                cols = jax.lax.broadcasted_iota(
-                    jnp.int32, (bm_e, bn_e), 1) + cs
-                own = ((rows >= row0) & (rows < row_end)
-                       & (cols >= col0) & (cols < col_end))
-                old = o_ref[0, pl.ds(rs, bm_e), pl.ds(cs, bn_e)]
-                o_ref[0, pl.ds(rs, bm_e), pl.ds(cs, bn_e)] = \
-                    jnp.where(own, out, old)
+                own = ownership_mask((bm_e, bn_e), rs, cs,
+                                     row0, row_end, col0, col_end)
+                predicated_store(
+                    o_ref, (0, pl.ds(rs, bm_e), pl.ds(cs, bn_e)), out, own)
         return branch
 
     branches = [make_branch(bm_e, bn_e) for bm_e, bn_e in blocks]
@@ -269,12 +251,10 @@ def build_fused_gemm_kernel(*, schedule, batch: int = 0, layout: str = "nn",
     m, n, k = schedule.m, schedule.n, schedule.k
     bk, k_steps = schedule.bk, schedule.k_steps
     nb = max(1, batch)
-    has_bias = epilogue in ("bias", "bias_gelu", "bias_silu")
+    has_bias = needs_bias(epilogue)
     bm_max = max(b[0] for b in schedule.blocks)
     bn_max = max(b[1] for b in schedule.blocks)
-    # numpy, not jnp: the builder may run inside a jit trace, and a traced
-    # constant must not leak into the closure the kernel cache keeps.
-    table = np.asarray(schedule.tiles, dtype=np.int32)  # (tiles, 7)
+    table = pack_table(schedule.tiles)  # (tiles, 7) int32, trace-time
 
     body = functools.partial(
         _fused_kernel_body, blocks=schedule.blocks, layout=layout, k=k,

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core.blocking import BlockingPlan, plan_gemm, round_up
+from repro.core.schedule import plan_launches
 from repro.core.descriptor import GemmDescriptor, check_bias
 from repro.kernels.gemm.kernel import (build_fused_gemm_kernel,
                                        build_gemm_kernel)
@@ -155,23 +156,12 @@ def _fused_executor(desc: GemmDescriptor, plan: BlockingPlan,
     return engine.build_cached(key, builder)
 
 
-def _fused_path(plan: BlockingPlan) -> bool:
-    """Resolve the execution path: config override, else the plan bit."""
-    from repro.core.config import get_config
-    mode = get_config().fused
-    if mode == "on":
-        return True
-    if mode == "off":
-        return False
-    return plan.fused
-
-
 def execute(desc: GemmDescriptor, plan: BlockingPlan, a, b, *,
             bias=None, c=None, interpret: bool = False) -> jax.Array:
     """Engine executor: run one planned (possibly batched) GEMM."""
     check_bias(desc.epilogue, bias)
-    if _fused_path(plan):
-        engine.count_launches("gemm", 1)
+    if engine.resolve_fused(plan):
+        engine.count_launches("gemm", plan_launches(plan, fused=True))
         run = _fused_executor(desc, plan, interpret)
         if desc.batch:
             out = run(a, b, bias, c)
@@ -180,7 +170,7 @@ def execute(desc: GemmDescriptor, plan: BlockingPlan, a, b, *,
                       None if c is None else c[None])
             out = out[0]
         return out
-    engine.count_launches("gemm", len(plan.regions))
+    engine.count_launches("gemm", plan_launches(plan, fused=False))
     f = functools.partial(_gemm2d, plan=plan, interpret=interpret)
     if desc.batch:
         def batched(a_, b_, c_):

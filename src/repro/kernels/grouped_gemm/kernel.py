@@ -1,30 +1,184 @@
-"""Ragged grouped GEMM Pallas kernel (MoE expert compute).
+"""Ragged grouped GEMM Pallas kernels (MoE expert compute).
 
 The quintessential "batch of small, odd GEMMs" from the paper, §IV-B: each
 expert's token group is a GEMM whose M dim is decided by the router at
-runtime.  MegaBlocks-style mapping onto a static grid:
+runtime.  Two lowerings (DESIGN.md §9):
 
-  * tokens arrive sorted by expert; each (bm)-row block belongs to exactly
-    one expert (groups are padded to bm multiples by the caller);
-  * the expert id of every row block rides in a *scalar-prefetch* operand
-    (SMEM), and the B BlockSpec's index_map reads it to pull the right
-    expert's weight tile — the LIBXSMM dispatch-by-descriptor analogue,
-    moved into the grid;
-  * row blocks past the total padded token count are skipped via
-    ``pl.when`` (no DMA, no MXU work — the masked-invocation analogue).
+  * **fused** (``build_fused_grouped_kernel``): ONE ``pallas_call`` walks
+    the ragged expert row-blocks directly.  The runtime tile table — one
+    row per ``bm``-row block, ``(row0, row_end, row_start, expert,
+    state)``, built from ``group_sizes`` by
+    :meth:`repro.core.schedule.GroupedTileSchedule.tables` — rides in
+    scalar-prefetch SMEM; the owning expert's weight panel is pulled by
+    the table-driven BlockSpec index map; edge blocks use the two-step
+    clamped-window load and a predicated RMW store, so there is **no
+    pad-to-``t_padded`` intermediate and no gather-back** — tokens are
+    touched exactly once.
+  * **pad/scatter** (``build_grouped_gemm_kernel``, the pre-schedule
+    lowering, kept for VMEM-oversized problems and as the autotuner's
+    alternative): MegaBlocks-style mapping onto a static grid — tokens
+    sorted by expert are padded to ``bm`` multiples by the caller, each
+    row block belongs to exactly one expert (``block_expert`` scalar
+    prefetch), and blocks past the padded total are skipped via
+    ``pl.when``.
+
+Both lowerings share the epilogue vocabulary (``repro.kernels.epilogue``)
+with a *per-expert* bias operand of shape (E, N) — the scalar-prefetch
+dispatch that selects an expert's weight panel selects its bias row the
+same way.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.schedule import (TILE_COMPUTE, TILE_ZERO, GroupedTileSchedule,
+                                 clamped_k_window, k_tail_mask,
+                                 ownership_mask, predicated_store)
+from repro.kernels.epilogue import apply_epilogue, needs_bias
 
-def _grouped_kernel(block_expert_ref, nrows_ref, x_ref, w_ref, o_ref,
-                    acc_ref, *, bm, bk, bn, k_steps, k_rem):
+
+# ---------------------------------------------------------------------------
+# Fused scheduled lowering (DESIGN.md §9): one launch, no pad, no gather
+# ---------------------------------------------------------------------------
+
+def _fused_grouped_kernel(tbl_ref, *refs, kdim, n, bm, bk, bn, k_steps,
+                          epilogue, out_dtype):
+    """Walk the ragged tile table: one grid step = one (row-block, N-block,
+    K-panel).  refs: x, w, [bias], out, acc_scratch — x/out staged whole
+    (clamped row windows need element-granular origins), w/bias pulled
+    per-expert by the table-driven index maps."""
+    idx = 0
+    x_ref = refs[idx]; idx += 1
+    w_ref = refs[idx]; idx += 1
+    bias_ref = None
+    if needs_bias(epilogue):
+        bias_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    acc_ref = refs[idx]
+
+    g = pl.program_id(0)
+    j = pl.program_id(1)
+    ks = pl.program_id(2)
+    row0, row_end, rs = tbl_ref[g, 0], tbl_ref[g, 1], tbl_ref[g, 2]
+    state = tbl_ref[g, 4]
+
+    col0 = j * bn                       # nominal N-block start (ownership)
+    cs = jnp.minimum(col0, n - bn)      # clamped window origin (N tail)
+    col_end = jnp.minimum(col0 + bn, n)
+    k0, kstart = clamped_k_window(ks, bk, kdim)
+
+    @pl.when(state == TILE_COMPUTE)
+    def _compute():
+        @pl.when(ks == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a = x_ref[pl.ds(rs, bm), pl.ds(kstart, bk)]
+        b = w_ref[0, pl.ds(kstart, bk), pl.ds(cs, bn)]
+        if kdim % bk:  # K-tail predication on the clamped-window overlap
+            a = k_tail_mask(a, 1, k0, kstart)
+            b = k_tail_mask(b, 0, k0, kstart)
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(ks == k_steps - 1)
+        def _store():
+            out = acc_ref[...]
+            bias_blk = None
+            if bias_ref is not None:
+                bias_blk = bias_ref[0:1, pl.ds(cs, bn)]
+            out = apply_epilogue(out, epilogue, bias_blk)
+            own = ownership_mask((bm, bn), rs, cs,
+                                 row0, row_end, col0, col_end)
+            predicated_store(o_ref, (pl.ds(rs, bm), pl.ds(cs, bn)),
+                             out.astype(out_dtype), own)
+
+    # Rows past sum(group_sizes) belong to no expert -> zero (matches
+    # ref.py); the zero-fill pseudo-group's tiles own exactly those rows.
+    @pl.when((state == TILE_ZERO) & (ks == k_steps - 1))
+    def _zero():
+        own = ownership_mask((bm, bn), rs, cs, row0, row_end, col0, col_end)
+        predicated_store(o_ref, (pl.ds(rs, bm), pl.ds(cs, bn)),
+                         jnp.zeros((bm, bn), out_dtype), own)
+
+
+def build_fused_grouped_kernel(*, schedule: GroupedTileSchedule,
+                               epilogue: Optional[str] = None,
+                               in_dtype=jnp.float32, out_dtype=jnp.float32,
+                               interpret: bool = True):
+    """Generate ONE pallas_call executing a whole ragged grouped dispatch.
+
+    Returns ``f(table, x, w, [bias]) -> (T, N)`` where ``table`` is the
+    runtime ``(max_tiles, 5)`` int32 tile table
+    (:meth:`GroupedTileSchedule.tables`), ``x: (T, K)`` rows sorted by
+    group, ``w: (E, K, N)``, ``bias: (E, N)``.  The supergrid is
+    ``(max_tiles, n_steps, k_steps)``.
+    """
+    t, kdim, n = schedule.t, schedule.k, schedule.n
+    bm, bk, bn = schedule.bm, schedule.bk, schedule.bn
+    has_bias = needs_bias(epilogue)
+
+    body = functools.partial(
+        _fused_grouped_kernel, kdim=kdim, n=n, bm=bm, bk=bk, bn=bn,
+        k_steps=schedule.k_steps, epilogue=epilogue,
+        out_dtype=jnp.dtype(out_dtype))
+
+    in_specs = [
+        pl.BlockSpec((t, kdim), lambda g, j, ks, tbl: (0, 0)),
+        # the whole weight panel of the expert owning row-block g
+        pl.BlockSpec((1, kdim, n), lambda g, j, ks, tbl: (tbl[g, 3], 0, 0)),
+    ]
+    if has_bias:
+        in_specs.append(
+            pl.BlockSpec((1, n), lambda g, j, ks, tbl: (tbl[g, 3], 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the tile table
+        grid=(schedule.max_tiles, schedule.n_steps, schedule.k_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((t, n), lambda g, j, ks, tbl: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+
+    kernel = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )
+
+    def run(table, x, w, bias=None):
+        args = [table, x, w]
+        if has_bias:
+            assert bias is not None
+            args.append(bias)
+        return kernel(*args)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Pad/scatter lowering (pre-schedule fallback + autotune alternative)
+# ---------------------------------------------------------------------------
+
+def _grouped_kernel(block_expert_ref, nrows_ref, *refs, bm, bk, bn,
+                    k_steps, k_rem, epilogue, out_dtype):
+    idx = 0
+    x_ref = refs[idx]; idx += 1
+    w_ref = refs[idx]; idx += 1
+    bias_ref = None
+    if needs_bias(epilogue):
+        bias_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    acc_ref = refs[idx]
+
     i = pl.program_id(0)
     kk = pl.program_id(2)
 
@@ -37,7 +191,7 @@ def _grouped_kernel(block_expert_ref, nrows_ref, x_ref, w_ref, o_ref,
     @pl.when(active)
     def _():
         a = x_ref[...]
-        b = w_ref[...]
+        b = w_ref[0]
         if k_rem:
             kidx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
             valid = jnp.where(kk == k_steps - 1, k_rem, bk)
@@ -49,64 +203,61 @@ def _grouped_kernel(block_expert_ref, nrows_ref, x_ref, w_ref, o_ref,
 
     @pl.when(kk == k_steps - 1)
     def _():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        out = acc_ref[...]
+        bias_blk = bias_ref[...] if bias_ref is not None else None
+        out = apply_epilogue(out, epilogue, bias_blk)
+        o_ref[...] = out.astype(out_dtype)
 
 
 def build_grouped_gemm_kernel(*, t_padded: int, k: int, n: int, num_experts: int,
                               bm: int = 128, bk: int = 512, bn: int = 256,
+                              epilogue: Optional[str] = None,
                               in_dtype=jnp.float32, out_dtype=jnp.float32,
                               interpret: bool = True):
-    """Returns f(x:(Tp,K), w:(E,K,N), block_expert:(nb,), nrows:(1,)) -> (Tp,N)."""
+    """Returns f(x:(Tp,K), w:(E,K,N), [bias:(E,N)], block_expert:(nb,),
+    nrows:(1,)) -> (Tp,N)."""
     bn = min(bn, n)
     bk = min(bk, k)
     grid_m = pl.cdiv(t_padded, bm)
     grid_n = pl.cdiv(n, bn)
     grid_k = pl.cdiv(k, bk)
+    has_bias = needs_bias(epilogue)
 
     body = functools.partial(_grouped_kernel, bm=bm, bk=bk, bn=bn,
-                             k_steps=grid_k, k_rem=k % bk)
+                             k_steps=grid_k, k_rem=k % bk, epilogue=epilogue,
+                             out_dtype=jnp.dtype(out_dtype))
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk, be, nr: (i, kk)),
+        # weight tile of the expert owning row-block i
+        pl.BlockSpec((1, bk, bn),
+                     lambda i, j, kk, be, nr: (be[i], kk, j)),
+    ]
+    if has_bias:
+        # ... and the same expert's bias row
+        in_specs.append(
+            pl.BlockSpec((1, bn), lambda i, j, kk, be, nr: (be[i], j)))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # block_expert, nrows
         grid=(grid_m, grid_n, grid_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk, be, nr: (i, kk)),
-            # weight tile of the expert owning row-block i
-            pl.BlockSpec((1, bk, bn),
-                         lambda i, j, kk, be, nr: (be[i], kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, be, nr: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
 
     kernel = pl.pallas_call(
-        lambda be, nr, x, w, o, acc: body(be, nr, x, _squeeze_w(w), o, acc),
+        body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t_padded, n), out_dtype),
         interpret=interpret,
     )
 
-    def run(x, w, block_expert, nrows):
-        return kernel(block_expert, nrows, x, w)
+    def run(x, w, block_expert, nrows, bias=None):
+        args = [block_expert, nrows, x, w]
+        if has_bias:
+            assert bias is not None
+            args.append(bias)
+        return kernel(*args)
 
     return run
-
-
-class _SqueezedRef:
-    """View of a (1, bk, bn) weight block ref as (bk, bn)."""
-
-    def __init__(self, ref):
-        self._ref = ref
-
-    def __getitem__(self, idx):
-        if idx is Ellipsis:
-            return self._ref[0]
-        return self._ref[(0,) + tuple(idx)]
-
-    @property
-    def shape(self):
-        return self._ref.shape[1:]
-
-
-def _squeeze_w(ref):
-    return _SqueezedRef(ref)

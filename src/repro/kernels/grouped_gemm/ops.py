@@ -1,12 +1,24 @@
 """Ragged grouped GEMM family (MoE expert compute).
 
-Takes unsorted per-row expert assignments OR pre-sorted rows + group
-sizes.  Pads each group to the row-block multiple (bm), builds the
-block→expert map, and dispatches the scalar-prefetch kernel.
+Takes pre-sorted rows + group sizes and dispatches one of two lowerings
+(DESIGN.md §9), resolved by ``engine.resolve_fused`` exactly as for
+dense GEMM:
 
-Tile sizes (bm, bk, bn) come from the engine's machine-model planner
-(:func:`repro.core.blocking.plan_grouped`) — the hardcoded 128/512/256
-are gone; explicit kwargs pin the plan.
+  * **fused** (``plan.fused``, default whenever the staged operands fit
+    VMEM): the plan's :class:`~repro.core.schedule.GroupedTileSchedule`
+    turns ``group_sizes`` into a runtime tile table and ONE
+    ``pallas_call`` walks the ragged expert row-blocks directly —
+    no pad-to-``t_padded`` intermediate, no ``out_padded[dest]``
+    gather-back;
+  * **pad/scatter** (the pre-schedule lowering, kept for VMEM-oversized
+    problems and as the autotuner's alternative): pad each group to the
+    row-block multiple, build the block→expert map, dispatch the static
+    grid, gather the rows back out.
+
+Epilogues (bias/gelu/silu/relu, per-expert bias of shape (E, N)) lower
+through ``repro.kernels.epilogue`` on both paths.  Tile sizes
+(bm, bk, bn) come from the engine's machine-model planner
+(:func:`repro.core.blocking.plan_grouped`); explicit kwargs pin the plan.
 """
 from __future__ import annotations
 
@@ -17,8 +29,10 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core.blocking import GroupedGemmPlan, plan_grouped
-from repro.core.descriptor import GroupedGemmDescriptor
-from repro.kernels.grouped_gemm.kernel import build_grouped_gemm_kernel
+from repro.core.descriptor import GroupedGemmDescriptor, check_bias
+from repro.core.schedule import plan_launches
+from repro.kernels.grouped_gemm.kernel import (build_fused_grouped_kernel,
+                                               build_grouped_gemm_kernel)
 
 
 def plan_groups(group_sizes: jax.Array, num_experts: int, bm: int,
@@ -53,8 +67,22 @@ def scatter_rows(x_sorted_by_group, group_sizes, offsets, bm, t_padded):
     return out.at[dest].set(x_sorted_by_group), dest
 
 
-def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
-            group_sizes, *, interpret: bool = False) -> jax.Array:
+def _execute_fused(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
+                   group_sizes, bias, interpret: bool) -> jax.Array:
+    """Single scheduled launch: runtime tables, direct ragged stores."""
+    sched = plan.tile_schedule()
+    table = sched.tables(group_sizes)
+    key = desc.cache_key() + ("fused", sched.bm, sched.bk, sched.bn,
+                              interpret)
+    kernel = engine.build_cached(key, lambda: build_fused_grouped_kernel(
+        schedule=sched, epilogue=desc.epilogue,
+        in_dtype=x.dtype, out_dtype=x.dtype, interpret=interpret))
+    return kernel(table, x, w, bias)
+
+
+def _execute_padded(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
+                    group_sizes, bias, interpret: bool) -> jax.Array:
+    """Pad/scatter lowering: pad groups to bm multiples, gather back."""
     bm, bk, bn = plan.bm, plan.bk, plan.bn
     t_padded = plan.t_padded
     offsets, block_expert, nrows = plan_groups(
@@ -65,8 +93,9 @@ def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
     kernel = engine.build_cached(key, lambda: build_grouped_gemm_kernel(
         t_padded=t_padded, k=desc.k, n=desc.n,
         num_experts=desc.num_experts, bm=bm, bk=bk, bn=bn,
-        in_dtype=x.dtype, out_dtype=x.dtype, interpret=interpret))
-    out_padded = kernel(x_padded, w, block_expert, nrows)
+        epilogue=desc.epilogue, in_dtype=x.dtype, out_dtype=x.dtype,
+        interpret=interpret))
+    out_padded = kernel(x_padded, w, block_expert, nrows, bias)
     # gather back to the caller's (sorted, unpadded) row order; rows past
     # sum(group_sizes) belong to no group -> zero (matches ref).
     total = jnp.sum(group_sizes.astype(jnp.int32))
@@ -74,23 +103,43 @@ def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
     return jnp.where(valid, out_padded[dest], 0).astype(x.dtype)
 
 
+def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
+            group_sizes, *, bias=None, interpret: bool = False) -> jax.Array:
+    check_bias(desc.epilogue, bias)
+    fused = engine.resolve_fused(plan)
+    engine.count_launches("grouped_gemm", plan_launches(plan, fused=fused))
+    if fused:
+        return _execute_fused(desc, plan, x, w, group_sizes, bias, interpret)
+    return _execute_padded(desc, plan, x, w, group_sizes, bias, interpret)
+
+
 engine.register_family("grouped_gemm", planner=plan_grouped, execute=execute)
 
 
 def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                 epilogue: Optional[str] = None,
+                 bias: Optional[jax.Array] = None,
                  bm: Optional[int] = None, bk: Optional[int] = None,
-                 bn: Optional[int] = None) -> jax.Array:
+                 bn: Optional[int] = None,
+                 fused: Optional[bool] = None) -> jax.Array:
     """Ragged grouped GEMM via the engine.
 
     x: (T, K) rows sorted by group; w: (E, K, N); group_sizes: (E,)
     (dynamic, sum <= T).  Returns (T, N): row i multiplied by its group's
-    weight; rows beyond sum(group_sizes) are zero.
+    weight; rows beyond sum(group_sizes) are zero.  ``epilogue`` fuses the
+    GEMM tail (``bias`` is per-expert, shape (E, N)); ``fused=True/False``
+    pins the scheduled single-launch vs pad/scatter lowering for this
+    call (default: follow config + plan, DESIGN.md §9).
     """
-    desc = GroupedGemmDescriptor.from_operands(x, w)
+    desc = GroupedGemmDescriptor.from_operands(x, w, epilogue=epilogue)
     plan = None
     if bm is not None or bk is not None or bn is not None:
         # Fill unpinned knobs from the (cached) engine plan.
         auto = engine.plan_for(desc)
         plan = GroupedGemmPlan(desc, bm or auto.bm, bk or auto.bk,
-                               bn or auto.bn)
-    return engine.dispatch(desc, x, w, group_sizes, plan=plan)
+                               bn or auto.bn, fused=auto.fused)
+    if fused is None:
+        return engine.dispatch(desc, x, w, group_sizes, plan=plan, bias=bias)
+    from repro.core.config import use
+    with use(fused="on" if fused else "off"):
+        return engine.dispatch(desc, x, w, group_sizes, plan=plan, bias=bias)

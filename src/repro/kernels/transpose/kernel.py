@@ -24,29 +24,33 @@ from repro.kernels.pallas_compat import CompilerParams
 
 def _transpose_body(x_ref, o_ref, scratch_ref):
     # Stage the tile through scratch (the ZA tile), then emit its transpose.
-    scratch_ref[...] = x_ref[...]
-    o_ref[...] = scratch_ref[...].T
+    scratch_ref[...] = x_ref[0]
+    o_ref[0] = scratch_ref[...].T
 
 
 def build_transpose_kernel(rows: int, cols: int, bt_r: int = 256,
                            bt_c: int = 256, dtype=jnp.float32,
-                           interpret: bool = True):
-    """Generate a (rows, cols) -> (cols, rows) transpose.
+                           interpret: bool = True, batch: int = 0):
+    """Generate a (nb, rows, cols) -> (nb, cols, rows) transpose.
 
-    Block (bt_r, bt_c) is read at block-index (i, j) and written at (j, i);
-    partial edge blocks rely on Pallas store clipping (reads of the padded
-    region are garbage but land outside the clipped store).
+    Block (bt_r, bt_c) is read at block-index (b, i, j) and written at
+    (b, j, i); partial edge blocks rely on Pallas store clipping (reads of
+    the padded region are garbage but land outside the clipped store).
+    Batch walks as the leading grid dimension — a batched transpose is ONE
+    ``pallas_call``, not ``vmap``-stacked launches (DESIGN.md §9); the
+    caller reshapes the unbatched case to ``nb = 1``.
     """
-    grid = (pl.cdiv(rows, bt_r), pl.cdiv(cols, bt_c))
+    nb = max(1, batch)
+    grid = (nb, pl.cdiv(rows, bt_r), pl.cdiv(cols, bt_c))
     return pl.pallas_call(
         _transpose_body,
         grid=grid,
-        in_specs=[pl.BlockSpec((bt_r, bt_c), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((bt_c, bt_r), lambda i, j: (j, i)),
-        out_shape=jax.ShapeDtypeStruct((cols, rows), dtype),
+        in_specs=[pl.BlockSpec((1, bt_r, bt_c), lambda b, i, j: (b, i, j))],
+        out_specs=pl.BlockSpec((1, bt_c, bt_r), lambda b, i, j: (b, j, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, cols, rows), dtype),
         scratch_shapes=[pltpu.VMEM((bt_r, bt_c), dtype)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel"),
+            dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,
     )

@@ -15,8 +15,14 @@ def execute(desc: TransposeDescriptor, plan: TransposePlan, x, *,
             interpret: bool = False) -> jax.Array:
     key = desc.cache_key() + ("kernel", plan.bt, interpret)
     kernel = engine.build_cached(key, lambda: build_transpose_kernel(
-        desc.rows, desc.cols, plan.bt, plan.bt, x.dtype, interpret))
-    return kernel(x)
+        desc.rows, desc.cols, plan.bt, plan.bt, x.dtype, interpret,
+        batch=desc.batch))
+    # Batch walks as a grid dimension of the single launch (DESIGN.md §9),
+    # so count_launches sees a batched transpose as exactly 1.
+    engine.count_launches("transpose", 1)
+    if desc.batch:
+        return kernel(x)
+    return kernel(x[None])[0]
 
 
 engine.register_family("transpose", planner=plan_transpose, execute=execute)
@@ -25,11 +31,12 @@ engine.register_family("transpose", planner=plan_transpose, execute=execute)
 def transpose(x: jax.Array, *, bt: Optional[int] = None) -> jax.Array:
     """Blocked 2-D (or batched) transpose through VMEM scratch tiles.
 
-    ``bt=None`` takes the machine-model-planned tile edge
+    Rank-3 input transposes the trailing two dims; the batch dim walks as
+    a leading grid dimension of ONE ``pallas_call`` (DESIGN.md §9), not a
+    ``vmap`` over per-slice launches.  ``bt=None`` takes the
+    machine-model-planned tile edge
     (:func:`repro.core.blocking.plan_transpose`).
     """
-    if x.ndim == 3:
-        return jax.vmap(lambda xx: transpose(xx, bt=bt))(x)
     desc = TransposeDescriptor.from_operands(x)
     plan = TransposePlan(desc, bt) if bt is not None else None
     return engine.dispatch(desc, x, plan=plan)

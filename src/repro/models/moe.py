@@ -24,20 +24,21 @@ from repro.models import common
 _MAX_BATCH_SHARDS = 32  # pod x data on the largest production mesh
 
 
-def _expert_gemm_grouped(x4, w):
+def _expert_gemm_grouped(x4, w, epilogue=None):
     """(n, e, cap, k) x (e, k, f) -> (n, e, cap, f) via the engine's
     ragged grouped-GEMM family.
 
     The capacity slots are uniform, so the "ragged" split degenerates to
     E equal groups of n*cap rows — rows sorted by expert after a
     transpose, exactly the layout the kernel's scalar-prefetch dispatch
-    expects.
+    expects.  ``epilogue`` fuses the activation into the kernel's store
+    (DESIGN.md §9) instead of a follow-up elementwise pass.
     """
     from repro.kernels.grouped_gemm import grouped_gemm
     n, e, cap, k = x4.shape
     xt = x4.transpose(1, 0, 2, 3).reshape(e * n * cap, k)
     sizes = jnp.full((e,), n * cap, jnp.int32)
-    out = grouped_gemm(xt, w, sizes)
+    out = grouped_gemm(xt, w, sizes, epilogue=epilogue)
     return out.reshape(e, n, cap, -1).transpose(1, 0, 2, 3)
 
 
@@ -135,24 +136,26 @@ def moe_apply(params, cfg, x):
 
     # --- expert compute (batched small GEMMs over the E dim) --------------
     # Under the pallas backend the three expert GEMMs route through the
-    # engine's grouped-GEMM family (descriptor-planned tiles); the XLA
+    # engine's grouped-GEMM family (descriptor-planned tiles), with the
+    # activation fused into the kernel epilogue (DESIGN.md §9); the XLA
     # default keeps the einsum formulation, which partitions under SPMD.
     if get_config().backend == "pallas":
         mm = _expert_gemm_grouped
     else:
-        def mm(x4, w):
-            return jnp.einsum("neck,ekf->necf", x4, w)
+        def mm(x4, w, epilogue=None):
+            out = jnp.einsum("neck,ekf->necf", x4, w)
+            return _act(out, epilogue) if epilogue else out
     xin = jnp.einsum("ngec,ngd->necd", dispatch, xg)  # (n, e, cap, d)
     xin = shard_activation(xin, xin_spec)
     w_up = common.cast_param(params["w_up"]["w"], dt)
     w_down = common.cast_param(params["w_down"]["w"], dt)
-    up = shard_activation(mm(xin, w_up), h_spec)
     if cfg.mlp_gated:
+        up = shard_activation(mm(xin, w_up), h_spec)
         w_gate = common.cast_param(params["w_gate"]["w"], dt)
-        gate = _act(shard_activation(mm(xin, w_gate), h_spec), cfg.mlp_act)
+        gate = shard_activation(mm(xin, w_gate, epilogue=cfg.mlp_act), h_spec)
         h = gate * up
     else:
-        h = _act(up, cfg.mlp_act)
+        h = shard_activation(mm(xin, w_up, epilogue=cfg.mlp_act), h_spec)
     y_slots = mm(h, w_down)
     y_slots = shard_activation(y_slots, xin_spec)
     y = jnp.einsum("ngec,necd->ngd", combine, y_slots)

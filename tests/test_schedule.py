@@ -1,0 +1,164 @@
+"""The schedule layer (DESIGN.md §9): property-style validation of the
+dense and grouped tile schedules, table packing, and launch accounting."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (GemmDescriptor, GroupedGemmDescriptor,
+                        GroupedTileSchedule, plan_gemm, plan_grouped)
+from repro.core.schedule import (TILE_COMPUTE, TILE_SKIP, TILE_ZERO,
+                                 ceil_div, flatten_regions, pack_table,
+                                 plan_launches)
+
+
+# ---------------------------------------------------------------------------
+# Dense (GEMM) schedules
+# ---------------------------------------------------------------------------
+
+def _check_gemm_schedule(m, n, k):
+    """Every C cell owned by exactly one tile; windows in bounds; the
+    packed scalar-prefetch table is int32."""
+    plan = plan_gemm(GemmDescriptor(m=m, n=n, k=k))
+    sched = plan.tile_schedule()
+    sched.validate()  # exact ownership + in-bounds clamped windows
+    assert sched.bk <= k and sched.k_steps == ceil_div(k, sched.bk)
+    # cell-exact ownership (validate() checks areas; this checks cells)
+    owned = np.zeros((m, n), dtype=np.int64)
+    for row0, col0, row_end, col_end, rs, cs, bid in sched.tiles:
+        owned[row0:row_end, col0:col_end] += 1
+    assert (owned == 1).all()
+    table = pack_table(sched.tiles)
+    assert table.dtype == np.int32 and table.shape == (sched.num_tiles, 7)
+
+
+_GEMM_CASES = [(1, 1, 1), (7, 33, 100), (128, 128, 128), (300, 500, 128),
+               (513, 129, 257), (80, 80, 512), (1, 2048, 64), (640, 640, 512)]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(m=st.integers(1, 1024), n=st.integers(1, 1024),
+           k=st.integers(1, 2048))
+    def test_gemm_schedule_ownership(m, n, k):
+        _check_gemm_schedule(m, n, k)
+else:
+    @pytest.mark.parametrize("m,n,k", _GEMM_CASES)
+    def test_gemm_schedule_ownership(m, n, k):
+        _check_gemm_schedule(m, n, k)
+
+
+def test_flatten_regions_matches_plan_tile_schedule():
+    """BlockingPlan.tile_schedule delegates to the schedule layer."""
+    plan = plan_gemm(GemmDescriptor(m=640, n=640, k=512),
+                     force_block=(256, 256))
+    d = plan.desc
+    assert plan.tile_schedule() == flatten_regions(d.m, d.n, d.k, plan.bk,
+                                                   plan.regions)
+
+
+def test_pack_table_rejects_flat_rows():
+    with pytest.raises(AssertionError):
+        pack_table([1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Grouped (ragged) schedules
+# ---------------------------------------------------------------------------
+
+def _check_grouped_tables(sizes, t_extra, bm=16):
+    """Runtime tables from group_sizes: every output row owned exactly
+    once (compute rows by their expert, tail rows by zero-fill tiles),
+    windows in bounds, int32 packing."""
+    sizes = np.asarray(sizes, dtype=np.int32)
+    t = max(1, int(sizes.sum()) + t_extra)
+    sched = GroupedTileSchedule(t=t, k=32, n=48, num_experts=len(sizes),
+                                bm=min(bm, t), bk=32, bn=48)
+    import jax.numpy as jnp
+    table = np.asarray(sched.tables(jnp.asarray(sizes)))
+    assert table.dtype == np.int32
+    sched.validate_tables(table, sizes)
+    # State accounting: zero tiles iff rows are left over.
+    states = table[:, 4]
+    assert ((states == TILE_ZERO).any()) == (int(sizes.sum()) < t)
+    assert (states != TILE_SKIP).sum() <= sched.max_tiles
+
+
+_GROUPED_CASES = [
+    ([37, 0, 201, 70], 4),   # ragged + zero-size expert + tail rows
+    ([0, 0, 0], 5),          # all experts empty: pure zero-fill
+    ([300], 0),              # single expert owns all rows
+    ([5, 3, 2, 1], 0),       # sub-block groups, no tail
+    ([0, 0, 17], 10),        # leading empties + tail
+    ([1], 0),                # minimal
+]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(sizes=st.lists(st.integers(0, 70), min_size=1, max_size=6),
+           t_extra=st.integers(0, 20))
+    def test_grouped_tables_ownership(sizes, t_extra):
+        _check_grouped_tables(sizes, t_extra)
+else:
+    @pytest.mark.parametrize("sizes,t_extra", _GROUPED_CASES)
+    def test_grouped_tables_ownership(sizes, t_extra):
+        _check_grouped_tables(sizes, t_extra)
+
+
+def test_grouped_schedule_static_bounds():
+    """max_tiles is a static bound: every expert may add one partial
+    block plus the zero-fill tail — never exceeded, even adversarially."""
+    sched = GroupedTileSchedule(t=100, k=32, n=32, num_experts=4,
+                                bm=16, bk=32, bn=32)
+    assert sched.max_tiles == ceil_div(100, 16) + 4 + 1
+    import jax.numpy as jnp
+    worst = jnp.asarray([1, 1, 1, 97], jnp.int32)  # max partial blocks
+    table = np.asarray(sched.tables(worst))
+    assert (table[:, 4] != TILE_SKIP).sum() <= sched.max_tiles
+    sched.validate_tables(table, np.asarray(worst))
+
+
+def test_grouped_plan_tile_schedule_clamps_blocks():
+    """Plan blocks larger than the problem clamp so windows fit."""
+    desc = GroupedGemmDescriptor(t=7, k=9, n=11, num_experts=2)
+    plan = plan_grouped(desc)
+    sched = plan.tile_schedule()
+    assert sched.bm <= 7 and sched.bk <= 9 and sched.bn <= 11
+
+
+def test_grouped_compute_tiles_never_cross_experts():
+    """A compute tile's owned rows all belong to one expert — the
+    property that lets the kernel pull a single weight panel per tile."""
+    import jax.numpy as jnp
+    sizes = np.asarray([13, 7, 0, 21], np.int32)
+    sched = GroupedTileSchedule(t=50, k=16, n=16, num_experts=4,
+                                bm=8, bk=16, bn=16)
+    table = np.asarray(sched.tables(jnp.asarray(sizes)))
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    for row0, row_end, rs, expert, state in table:
+        if state != TILE_COMPUTE:
+            continue
+        assert offsets[expert] <= row0 and row_end <= offsets[expert + 1]
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting
+# ---------------------------------------------------------------------------
+
+def test_plan_launches():
+    gemm_plan = plan_gemm(GemmDescriptor(m=640, n=640, k=512),
+                          force_block=(256, 256))
+    assert len(gemm_plan.regions) >= 3
+    assert plan_launches(gemm_plan, fused=True) == 1
+    assert plan_launches(gemm_plan, fused=False) == len(gemm_plan.regions)
+    grouped = plan_grouped(GroupedGemmDescriptor(t=64, k=32, n=32,
+                                                 num_experts=2))
+    # both grouped lowerings are single pallas_calls (pad/scatter pays in
+    # stitch traffic, not launches)
+    assert plan_launches(grouped, fused=True) == 1
+    assert plan_launches(grouped, fused=False) == 1
