@@ -1,0 +1,102 @@
+"""Scheduled flash attention: fused single-launch vs dense-grid lowering.
+
+The flash analogue of fig89's fused-vs-multi table (DESIGN.md §10): for
+each attention shape the suite times the fused scheduled lowering (the
+causal-aware tile table — fully-masked k-blocks dropped at plan time)
+against the dense-grid lowering (masked tiles branched at run time) of
+the *same* (block_q, block_k) plan, records traced launch counts and the
+skipped-tile counts, and writes the whole table to
+``BENCH_flash_fused.json`` so the perf trajectory is tracked across PRs
+alongside ``BENCH_gemm_fused.json`` / ``BENCH_grouped_fused.json``.
+
+``run(smoke=True)`` is the CI end-to-end exercise of the scheduled flash
+path (reduced sizes/iterations, same code paths), wired into
+``benchmarks/run.py --smoke``.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import FlashDescriptor, FlashPlan, engine, plan_flash
+from repro.kernels.flash_attention import flash_attention
+
+FLASH_JSON = "BENCH_flash_fused.json"
+
+# (label, b, h, sq, d, causal, block) — the causal sweep is the
+# acceptance series (sq in {128, 512, 2048}); one non-causal point for
+# contrast.  Blocks are pinned below the sequence so the causal pruning
+# is visible in the skipped-tile column (the planner would otherwise
+# cover short sequences with one tile).
+CASES = [
+    ("causal_128", 2, 4, 128, 64, True, 64),
+    ("causal_512", 2, 4, 512, 64, True, 128),
+    ("causal_2048", 1, 2, 2048, 64, True, 128),
+    ("dense_512", 2, 4, 512, 64, False, 128),
+]
+SMOKE_CASES = [
+    ("causal_128", 1, 2, 128, 32, True, 32),
+    ("causal_256", 1, 2, 256, 32, True, 64),
+]
+
+
+def _launches(fn) -> int:
+    """Traced pallas_call launches one eager call emits (engine counter)."""
+    before = engine.stats().get("flash_attention", {}).get("launches", 0)
+    jax.block_until_ready(fn())
+    return engine.stats()["flash_attention"]["launches"] - before
+
+
+def run(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    cases = SMOKE_CASES if smoke else CASES
+    iters, warmup = (2, 1) if smoke else (3, 1)
+    entries = {}
+    for label, b, h, sq, d, causal, block in cases:
+        q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+        desc = FlashDescriptor(batch_heads=b * h, sq=sq, sk=sq, d=d,
+                               causal=causal)
+        auto = plan_flash(desc)
+        # pin the tiling so both lowerings walk the same (bq, bk) grid
+        bq = bk = block
+        sched = FlashPlan(desc, bq, bk).tile_schedule()
+        skipped = sched.dense_tiles - sched.num_tiles
+
+        ff = jax.jit(lambda q, k, v: flash_attention(
+            q, k, v, causal=causal, block_q=bq, block_k=bk, fused=True))
+        fd = jax.jit(lambda q, k, v: flash_attention(
+            q, k, v, causal=causal, block_q=bq, block_k=bk, fused=False))
+        us_f = time_fn(ff, q, k, v, iters=iters, warmup=warmup)
+        us_d = time_fn(fd, q, k, v, iters=iters, warmup=warmup)
+        lf = _launches(lambda: flash_attention(
+            q, k, v, causal=causal, block_q=bq, block_k=bk, fused=True))
+        ld = _launches(lambda: flash_attention(
+            q, k, v, causal=causal, block_q=bq, block_k=bk, fused=False))
+        err = float(jnp.max(jnp.abs(ff(q, k, v) - fd(q, k, v))))
+
+        entries[label] = {
+            "b": b, "h": h, "sq": sq, "d": d, "causal": causal,
+            "block_q": bq, "block_k": bk,
+            "tiles_walked": sched.num_tiles, "tiles_dense": sched.dense_tiles,
+            "tiles_skipped": skipped,
+            "fused_us": round(us_f, 1), "dense_us": round(us_d, 1),
+            "delta_us": round(us_d - us_f, 1),
+            "speedup": round(us_d / us_f, 3) if us_f else None,
+            "launches_fused": lf, "launches_dense": ld,
+            "plan_fused": auto.fused,
+            "agreement_err": err,
+        }
+        emit(f"flash_fused/{label}", us_f,
+             f"dense_us={us_d:.0f};delta_us={us_d - us_f:.0f};"
+             f"tiles={sched.num_tiles}/{sched.dense_tiles};"
+             f"launches_fused={lf};launches_dense={ld};"
+             f"agreement_err={err:.1e}")
+
+    with open(FLASH_JSON, "w") as f:
+        json.dump({"mode": "smoke" if smoke else "full",
+                   "entries": entries}, f, indent=1, sort_keys=True)
+    emit("flash_fused/json", 0, f"wrote={FLASH_JSON};entries={len(entries)}")

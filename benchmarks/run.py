@@ -15,11 +15,15 @@ warm — so every table is per-phase, not cumulative.
             incl. fused-vs-multi-launch deltas (BENCH_gemm_fused.json)
   grouped — scheduled grouped GEMM: fused single-launch vs pad/scatter
             deltas + launch counts (BENCH_grouped_fused.json)
+  flash   — scheduled flash attention: fused causal-pruned walk vs the
+            dense grid, deltas + skipped-tile counts
+            (BENCH_flash_fused.json)
 
-``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep and
-the grouped suite at reduced size, exercising the fused single-launch
-GEMM *and* scheduled grouped-GEMM paths end-to-end on every PR and still
-emitting ``BENCH_gemm_fused.json`` + ``BENCH_grouped_fused.json``.
+``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep plus
+the grouped and flash suites at reduced size, exercising the fused
+single-launch GEMM, scheduled grouped-GEMM *and* scheduled flash paths
+end-to-end on every PR and still emitting ``BENCH_gemm_fused.json`` +
+``BENCH_grouped_fused.json`` + ``BENCH_flash_fused.json``.
 """
 import argparse
 import sys
@@ -35,7 +39,7 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
                             fig45_alignment, fig7_blocking, fig89_gemm_sweep,
-                            grouped_fused)
+                            flash_fused, grouped_fused)
     suites = {
         "table1": table1_throughput.run,
         "fig1": fig1_scaling.run,
@@ -44,12 +48,14 @@ def main() -> None:
         "fig7": fig7_blocking.run,
         "fig89": fig89_gemm_sweep.run,
         "grouped": grouped_fused.run,
+        "flash": flash_fused.run,
     }
     if args.smoke:
         if args.only:
             ap.error("--smoke selects its own suite; drop --only")
         suites = {"fig89": lambda: fig89_gemm_sweep.run(smoke=True),
-                  "grouped": lambda: grouped_fused.run(smoke=True)}
+                  "grouped": lambda: grouped_fused.run(smoke=True),
+                  "flash": lambda: flash_fused.run(smoke=True)}
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     from repro.core import engine

@@ -1,15 +1,18 @@
-"""Quickstart: the JIT small-GEMM engine (the paper's contribution).
+"""Quickstart: the descriptor-driven kernel engine (the paper's pipeline).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Walks the four engine stages on a ragged GEMM — descriptor → plan →
+build → dispatch (DESIGN.md §1) — then shows the schedule layer's fused
+single-launch execution and the engine's cache/launch counters.
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (GemmDescriptor, plan_gemm, matmul, backend,
-                        GLOBAL_KERNEL_CACHE)
+from repro.core import (GemmDescriptor, engine, matmul, plan_gemm, use)
 from repro.kernels.gemm import ref_gemm
 
-# --- 1. describe a small, ragged GEMM (the paper's Fig 7 shape) ---------
+# --- 1. describe + plan a small, ragged GEMM (the paper's Fig 7 shape) --
 desc = GemmDescriptor(m=80, n=80, k=512, layout="nn")
 plan = plan_gemm(desc)
 print(f"plan for C[{desc.m},{desc.n}] += A·B (K={desc.k}):")
@@ -18,26 +21,42 @@ for r in plan.regions:
           f"blocked {r.bm}x{r.bn} -> {r.num_microkernels} microkernel(s)")
 print(f"  microkernels={plan.num_microkernels} "
       f"utilization={plan.utilization:.2f} "
+      f"fused={plan.fused} "
       f"predicted v5e time={plan.predicted_seconds()*1e6:.2f}us")
 
-# --- 2. run it through the engine (Pallas interpret on CPU) -------------
+# --- 2. dispatch through the engine (Pallas interpret on CPU) -----------
+# `use(backend="pallas")` routes matmul through engine.dispatch: plan
+# cache -> kernel cache -> the generated pallas_call (DESIGN.md §1).
 rng = np.random.default_rng(0)
 a = jnp.asarray(rng.standard_normal((80, 512)), jnp.float32)
 b = jnp.asarray(rng.standard_normal((512, 80)), jnp.float32)
-with backend("pallas"):
+engine.reset_stats()
+with use(backend="pallas"):
     out = matmul(a, b)
 err = float(jnp.max(jnp.abs(out - ref_gemm(a, b))))
 print(f"engine vs oracle max err: {err:.2e}")
 
-# --- 3. the JIT cache serves repeat shapes (LIBXSMM dispatch) ------------
-with backend("pallas"):
+# --- 3. repeat shapes hit both engine caches (LIBXSMM dispatch) ----------
+with use(backend="pallas"):
     matmul(a, b)
-hits, misses, size = GLOBAL_KERNEL_CACHE.stats()
-print(f"kernel cache: hits={hits} misses={misses} entries={size}")
+s = engine.stats()["gemm"]
+print(f"gemm stats: plan_hits={s['plan_hits']} "
+      f"plan_misses={s['plan_misses']} kernel_hits={s['kernel_hits']} "
+      f"kernel_misses={s['kernel_misses']} launches={s['launches']}")
+assert s["plan_hits"] >= 1 and s["kernel_hits"] >= 1
 
-# --- 4. transposed-B (the paper's §IV-C case) ----------------------------
-bt = jnp.asarray(rng.standard_normal((80, 512)), jnp.float32)  # B stored (N,K)
-with backend("pallas"):
+# --- 4. the schedule layer: a fused plan is ONE pallas_call --------------
+# The whole region cover executes as a single launch walking the
+# flattened tile schedule (DESIGN.md §8-§10); `launches` proves it.
+engine.reset_stats()
+with use(backend="pallas", fused="on"):
+    matmul(a, b)
+print(f"fused dispatch launches: {engine.stats()['gemm']['launches']}")
+assert engine.stats()["gemm"]["launches"] == 1
+
+# --- 5. transposed-B (the paper's §IV-C case) ----------------------------
+bt = jnp.asarray(rng.standard_normal((80, 512)), jnp.float32)  # B as (N,K)
+with use(backend="pallas"):
     out_nt = matmul(a, bt, layout="nt")
 err = float(jnp.max(jnp.abs(out_nt - ref_gemm(a, bt, layout="nt"))))
 print(f"nt-layout (fused transpose) max err: {err:.2e}")

@@ -1,14 +1,23 @@
 """Batched serving: prefill a batch of prompts, then decode with KV/state
 caches — across three architecture families (attention / hybrid / SSM).
 
-    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py [--backend pallas]
+
+The backend is ambient engine configuration (``repro.core.configure``,
+DESIGN.md §3), not a per-call kwarg: ``--backend pallas`` routes every
+attention / SSD / matmul hot path through ``engine.dispatch`` (interpret
+mode on CPU) and prints the per-family launch counters afterwards —
+e.g. mamba2's whole chunked forward is ONE ssd_chunk launch per layer
+call (DESIGN.md §10).  The default XLA backend is the vendor-BLAS
+baseline the paper benchmarks against.
 """
-import time
+import argparse
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
+from repro.core import configure, engine
 from repro.launch.serve import generate
 from repro.runtime.steps import model_for
 
@@ -16,6 +25,12 @@ ARCHS = ["qwen3-0.6b", "recurrentgemma-9b", "mamba2-130m"]
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["xla", "pallas"], default="xla",
+                    help="engine backend (pallas = interpret mode on CPU)")
+    args = ap.parse_args()
+    configure(backend=args.backend)
+
     b, prompt_len, gen_steps = 8, 64, 24
     for arch in ARCHS:
         cfg = reduced_config(get_config(arch))
@@ -23,10 +38,16 @@ def main():
         params = model.init(jax.random.PRNGKey(0), cfg)
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (b, prompt_len), 0, cfg.vocab_size)
+        engine.reset_stats()
         tokens, t_p, t_d = generate(cfg, params, prompts, gen_steps)
         print(f"{arch:20s} out={tuple(tokens.shape)} "
               f"prefill {b*prompt_len/t_p:7.0f} tok/s | "
               f"decode {b*(gen_steps-1)/max(t_d,1e-9):7.0f} tok/s")
+        if args.backend == "pallas":
+            for fam, c in sorted(engine.stats().items()):
+                print(f"  engine/{fam}: launches={c['launches']} "
+                      f"plan_misses={c['plan_misses']} "
+                      f"kernel_misses={c['kernel_misses']}")
 
 
 if __name__ == "__main__":

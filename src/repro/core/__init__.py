@@ -18,10 +18,12 @@ from repro.core.descriptor import (  # noqa: F401
     KernelDescriptor, SsdChunkDescriptor, TransposeDescriptor)
 from repro.core.blocking import (  # noqa: F401
     BlockingPlan, FlashPlan, GroupedGemmPlan, Region, SsdChunkPlan,
-    TransposePlan, candidate_plans, fused_legal, grouped_fused_legal,
-    palette, plan_flash, plan_gemm, plan_grouped, plan_ssd, plan_transpose)
+    TransposePlan, candidate_plans, flash_fused_legal, fused_legal,
+    grouped_fused_legal, palette, plan_flash, plan_gemm, plan_grouped,
+    plan_ssd, plan_transpose, ssd_fused_legal)
 from repro.core.schedule import (  # noqa: F401
-    GroupedTileSchedule, TileSchedule, flatten_regions, plan_launches)
+    FlashTileSchedule, GroupedTileSchedule, TileSchedule,
+    flash_tile_schedule, flatten_regions, plan_launches)
 from repro.core.machine import (  # noqa: F401
     CPU_HOST, MachineModel, TPU_V5E, DEFAULT_MACHINE, get_machine)
 from repro.core.config import (  # noqa: F401

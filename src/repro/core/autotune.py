@@ -62,7 +62,8 @@ def plan_to_record(plan: Any) -> Dict[str, Any]:
                 "fused": plan.fused}
     if isinstance(plan, FlashPlan):
         return {"family": "flash_attention",
-                "block_q": plan.block_q, "block_k": plan.block_k}
+                "block_q": plan.block_q, "block_k": plan.block_k,
+                "fused": plan.fused}
     if isinstance(plan, GroupedGemmPlan):
         return {"family": "grouped_gemm",
                 "bm": plan.bm, "bk": plan.bk, "bn": plan.bn,
@@ -70,7 +71,8 @@ def plan_to_record(plan: Any) -> Dict[str, Any]:
     if isinstance(plan, TransposePlan):
         return {"family": "transpose", "bt": plan.bt}
     if isinstance(plan, SsdChunkPlan):
-        return {"family": "ssd_chunk", "fits_vmem": plan.fits_vmem}
+        return {"family": "ssd_chunk", "fits_vmem": plan.fits_vmem,
+                "fused": plan.fused}
     raise TypeError(f"unknown plan type: {type(plan).__name__}")
 
 
@@ -91,8 +93,12 @@ def plan_from_record(desc: KernelDescriptor,
                                 fused=bool(record.get("fused", False)),
                                 plan_source="autotuned")
         if family == "flash_attention":
+            # Pre-schedule cache entries lack "fused": replay them on the
+            # dense-grid path they were actually timed on.
             return FlashPlan(desc, int(record["block_q"]),
-                             int(record["block_k"]), plan_source="autotuned")
+                             int(record["block_k"]),
+                             fused=bool(record.get("fused", False)),
+                             plan_source="autotuned")
         if family == "grouped_gemm":
             # Pre-schedule cache entries lack "fused": replay them on the
             # pad/scatter path they were actually timed on.
@@ -104,7 +110,10 @@ def plan_from_record(desc: KernelDescriptor,
             return TransposePlan(desc, int(record["bt"]),
                                  plan_source="autotuned")
         if family == "ssd_chunk":
+            # Pre-schedule cache entries lack "fused": replay them on the
+            # diag-kernel + XLA-scan path they were actually timed on.
             return SsdChunkPlan(desc, bool(record["fits_vmem"]),
+                                fused=bool(record.get("fused", False)),
                                 plan_source="autotuned")
         return None
     except (KeyError, TypeError, ValueError):
@@ -209,6 +218,8 @@ _caches_lock = threading.Lock()
 
 
 def get_tuning_cache(path: str) -> TuningCache:
+    """The process-wide :class:`TuningCache` mirror for one file path
+    (created on first use, shared after)."""
     key = os.path.abspath(path)
     with _caches_lock:
         cache = _CACHES.get(key)

@@ -40,8 +40,9 @@ from .machine import MachineModel, DEFAULT_MACHINE
 # The flattening/predication machinery lives in the schedule layer
 # (DESIGN.md §9); re-exported here for compatibility — plans *produce*
 # schedules, so blocking is the schedule layer's only upstream.
-from .schedule import (GroupedTileSchedule, TileSchedule,  # noqa: F401
-                       ceil_div, flatten_regions, plan_launches, round_up)
+from .schedule import (FlashTileSchedule, GroupedTileSchedule,  # noqa: F401
+                       TileSchedule, ceil_div, flash_tile_schedule,
+                       flatten_regions, plan_launches, round_up)
 
 # ---------------------------------------------------------------------------
 # Palette
@@ -124,6 +125,10 @@ class Region:
 
 @dataclasses.dataclass(frozen=True)
 class BlockingPlan:
+    """Planned heterogeneous region cover of one GEMM descriptor (§IV-B,
+    Fig 7): the regions, the uniform K-panel depth ``bk``, and the
+    ``fused`` execution-path bit (DESIGN.md §8)."""
+
     desc: GemmDescriptor
     regions: Tuple[Region, ...]
     bk: int
@@ -395,38 +400,84 @@ def _tile_candidates(extent: int, align: int, lo: int = 64,
 
 @dataclasses.dataclass(frozen=True)
 class FlashPlan:
+    """Planned (block_q, block_k) tiling of one flash attention descriptor.
+
+    ``fused`` selects the scheduled single-launch lowering (DESIGN.md
+    §10): the causal-aware tile table drops fully-masked k-blocks at
+    plan time and ONE ``pallas_call`` walks it; the non-fused fallback is
+    the dense-grid kernel that skips masked tiles with a run-time branch.
+    """
+
     desc: FlashDescriptor
     block_q: int
     block_k: int
+    # Execute via the flattened causal-aware tile table in ONE pallas_call
+    # over staged whole operands (DESIGN.md §10); mirrors BlockingPlan.fused.
+    fused: bool = False
     plan_source: str = "model"  # see BlockingPlan.plan_source
 
+    def tile_schedule(self) -> FlashTileSchedule:
+        """Flatten the (q, k) walk into the fused kernel's tile table
+        (delegates to the schedule layer, DESIGN.md §10)."""
+        d = self.desc
+        return flash_tile_schedule(d.sq, d.sk, self.block_q, self.block_k,
+                                   d.causal)
+
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        """Cost-model estimate under ``machine`` (see
+        :func:`_predict_flash_seconds`)."""
         return _predict_flash_seconds(self.desc, self.block_q, self.block_k,
-                                      machine)
+                                      machine, fused=self.fused)
+
+
+def flash_fused_legal(desc: FlashDescriptor,
+                      machine: MachineModel = DEFAULT_MACHINE) -> bool:
+    """Can this flash attention run as one scheduled ``pallas_call``?
+
+    The fused kernel stages one batch-head slice of q/k/v and the output
+    whole in VMEM (clamped ragged windows need element-granular origins,
+    which BlockSpec block indices cannot express) and slides tile windows
+    over them in-kernel; legal only when they fit next to the per-tile
+    score/carry scratch."""
+    isz = jnp.dtype(desc.dtype).itemsize
+    need = (2 * desc.sq + 2 * desc.sk) * desc.d * isz  # q + out + k + v
+    return need <= machine.vmem_bytes // 2
 
 
 def _predict_flash_seconds(desc: FlashDescriptor, bq: int, bk: int,
-                           machine: MachineModel) -> float:
+                           machine: MachineModel,
+                           fused: bool = False) -> float:
+    """Napkin-math time model for one flash tiling (both lowerings).
+
+    Causal skips tiles strictly above the diagonal — the heterogeneous-
+    cover idea applied to the triangle.  The fused lowering only *walks*
+    active tiles (the table drops the rest at plan time), while the
+    dense-grid fallback pays grid-step overhead on every (q, k) pair and
+    merely branches the masked ones' compute away; both pay one launch.
+    """
     cq, ck = ceil_div(desc.sq, bq), ceil_div(desc.sk, bk)
-    # Active (q, k) tile pairs: causal skips tiles strictly above the
-    # diagonal — the heterogeneous-cover idea applied to the triangle.
     if desc.causal:
         active = sum(min(ck, ceil_div((qi + 1) * bq, bk)) for qi in range(cq))
     else:
         active = cq * ck
-    steps = desc.batch_heads * active
+    steps = desc.batch_heads * (active if fused else cq * ck)
     # Issued MACs: tiles are padded to (bq, bk) — masked lanes still occupy
     # the MXU (the SME predicate analogue).
-    issued = 4 * steps * bq * bk * desc.d
+    issued = 4 * desc.batch_heads * active * bq * bk * desc.d
     compute_s = issued / machine.peak(desc.dtype)
     isz = jnp.dtype(desc.dtype).itemsize
-    # Each active step streams one K and one V tile; Q tiles stream once
-    # per q-row of active tiles; output written once.
-    traffic = steps * 2 * bk * desc.d * isz
-    traffic += desc.batch_heads * cq * bq * desc.d * isz
-    traffic += desc.out_bytes
+    if fused:
+        # Whole q/k/v staged once per batch-head slice; output written once.
+        traffic = desc.in_bytes + desc.out_bytes
+    else:
+        # Each active step streams one K and one V tile; Q tiles stream
+        # once per q-row of active tiles; output written once.
+        traffic = desc.batch_heads * active * 2 * bk * desc.d * isz
+        traffic += desc.batch_heads * cq * bq * desc.d * isz
+        traffic += desc.out_bytes
     memory_s = traffic / machine.hbm_bw
-    return max(compute_s, memory_s) + steps * machine.step_overhead_s
+    return (max(compute_s, memory_s) + steps * machine.step_overhead_s
+            + machine.launch_overhead_s)
 
 
 def _flash_legal(desc: FlashDescriptor,
@@ -451,14 +502,26 @@ def _flash_legal(desc: FlashDescriptor,
 
 def plan_flash(desc: FlashDescriptor,
                machine: MachineModel = DEFAULT_MACHINE) -> FlashPlan:
-    """Pick (block_q, block_k) from VMEM/MXU constraints + the cost model."""
+    """Pick (block_q, block_k) from VMEM/MXU constraints + the cost model.
+
+    Like ``plan_gemm``, the analytical planner takes the paper's stance
+    on dispatch: plans come out ``fused`` (single scheduled launch over
+    the causal-aware tile table) whenever the staged operands fit VMEM
+    (:func:`flash_fused_legal`); the autotuner refines empirically.
+    """
+    fused = flash_fused_legal(desc, machine)
     best = min(_flash_legal(desc, machine),
-               key=lambda s: _predict_flash_seconds(desc, *s, machine=machine))
-    return FlashPlan(desc, *best)
+               key=lambda s: _predict_flash_seconds(desc, *s, machine=machine,
+                                                    fused=fused))
+    return FlashPlan(desc, *best, fused=fused)
 
 
 @dataclasses.dataclass(frozen=True)
 class GroupedGemmPlan:
+    """Planned (bm, bk, bn) tiling of one ragged grouped GEMM, plus the
+    ``fused`` execution-path bit (scheduled single launch vs pad/scatter
+    — DESIGN.md §9)."""
+
     desc: GroupedGemmDescriptor
     bm: int
     bk: int
@@ -570,6 +633,9 @@ def plan_grouped(desc: GroupedGemmDescriptor,
 
 @dataclasses.dataclass(frozen=True)
 class TransposePlan:
+    """Planned square tile edge ``bt`` of one (batched) blocked
+    transpose."""
+
     desc: TransposeDescriptor
     bt: int
     plan_source: str = "model"  # see BlockingPlan.plan_source
@@ -613,25 +679,63 @@ def plan_transpose(desc: TransposeDescriptor,
 class SsdChunkPlan:
     """The SSD ladder has no free tiling knobs — the whole (Q, n/p) cell
     lives in VMEM per grid step — but the uniform plan object carries the
-    VMEM-fit verdict and the cost estimate for the engine's accounting."""
+    VMEM-fit verdict, the ``fused`` execution-path bit (scan form only)
+    and the cost estimate for the engine's accounting."""
 
     desc: SsdChunkDescriptor
     fits_vmem: bool
+    # Scan form (desc.chunks >= 1) only: execute the whole chunked scan —
+    # intra-chunk ladder AND inter-chunk recurrence — in ONE pallas_call
+    # with the (p, n) state carried as accumulator scratch (DESIGN.md §10)
+    # instead of the diag kernel + XLA associative-scan stitch.
+    fused: bool = False
     plan_source: str = "model"  # see BlockingPlan.plan_source
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        """Cost-model estimate: the non-fused scan pays the XLA
+        inter-chunk stitch (per-chunk state tensors written and re-read
+        around the associative scan) that the carried accumulator never
+        materializes."""
         d = self.desc
         compute_s = d.flops / machine.peak(d.dtype)
         memory_s = (d.in_bytes + d.out_bytes) / machine.hbm_bw
-        return max(compute_s, memory_s) + d.groups * machine.step_overhead_s
+        stitch_s = 0.0
+        if d.chunks and not self.fused:
+            # bx / s_incl / s_prev per (group, chunk), fp32, written by one
+            # XLA op and read back by the next.
+            stitch_bytes = 3 * d.groups * d.chunks * d.p * d.n * 4
+            stitch_s = stitch_bytes / machine.hbm_bw
+        return (max(compute_s, memory_s) + d.cells * machine.step_overhead_s
+                + machine.launch_overhead_s + stitch_s)
+
+
+def ssd_fused_legal(desc: SsdChunkDescriptor,
+                    machine: MachineModel = DEFAULT_MACHINE) -> bool:
+    """Can this SSD scan run as one carried-state ``pallas_call``?
+
+    Only the scan form has a fused lowering; it needs one chunk's cell
+    operands (double-buffered) plus the fp32 carried state and score
+    scratch resident in VMEM."""
+    if not desc.chunks:
+        return False
+    isz = jnp.dtype(desc.dtype).itemsize
+    per_step = (2 * desc.q * desc.n + desc.q * desc.q
+                + 2 * desc.q * desc.p + 2 * desc.q) * isz
+    need = 2 * per_step                      # double-buffered chunk cell
+    need += (desc.q * desc.q + 2 * desc.p * desc.n) * 4  # score + state
+    return need <= machine.vmem_bytes // 2
 
 
 def plan_ssd(desc: SsdChunkDescriptor,
              machine: MachineModel = DEFAULT_MACHINE) -> SsdChunkPlan:
+    """Plan one SSD dispatch: record the VMEM-fit verdict and, for the
+    scan form, take the paper's one-kernel stance whenever the carried-
+    state lowering is legal (:func:`ssd_fused_legal`)."""
     isz = jnp.dtype(desc.dtype).itemsize
     per_step = (2 * desc.q * desc.n + desc.q * desc.q + 2 * desc.q * desc.p) * isz
     per_step += desc.q * desc.q * 4  # fp32 score scratch
-    return SsdChunkPlan(desc, fits_vmem=per_step <= machine.vmem_bytes // 2)
+    return SsdChunkPlan(desc, fits_vmem=per_step <= machine.vmem_bytes // 2,
+                        fused=ssd_fused_legal(desc, machine))
 
 
 # ---------------------------------------------------------------------------
@@ -673,8 +777,12 @@ def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
                     q = dataclasses.replace(p, fused=fused)
                     add(q, (q.regions, q.bk, fused))
     elif fam == "flash_attention":
+        # Fused (scheduled single-launch) and dense-grid lowerings of one
+        # tiling are distinct candidates, exactly as for dense GEMM.
+        fused_ok = flash_fused_legal(desc, machine)
         for bq, bk in _flash_legal(desc, machine):
-            add(FlashPlan(desc, bq, bk), (bq, bk))
+            for fused in ((True, False) if fused_ok else (False,)):
+                add(FlashPlan(desc, bq, bk, fused=fused), (bq, bk, fused))
     elif fam == "grouped_gemm":
         # Fused (scheduled single-launch) and pad/scatter lowerings of one
         # tiling are distinct candidates, exactly as for dense GEMM.
@@ -687,7 +795,15 @@ def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
         for bt in _transpose_legal(desc, machine):
             add(TransposePlan(desc, bt), (bt,))
     elif fam == "ssd_chunk":
-        add(plan_ssd(desc, machine), ())  # no free knobs: nothing to search
+        # No free tiling knobs; the scan form still has two lowerings
+        # (carried-state fused vs diag kernel + XLA scan) to choose from.
+        p = plan_ssd(desc, machine)
+        if ssd_fused_legal(desc, machine):
+            for fused in (True, False):
+                q = dataclasses.replace(p, fused=fused)
+                add(q, (fused,))
+        else:
+            add(dataclasses.replace(p, fused=False), ())
     else:
         raise KeyError(f"no candidate enumerator for family {fam!r}")
 

@@ -179,6 +179,7 @@ def set_backend(backend: str, interpret: Optional[bool] = None):
 
 
 def get_backend() -> str:
+    """The effective backend name ("xla" or "pallas") — legacy accessor."""
     return get_config().backend
 
 

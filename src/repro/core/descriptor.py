@@ -273,7 +273,19 @@ class GroupedGemmDescriptor(KernelDescriptor):
 
 @dataclasses.dataclass(frozen=True)
 class SsdChunkDescriptor(KernelDescriptor):
-    """SSD intra-chunk ladder: (G,Q,n) x2, (G,Q,Q), (G,Q,p) -> (G,Q,p)."""
+    """SSD (Mamba-2) chunked-scan family, two forms (DESIGN.md §4/§10).
+
+    ``chunks == 0`` — the intra-chunk ladder only (the pre-schedule
+    surface): ``(G,Q,n) x2, (G,Q,Q), (G,Q,p) -> (G,Q,p)`` where ``G``
+    flattens batch x chunk x head.
+
+    ``chunks >= 1`` — the whole chunked scan: per group (batch x head)
+    the kernel walks ``chunks`` sequentially with the inter-chunk state
+    ``(p, n)`` carried as accumulator state, consuming
+    ``(G, C, Q, n) x2, (G, C, Q, Q), (G, C, Q, p), (G, C, Q) x2`` decay
+    vectors and an initial state ``(G, p, n)``, and producing
+    ``y: (G, C, Q, p)`` plus the final state ``(G, p, n)``.
+    """
 
     family = "ssd_chunk"
 
@@ -282,32 +294,65 @@ class SsdChunkDescriptor(KernelDescriptor):
     n: int
     p: int
     dtype: str = "float32"
+    # number of chunks walked per group with carried state; 0 selects the
+    # intra-chunk (diagonal-block) form with no inter-chunk recurrence
+    chunks: int = 0
 
     def __post_init__(self):
         for v in (self.groups, self.q, self.n, self.p):
             if v <= 0:
                 raise ValueError(f"SSD dims must be positive, got {self}")
+        if self.chunks < 0:
+            raise ValueError(f"SSD chunks must be >= 0, got {self}")
 
     @classmethod
     def from_operands(cls, c_mat, xdt):
+        """Descriptor of the intra-chunk form from ``(G,Q,n)``/``(G,Q,p)``
+        operands."""
         g, q, n = c_mat.shape
         return cls(groups=g, q=q, n=n, p=xdt.shape[-1],
                    dtype=canonical_dtype(xdt.dtype))
 
+    @classmethod
+    def from_scan_operands(cls, c_mat, xdt):
+        """Descriptor of the carried-state scan form from
+        ``(G,C,Q,n)``/``(G,C,Q,p)`` operands."""
+        g, chunks, q, n = c_mat.shape
+        return cls(groups=g, q=q, n=n, p=xdt.shape[-1],
+                   dtype=canonical_dtype(xdt.dtype), chunks=chunks)
+
+    @property
+    def cells(self) -> int:
+        """(group, chunk) cells walked: ``G`` for the intra-chunk form,
+        ``G * chunks`` for the scan form."""
+        return self.groups * max(1, self.chunks)
+
     @property
     def flops(self) -> int:
-        # GEMM 1 (Q,n)x(n,Q) + GEMM 2 (Q,Q)x(Q,p), per group.
-        return 2 * self.groups * self.q * self.q * (self.n + self.p)
+        # Intra-chunk ladder per cell: GEMM 1 (Q,n)x(n,Q) + GEMM 2
+        # (Q,Q)x(Q,p); the scan form adds the inter-chunk terms y_off
+        # (Q,n)x(n,p) and the state outer product (p,Q)x(Q,n).
+        intra = 2 * self.q * self.q * (self.n + self.p)
+        inter = 4 * self.q * self.n * self.p if self.chunks else 0
+        return self.cells * (intra + inter)
 
     @property
     def in_bytes(self) -> int:
         isz = jnp.dtype(self.dtype).itemsize
-        per_g = 2 * self.q * self.n + self.q * self.q + self.q * self.p
-        return self.groups * per_g * isz
+        per_cell = 2 * self.q * self.n + self.q * self.q + self.q * self.p
+        if self.chunks:
+            per_cell += 2 * self.q  # decay_in / decay_out vectors
+        total = self.cells * per_cell * isz
+        if self.chunks:
+            total += self.groups * self.p * self.n * 4  # initial state, fp32
+        return total
 
     @property
     def out_bytes(self) -> int:
-        return self.groups * self.q * self.p * jnp.dtype(self.dtype).itemsize
+        total = self.cells * self.q * self.p * jnp.dtype(self.dtype).itemsize
+        if self.chunks:
+            total += self.groups * self.p * self.n * 4  # final state, fp32
+        return total
 
 
 @dataclasses.dataclass(frozen=True)

@@ -123,6 +123,8 @@ def register_family(name: str, planner, execute) -> Family:
 
 
 def get_family(name: str) -> Family:
+    """Resolve a family by name, lazily importing its registering ops
+    module on first use (the only core → kernels seam, DESIGN.md §1)."""
     fam = _REGISTRY.get(name)
     if fam is None:
         module = _FAMILY_MODULES.get(name)
@@ -138,6 +140,7 @@ def get_family(name: str) -> Family:
 
 
 def families() -> Dict[str, Family]:
+    """Snapshot of the currently registered kernel families."""
     with _registry_lock:
         return dict(_REGISTRY)
 

@@ -157,6 +157,8 @@ class MachineModel:
 
 
 def canonical_dtype(dtype) -> str:
+    """Canonical descriptor dtype name ("bfloat16"/"float32"/...) for any
+    dtype-like — descriptors never store raw ``jnp.dtype`` objects."""
     d = jnp.dtype(dtype)
     if d == jnp.dtype(jnp.bfloat16):
         return "bfloat16"
@@ -217,4 +219,5 @@ DEFAULT_MACHINE = TPU_V5E
 
 
 def get_machine(name: str = "tpu_v5e") -> MachineModel:
+    """Look up a built-in machine model by name."""
     return {"tpu_v5e": TPU_V5E, "cpu_host": CPU_HOST}[name]

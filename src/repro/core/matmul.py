@@ -153,8 +153,10 @@ def _xla_gemm(a, b, c, layout, epilogue, bias, out_dtype, acc_dtype):
 
 
 def describe(a, b, layout="nn", **kw) -> GemmDescriptor:
+    """Descriptor of the GEMM ``matmul(a, b)`` would dispatch."""
     return GemmDescriptor.from_operands(a, b, layout=layout, **kw)
 
 
 def plan(a, b, layout="nn", **kw) -> BlockingPlan:
+    """Blocking plan of the GEMM ``matmul(a, b)`` would dispatch."""
     return plan_gemm(GemmDescriptor.from_operands(a, b, layout=layout), **kw)

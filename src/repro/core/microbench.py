@@ -27,6 +27,8 @@ from .machine import CPU_HOST, MachineModel, TPU_V5E
 
 @dataclasses.dataclass
 class ProbeResult:
+    """One measured characterization probe: name, value, unit."""
+
     name: str
     value: float
     unit: str

@@ -14,6 +14,11 @@ work-list into tile tables walked by a single ``pallas_call``:
     expert row partition (grouped GEMM / MoE): the geometry is static,
     the tables are data, computed from ``group_sizes`` with jnp ops and
     shipped to the kernel as a scalar-prefetch operand;
+  * :class:`FlashTileSchedule` — the trace-time flattening of the flash
+    attention (q-block, k-block) walk (DESIGN.md §10): fully-masked
+    causal k-blocks are dropped at plan time instead of skipped at run
+    time, and the online-softmax carry (m/l/acc) threads through the
+    flat tile walk as accumulator state;
   * scalar-prefetch table packing (``pack_table`` — int32, the SMEM
     currency);
   * in-kernel predication helpers shared by every fused kernel body:
@@ -39,10 +44,12 @@ import numpy as np
 
 
 def ceil_div(a: int, b: int) -> int:
+    """Ceiling division on Python ints: ``ceil(a / b)`` without floats."""
     return -(-a // b)
 
 
 def round_up(a: int, b: int) -> int:
+    """Round ``a`` up to the nearest multiple of ``b``."""
     return ceil_div(a, b) * b
 
 
@@ -260,6 +267,116 @@ class GroupedTileSchedule:
                 assert row0 >= offsets[-1]
         assert (owner_of != -1).all(), "uncovered output rows"
         return True
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention tile schedules — trace-time tables, causal-aware
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlashTileSchedule:
+    """Flattened (q-block, k-block) walk of one flash attention problem
+    (DESIGN.md §10).
+
+    The causal mask is a *cover* problem, not a runtime branch: a k-block
+    strictly above a q-block's diagonal contributes nothing, so it is
+    dropped when the tile table is built — at long causal sequences
+    roughly half the dense (q, k) grid never reaches the kernel.  The
+    surviving tiles are ordered q-block-major with each q-block's
+    k-blocks contiguous and ascending, so the online-softmax carry
+    (running max / denominator / output accumulator) threads through the
+    flat walk as VMEM accumulator state, reset at ``first`` and drained
+    at ``last``.
+
+    Each tile row is ``(q0, q_end, qs, k0, k_end, ks, first, last)``:
+    ``[q0, q_end)`` are the query rows the tile's q-block *owns*, ``qs``
+    / ``ks`` are the clamped origins of the fixed ``(bq, d)`` / ``(bk,
+    d)`` windows (the two-step load path: ragged edge windows slide
+    inward instead of shrinking), ``[k0, k_end)`` are the key columns
+    this tile contributes (the predicate on the clamped-window overlap
+    and the sk tail), and ``first``/``last`` flag the q-block's carry
+    boundaries.
+    """
+
+    sq: int
+    sk: int
+    bq: int
+    bk: int
+    causal: bool
+    tiles: Tuple[Tuple[int, int, int, int, int, int, int, int], ...]
+
+    @property
+    def num_tiles(self) -> int:
+        """Tiles actually walked (per batch x head slice)."""
+        return len(self.tiles)
+
+    @property
+    def dense_tiles(self) -> int:
+        """Tile count of the dense (q, k) grid the causal drop beats."""
+        return ceil_div(self.sq, self.bq) * ceil_div(self.sk, self.bk)
+
+    def validate(self):
+        """Every query row drained exactly once; every kept tile's k
+        range in bounds, non-empty and causal-reachable; carry flags
+        bracket each q-block's contiguous k walk."""
+        drained = np.zeros(self.sq, dtype=np.int64)
+        open_q = None  # ownership of the q-block currently being walked
+        prev_k_end = 0
+        for q0, q_end, qs, k0, k_end, ks, first, last in self.tiles:
+            assert 0 <= qs and qs + self.bq <= self.sq, (qs, self.bq, self.sq)
+            assert 0 <= ks and ks + self.bk <= self.sk, (ks, self.bk, self.sk)
+            assert qs <= q0 and q_end <= qs + self.bq
+            assert ks <= k0 and k_end <= ks + self.bk
+            assert k0 < k_end <= self.sk
+            if self.causal:
+                # at least one owned (q, k) pair is visible
+                assert k0 <= q_end - 1, (k0, q_end)
+            if first:
+                assert open_q is None, "carry re-opened before drain"
+                open_q, prev_k_end = (q0, q_end), 0
+            assert open_q == (q0, q_end), "tile outside the open carry"
+            assert k0 == prev_k_end, "k walk not contiguous ascending"
+            prev_k_end = k_end
+            if last:
+                drained[q0:q_end] += 1
+                open_q = None
+        assert open_q is None, "carry never drained"
+        assert (drained == 1).all(), "query rows not drained exactly once"
+        if self.causal and self.sq == self.sk and self.sq > self.bq + self.bk:
+            assert self.num_tiles < self.dense_tiles
+        return True
+
+
+def flash_tile_schedule(sq: int, sk: int, bq: int, bk: int,
+                        causal: bool) -> FlashTileSchedule:
+    """Build the flattened causal-aware (q, k) tile walk.
+
+    Block edges are clamped to the problem so every fixed-shape window
+    fits the operands; for ``causal=True`` a k-block whose first column
+    ``k0`` exceeds the q-block's last *owned* row is fully masked and
+    never enters the table (the heterogeneous-cover idea applied to the
+    causal triangle — at plan time, not as a run-time branch).
+    """
+    bq = max(1, min(bq, sq))
+    bk = max(1, min(bk, sk))
+    ck = ceil_div(sk, bk)
+    tiles: List[Tuple[int, ...]] = []
+    for qi in range(ceil_div(sq, bq)):
+        q0 = qi * bq
+        q_end = min(q0 + bq, sq)
+        qs = min(q0, sq - bq)
+        # k-blocks with any visible column for the owned rows [q0, q_end)
+        k_hi = min(ck, ceil_div(q_end, bk)) if causal else ck
+        row = []
+        for ki in range(k_hi):
+            k0 = ki * bk
+            row.append([q0, q_end, qs, k0, min(k0 + bk, sk),
+                        min(k0, sk - bk), 0, 0])
+        row[0][6] = 1
+        row[-1][7] = 1
+        tiles.extend(tuple(r) for r in row)
+    return FlashTileSchedule(sq=sq, sk=sk, bq=bq, bk=bk, causal=causal,
+                             tiles=tuple(tiles))
 
 
 # ---------------------------------------------------------------------------

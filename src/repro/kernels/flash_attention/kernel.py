@@ -1,15 +1,23 @@
-"""Flash-attention forward Pallas kernel (causal, online softmax).
+"""Flash-attention forward Pallas kernels (causal, online softmax).
 
 Built from the same microkernel discipline as the GEMM engine: the
 (block_q, block_k) score tile is the ZA-accumulator analogue, the K-grid
 is the contraction loop, and causal masking is trace-time-specialized
-predication (§IV-B).  Grid = (b*h, q_blocks, k_blocks) with running
-max/denominator carried in VMEM scratch across the k dimension —
-activation memory O(block_q x block_k) regardless of sequence length.
+predication (§IV-B).  Two lowerings (DESIGN.md §10):
 
-Off-diagonal fully-masked tiles are skipped with ``pl.when`` (no DMA, no
-MXU work) — the heterogeneous-cover idea applied to the causal triangle:
-only ~half the grid does work.
+  * **fused** (``build_fused_flash_kernel``): ONE ``pallas_call`` walks
+    the causal-aware :class:`~repro.core.schedule.FlashTileSchedule` —
+    fully-masked k-blocks are dropped at *plan* time, so the supergrid is
+    ``(batch_heads, active_tiles)`` rather than the dense
+    ``(b*h, q_blocks, k_blocks)`` cube.  The online-softmax m/l/acc carry
+    threads through the flat tile walk as VMEM accumulator state (reset
+    at each q-block's ``first`` tile, drained at its ``last``); ragged
+    sq/sk tails use the schedule layer's two-step clamped windows and
+    predicated RMW stores instead of padding.
+  * **dense grid** (``build_flash_kernel``, the pre-schedule lowering,
+    kept for VMEM-oversized problems and as the autotuner's
+    alternative): grid = (b*h, q_blocks, k_blocks); masked causal tiles
+    are branched away with ``pl.when`` but still pay their grid steps.
 
 Serving path on TPU; training uses the XLA chunked formulation in
 ``repro.models.attention`` (same math, autodiff-friendly).
@@ -23,9 +31,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.schedule import (FlashTileSchedule, ownership_mask,
+                                 pack_table, predicated_store)
 from repro.kernels.pallas_compat import CompilerParams
 
 NEG_INF = -1e30
+
+
+def _carry_init(m_ref, l_ref, acc_ref):
+    """Reset the online-softmax carry (running max / denominator / output
+    accumulator) — shared by both lowerings so their float ops coincide."""
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _online_softmax_update(s, v, m_ref, l_ref, acc_ref):
+    """One online-softmax step on a masked score tile ``s`` (fp32) and its
+    value tile ``v``.  Both lowerings call exactly this, which is what the
+    fused path's bit-identical parity contract rests on (DESIGN.md §10)."""
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _carry_drain(l_ref, acc_ref, out_dtype):
+    """Normalized output of a drained carry, cast to the output dtype."""
+    return (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(out_dtype)
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -35,9 +73,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ki == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _carry_init(m_ref, l_ref, acc_ref)
 
     # causal: skip tiles strictly above the diagonal (ZA-cover analogue)
     run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
@@ -68,20 +104,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         elif k_ragged:
             s = jnp.where(kpos < sk, s, NEG_INF)
 
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
 
     @pl.when(ki == k_steps - 1)
     def _store():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
-            o_ref.dtype)
+        o_ref[0] = _carry_drain(l_ref, acc_ref, o_ref.dtype)
 
 
 def build_flash_kernel(*, batch_heads: int, sq: int, sk: int, d: int,
@@ -115,3 +142,103 @@ def build_flash_kernel(*, batch_heads: int, sq: int, sk: int, d: int,
         ),
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused scheduled lowering (DESIGN.md §10): one launch, causal tiles
+# dropped at plan time, m/l carry threaded through the flat tile walk
+# ---------------------------------------------------------------------------
+
+def _fused_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, bq, bk, d, causal, scale):
+    """Walk the flattened causal-aware tile table: one grid step = one
+    active (q-block, k-block) pair.  q/k/v/out are staged whole per
+    batch-head slice (clamped ragged windows need element-granular
+    origins); the online-softmax carry lives in VMEM scratch, reset at
+    ``first`` tiles and drained into the output — with a predicated
+    two-step RMW store over the owned query rows — at ``last`` tiles."""
+    t = pl.program_id(1)
+    q0, q_end, qs = tbl_ref[t, 0], tbl_ref[t, 1], tbl_ref[t, 2]
+    k0, k_end, ks = tbl_ref[t, 3], tbl_ref[t, 4], tbl_ref[t, 5]
+
+    @pl.when(tbl_ref[t, 6] == 1)
+    def _init():
+        _carry_init(m_ref, l_ref, acc_ref)
+
+    q = q_ref[0, pl.ds(qs, bq), :]  # (bq, d), two-step clamped window
+    k = k_ref[0, pl.ds(ks, bk), :]  # (bk, d)
+    v = v_ref[0, pl.ds(ks, bk), :]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # Predicate the tile's contribution range [k0, k_end): the clamped
+    # window may revisit columns owned by the previous k tile (sk tail)
+    # — plus the causal triangle.  `where`, never multiply (§IV-B).
+    qpos = qs + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ks + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = (kpos >= k0) & (kpos < k_end)
+    if causal:
+        valid &= kpos <= qpos
+    s = jnp.where(valid, s, NEG_INF)
+
+    _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(tbl_ref[t, 7] == 1)
+    def _store():
+        out = _carry_drain(l_ref, acc_ref, o_ref.dtype)
+        # Predicated two-step store: the clamped window covers rows the
+        # previous q-block already drained — write only owned rows.
+        own = ownership_mask((bq, d), qs, 0, q0, q_end, 0, d)
+        predicated_store(o_ref, (0, pl.ds(qs, bq), pl.ds(0, d)), out, own)
+
+
+def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
+                             batch_heads: int, d: int,
+                             dtype=jnp.bfloat16, interpret: bool = True):
+    """Generate ONE pallas_call executing a whole flash tile schedule.
+
+    Returns ``f(q:(BH,sq,d), k:(BH,sk,d), v:(BH,sk,d)) -> (BH,sq,d)``.
+    The supergrid is ``(batch_heads, schedule.num_tiles)`` — batch x heads
+    folded in as the leading parallel dimension, the causal-pruned tile
+    walk as the sequential carry dimension — and the tile table rides in
+    scalar-prefetch SMEM (DESIGN.md §10).
+    """
+    sq, sk = schedule.sq, schedule.sk
+    bq, bk = schedule.bq, schedule.bk
+    table = pack_table(schedule.tiles)  # (tiles, 8) int32, trace-time
+
+    body = functools.partial(
+        _fused_flash_kernel, bq=bq, bk=bk, d=d, causal=schedule.causal,
+        scale=d ** -0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the tile table
+        grid=(batch_heads, schedule.num_tiles),
+        in_specs=[
+            pl.BlockSpec((1, sq, d), lambda b, t, tbl: (b, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, t, tbl: (b, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, t, tbl: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, d), lambda b, t, tbl: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denom
+            pltpu.VMEM((bq, d), jnp.float32),  # output accumulator
+        ],
+    )
+
+    kernel = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch_heads, sq, d), dtype),
+        compiler_params=CompilerParams(
+            # batch x heads parallel; the tile walk is the sequential
+            # carry dimension (the online-softmax state threads it)
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+
+    def run(q, k, v):
+        return kernel(table, q, k, v)
+
+    return run

@@ -1,8 +1,24 @@
 """Flash-attention family: engine-planned block sizes, engine-cached build.
 
+Executes a :class:`repro.core.blocking.FlashPlan` one of two ways,
+resolved by ``engine.resolve_fused`` exactly as for dense GEMM
+(DESIGN.md §10):
+
+  * **fused** (``plan.fused``, default whenever the staged operands fit
+    VMEM): the plan's causal-aware
+    :class:`~repro.core.schedule.FlashTileSchedule` drops fully-masked
+    k-blocks at plan time and ONE ``pallas_call`` walks the surviving
+    tiles over a ``(batch_heads, tiles)`` supergrid, with the
+    online-softmax carry threaded through the walk as accumulator state;
+  * **dense grid** (the pre-schedule lowering, kept for VMEM-oversized
+    problems and as the autotuner's alternative): a
+    ``(b*h, q_blocks, k_blocks)`` grid that branches masked causal tiles
+    away at run time but still pays their grid steps.
+
 ``block_q``/``block_k`` default to the machine-model-driven plan
-(:func:`repro.core.blocking.plan_flash`) — the hardcoded 512s are gone;
-explicit values pin the plan (benchmark sweeps, tests).
+(:func:`repro.core.blocking.plan_flash`); explicit values pin the plan
+(benchmark sweeps, tests).  Both paths report traced launch counts
+through ``engine.count_launches`` → ``engine.stats()``.
 """
 from __future__ import annotations
 
@@ -13,11 +29,30 @@ import jax
 from repro.core import engine
 from repro.core.blocking import FlashPlan, plan_flash
 from repro.core.descriptor import FlashDescriptor
-from repro.kernels.flash_attention.kernel import build_flash_kernel
+from repro.core.schedule import plan_launches
+from repro.kernels.flash_attention.kernel import (build_flash_kernel,
+                                                  build_fused_flash_kernel)
+
+
+def _fused_executor(desc: FlashDescriptor, plan: FlashPlan, dtype,
+                    interpret: bool):
+    """Build (and cache) the single scheduled kernel for one flash plan.
+
+    ``(block_q, block_k)`` fully determine the tile table, so the cache
+    key stays O(1) and the O(tiles) flattening only runs on a miss."""
+    key = desc.cache_key() + ("fused", plan.block_q, plan.block_k, interpret)
+    return engine.build_cached(key, lambda: build_fused_flash_kernel(
+        schedule=plan.tile_schedule(), batch_heads=desc.batch_heads,
+        d=desc.d, dtype=dtype, interpret=interpret))
 
 
 def execute(desc: FlashDescriptor, plan: FlashPlan, qf, kf, vf, *,
             interpret: bool = False) -> jax.Array:
+    """Engine executor: run one planned flash attention forward."""
+    fused = engine.resolve_fused(plan)
+    engine.count_launches("flash_attention", plan_launches(plan, fused))
+    if fused:
+        return _fused_executor(desc, plan, qf.dtype, interpret)(qf, kf, vf)
     key = desc.cache_key() + ("kernel", plan.block_q, plan.block_k, interpret)
     kernel = engine.build_cached(key, lambda: build_flash_kernel(
         batch_heads=desc.batch_heads, sq=desc.sq, sk=desc.sk, d=desc.d,
@@ -31,8 +66,13 @@ engine.register_family("flash_attention", planner=plan_flash, execute=execute)
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     block_q: Optional[int] = None,
-                    block_k: Optional[int] = None) -> jax.Array:
-    """q/k/v: (b, s, h, d) -> (b, s, h, d)."""
+                    block_k: Optional[int] = None,
+                    fused: Optional[bool] = None) -> jax.Array:
+    """q/k/v: (b, s, h, d) -> (b, s, h, d).
+
+    ``fused=True/False`` pins the scheduled single-launch vs dense-grid
+    lowering for this call (default: follow config + plan, DESIGN.md §10).
+    """
     b, sq, h, d = q.shape
     sk = k.shape[1]
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
@@ -44,6 +84,11 @@ def flash_attention(q, k, v, *, causal: bool = True,
         # Fill unpinned knobs from the (cached) engine plan.
         auto = engine.plan_for(desc)
         plan = FlashPlan(desc, block_q or auto.block_q,
-                         block_k or auto.block_k)
-    out = engine.dispatch(desc, qf, kf, vf, plan=plan)
+                         block_k or auto.block_k, fused=auto.fused)
+    if fused is None:
+        out = engine.dispatch(desc, qf, kf, vf, plan=plan)
+    else:
+        from repro.core.config import use
+        with use(fused="on" if fused else "off"):
+            out = engine.dispatch(desc, qf, kf, vf, plan=plan)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,2 +1,4 @@
-from repro.kernels.ssd_chunk.ops import ssd_chunk_diag  # noqa: F401
-from repro.kernels.ssd_chunk.ref import ref_ssd_chunk_diag  # noqa: F401
+from repro.kernels.ssd_chunk.ops import (  # noqa: F401
+    ssd_chunk_diag, ssd_chunk_scan)
+from repro.kernels.ssd_chunk.ref import (  # noqa: F401
+    ref_ssd_chunk_diag, ref_ssd_chunk_scan)

@@ -1,4 +1,4 @@
-"""SSD intra-chunk Pallas kernel — the paper's small-GEMM ladder in its
+"""SSD chunked-scan Pallas kernels — the paper's small-GEMM ladder in its
 Mamba-2 habitat (arXiv:2405.21060 §6, "state-space duality").
 
 Each grid step processes one (batch x chunk x head) cell entirely in
@@ -6,6 +6,19 @@ VMEM: two back-to-back small GEMMs — (Q,n)x(n,Q) then the decay-masked
 (Q,Q)x(Q,p) — with the (Q,Q) score tile as the ZA-style accumulator that
 never touches HBM.  Q, n, p are all in the 64-256 range: exactly the
 "small odd GEMM" population the paper's engine targets (DESIGN.md §4).
+
+Two lowerings (DESIGN.md §10):
+
+  * **fused scan** (``build_ssd_scan_kernel``): ONE ``pallas_call`` over
+    a ``(groups, chunks)`` supergrid executes the *whole* chunked scan —
+    the intra-chunk ladder above plus the inter-chunk recurrence — with
+    the ``(p, n)`` state carried across the sequential chunk dimension
+    as VMEM accumulator scratch.  The per-chunk state tensors the XLA
+    formulation materializes around its associative scan never exist.
+  * **intra-chunk only** (``build_ssd_chunk_kernel``, the pre-schedule
+    lowering, kept as the fallback half of the non-fused path): the diag
+    ladder over a flat group grid; the inter-chunk recurrence then runs
+    as separate XLA ops in ``repro.kernels.ssd_chunk.ops``.
 """
 from __future__ import annotations
 
@@ -55,3 +68,92 @@ def build_ssd_chunk_kernel(*, groups: int, q: int, n: int, p: int,
         ),
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused carried-state scan (DESIGN.md §10): one launch for the whole scan
+# ---------------------------------------------------------------------------
+
+def _ssd_scan_body(c_ref, b_ref, l_ref, x_ref, di_ref, do_ref, s0_ref,
+                   y_ref, sf_ref, state_ref, *, q, chunks):
+    """One grid step = one (group, chunk) cell; the chunk dimension is
+    sequential, so ``state_ref`` (the (p, n) SSM state, fp32) carries
+    across it as accumulator scratch — the inter-chunk recurrence *is*
+    the tile walk, not a separate dispatch."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    c = c_ref[0, 0]          # (Q, n)
+    b = b_ref[0, 0]          # (Q, n)
+    l = l_ref[0, 0]          # (Q, Q) decay mask
+    x = x_ref[0, 0]          # (Q, p)
+    di = di_ref[0, 0]        # (Q,)  decay into each row from chunk start
+    do = do_ref[0, 0]        # (Q,)  decay from each row to chunk end
+    state = state_ref[...]   # (p, n) state *entering* this chunk
+
+    # inter-chunk contribution: y_off = (C · S_prevᵀ) ⊙ decay_in
+    y_off = jax.lax.dot_general(
+        c.astype(jnp.float32), state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * di[:, None]
+    # intra-chunk ladder (identical math to _ssd_chunk_body)
+    s = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    w = (s * l.astype(jnp.float32)).astype(x.dtype)
+    y_diag = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: S ← S · exp(da_tot) + Bᵀ · (xdt ⊙ decay_out); the
+    # whole-chunk decay is decay_in's last element (da_cs[-1] == da_tot).
+    xw = (x.astype(jnp.float32) * do[:, None]).astype(x.dtype)
+    bx = jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_ref[...] = state * di[q - 1] + bx
+
+    @pl.when(ci == chunks - 1)
+    def _final():
+        sf_ref[0] = state_ref[...]
+
+
+def build_ssd_scan_kernel(*, groups: int, chunks: int, q: int, n: int,
+                          p: int, dtype=jnp.float32, interpret: bool = True):
+    """Generate ONE pallas_call executing a whole chunked SSD scan.
+
+    Returns ``f(C, B, L, xdt, decay_in, decay_out, s0) -> (y, s_final)``
+    over ``C/B: (G, NC, Q, n)``, ``L: (G, NC, Q, Q)``,
+    ``xdt: (G, NC, Q, p)``, ``decay_in/decay_out: (G, NC, Q)``,
+    ``s0: (G, p, n)`` fp32 — yielding ``y: (G, NC, Q, p)`` and the final
+    state ``(G, p, n)`` fp32.  The supergrid is ``(groups, chunks)`` with
+    the chunk dimension sequential (the carried-state walk).
+    """
+    body = functools.partial(_ssd_scan_body, q=q, chunks=chunks)
+    kernel = pl.pallas_call(
+        body,
+        grid=(groups, chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, n), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, q), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, p), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, 1, q), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((groups, chunks, q, p), dtype),
+            jax.ShapeDtypeStruct((groups, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel

@@ -1,4 +1,4 @@
-"""Oracle for the SSD intra-chunk (diagonal-block) kernel."""
+"""Oracles for the SSD intra-chunk kernel and the carried-state scan."""
 from __future__ import annotations
 
 import jax
@@ -15,3 +15,31 @@ def ref_ssd_chunk_diag(c_mat, b_mat, l_mat, xdt) -> jax.Array:
     w = scores * l_mat.astype(jnp.float32)
     return jnp.einsum("gqk,gkp->gqp", w.astype(xdt.dtype), xdt,
                       preferred_element_type=jnp.float32).astype(xdt.dtype)
+
+
+def ref_ssd_chunk_scan(c_mat, b_mat, l_mat, xdt, decay_in, decay_out, s0):
+    """Sequential-recurrence oracle for the carried-state chunked scan.
+
+    Same signature as :func:`repro.kernels.ssd_chunk.ssd_chunk_scan`;
+    walks the chunks one by one in fp64-free plain jnp, which is exactly
+    the recurrence the fused kernel carries in scratch.
+    """
+    g, nc, q, n = c_mat.shape
+    p = xdt.shape[-1]
+    y_diag = ref_ssd_chunk_diag(
+        c_mat.reshape(g * nc, q, n), b_mat.reshape(g * nc, q, n),
+        l_mat.reshape(g * nc, q, q),
+        xdt.reshape(g * nc, q, p)).reshape(g, nc, q, p)
+    state = s0.astype(jnp.float32)
+    ys = []
+    for ci in range(nc):
+        y_off = jnp.einsum("gqn,gpn->gqp", c_mat[:, ci].astype(jnp.float32),
+                           state) * decay_in[:, ci, :, None]
+        ys.append((y_diag[:, ci].astype(jnp.float32) + y_off)
+                  .astype(xdt.dtype))
+        xw = (xdt[:, ci].astype(jnp.float32)
+              * decay_out[:, ci, :, None]).astype(xdt.dtype)
+        bx = jnp.einsum("gqp,gqn->gpn", xw, b_mat[:, ci],
+                        preferred_element_type=jnp.float32)
+        state = state * decay_in[:, ci, -1][:, None, None] + bx
+    return jnp.stack(ys, axis=1), state

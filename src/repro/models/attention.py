@@ -142,9 +142,10 @@ def _attention_seq(q, k, v, q_pos, k_pos, window, softcap):
     b, sq, h, hd = q.shape
     # Engine routing: under the pallas backend the plain-causal full-seq
     # case lowers to the flash-attention kernel family (descriptor-planned
-    # block sizes, engine-cached build).  Windowing, softcap and ragged
-    # q/k stay on the XLA formulation; positions are assumed contiguous
-    # ascending here (true for the train/prefill callers).
+    # block sizes, engine-cached build; fused plans walk the causal-aware
+    # tile table in one launch — DESIGN.md §10).  Windowing, softcap and
+    # shifted q/k stay on the XLA formulation; positions are assumed
+    # contiguous ascending here (true for the train/prefill callers).
     if (get_config().backend == "pallas" and window is None
             and not softcap and sq == k.shape[1]):
         from repro.kernels.flash_attention import flash_attention
@@ -255,11 +256,19 @@ def attention_apply(params, cfg, x, positions, *, cache: Optional[KVCache] = Non
                                  positions, positions, window,
                                  cfg.attn_logit_softcap)
     elif kv_override is not None:
-        # Cross-attention: all encoder positions visible.
-        sk = k.shape[1]
-        mask = jnp.ones((1, 1, s, sk), bool)
-        out = _attend(q, _repeat_kv(k, g), _repeat_kv(v, g), mask,
-                      cfg.attn_logit_softcap)
+        # Cross-attention: all encoder positions visible.  Under the
+        # pallas backend this is the non-causal flash case — the schedule
+        # layer's ragged sq/sk handling (DESIGN.md §10) covers decoder
+        # and encoder lengths that disagree, so no mask tensor is built.
+        if get_config().backend == "pallas" and not cfg.attn_logit_softcap:
+            from repro.kernels.flash_attention import flash_attention
+            out = flash_attention(q, _repeat_kv(k, g), _repeat_kv(v, g),
+                                  causal=False)
+        else:
+            sk = k.shape[1]
+            mask = jnp.ones((1, 1, s, sk), bool)
+            out = _attend(q, _repeat_kv(k, g), _repeat_kv(v, g), mask,
+                          cfg.attn_logit_softcap)
     else:
         out = _attention_seq(q, _repeat_kv(k, g), _repeat_kv(v, g),
                              positions, positions, window,

@@ -100,24 +100,34 @@ def _ssd_chunked(x, dt, a, b_mat, c_mat, chunk, s0=None):
     L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (b, nc, h, Q, Q)
     xdt = xc * dtc[..., None]                        # (b, nc, Q, h, p)
     if get_config().backend == "pallas":
-        # Engine routing: every (batch, chunk, head) cell is one group of
-        # the ssd_chunk kernel family — scores, decay mask and the second
-        # GEMM all stay in VMEM (DESIGN.md §4).
-        from repro.kernels.ssd_chunk import ssd_chunk_diag
-        cg = jnp.repeat(cc, rep, axis=3).transpose(0, 1, 3, 2, 4) \
-            .reshape(-1, chunk, n)
-        bg = jnp.repeat(bc, rep, axis=3).transpose(0, 1, 3, 2, 4) \
-            .reshape(-1, chunk, n)
-        lg = L.reshape(-1, chunk, chunk)
-        xg = xdt.transpose(0, 1, 3, 2, 4).reshape(-1, chunk, p)
-        y_diag = ssd_chunk_diag(cg, bg, lg, xg) \
-            .reshape(bsz, nc, h, chunk, p).transpose(0, 1, 3, 2, 4)
-    else:
-        # scores: C_i · B_j over state dim, broadcast groups->heads
-        cb = jnp.einsum("bnqgd,bnkgd->bngqk", cc, bc)   # (b, nc, g, Q, Q)
-        cb = jnp.repeat(cb, rep, axis=2)                 # (b, nc, h, Q, Q)
-        w = cb * L
-        y_diag = jnp.einsum("bnhqk,bnkhp->bnqhp", w.astype(x.dtype), xdt)
+        # Engine routing (DESIGN.md §10): the whole chunked scan — the
+        # intra-chunk ladder AND the inter-chunk recurrence — is ONE
+        # dispatch of the ssd_chunk family's scan form, with each
+        # (batch, head) pair a group and the (p, n) state carried across
+        # the chunk walk inside the kernel; the associative-scan +
+        # einsum composition below never materializes on this path.
+        from repro.kernels.ssd_chunk import ssd_chunk_scan
+        gdim = bsz * h
+        cg = jnp.repeat(cc, rep, axis=3).transpose(0, 3, 1, 2, 4) \
+            .reshape(gdim, nc, chunk, n)
+        bg = jnp.repeat(bc, rep, axis=3).transpose(0, 3, 1, 2, 4) \
+            .reshape(gdim, nc, chunk, n)
+        lg = L.transpose(0, 2, 1, 3, 4).reshape(gdim, nc, chunk, chunk)
+        xg = xdt.transpose(0, 3, 1, 2, 4).reshape(gdim, nc, chunk, p)
+        di = jnp.exp(da_cs).transpose(0, 3, 1, 2).reshape(gdim, nc, chunk)
+        do = jnp.exp(da_tot[:, :, None] - da_cs) \
+            .transpose(0, 3, 1, 2).reshape(gdim, nc, chunk)
+        s0g = (jnp.zeros((gdim, p, n), jnp.float32) if s0 is None
+               else s0.astype(jnp.float32).reshape(gdim, p, n))
+        yg, s_fin = ssd_chunk_scan(cg, bg, lg, xg, di, do, s0g)
+        y = yg.reshape(bsz, h, nc, chunk, p).transpose(0, 2, 3, 1, 4) \
+            .reshape(bsz, s, h, p)
+        return y[:, :s_orig], s_fin.reshape(bsz, h, p, n)
+    # scores: C_i · B_j over state dim, broadcast groups->heads
+    cb = jnp.einsum("bnqgd,bnkgd->bngqk", cc, bc)   # (b, nc, g, Q, Q)
+    cb = jnp.repeat(cb, rep, axis=2)                 # (b, nc, h, Q, Q)
+    w = cb * L
+    y_diag = jnp.einsum("bnhqk,bnkhp->bnqhp", w.astype(x.dtype), xdt)
 
     # ---- chunk states ----------------------------------------------------
     decay_out = jnp.exp(da_tot[..., None] - da_cs.transpose(0, 1, 3, 2))  # (b,nc,h,Q)

@@ -232,6 +232,84 @@ def test_flash_attention_bf16():
 
 
 # ---------------------------------------------------------------------------
+# Flash attention scheduled single-launch path (DESIGN.md §10): the fused
+# causal-aware tile-table lowering must be bit-identical to the dense-grid
+# pre-schedule lowering (same per-tile online-softmax math; dropped causal
+# tiles were exact no-ops) and match the oracle.
+# ---------------------------------------------------------------------------
+
+# (b, h, sq, sk, d, bq, bk) — sq/sk/d tails vs the block sizes, ragged
+# sq != sk (non-causal), multi-head batches folded into the supergrid.
+FLASH_PARITY_CASES = [
+    (2, 4, 256, 256, 64, 128, 128),   # aligned, multi-head
+    (1, 2, 96, 96, 64, 64, 64),       # sq/sk tails (96 % 64)
+    (2, 3, 100, 100, 48, 64, 32),     # ragged everything incl. d=48
+    (1, 1, 130, 70, 32, 64, 32),      # sq != sk
+    (3, 2, 33, 257, 16, 32, 128),     # long-k, tiny blocks
+]
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,sq,sk,d,bq,bk", FLASH_PARITY_CASES)
+def test_flash_fused_matches_dense_grid_bitwise(b, h, sq, sk, d, bq, bk,
+                                                causal, dtype):
+    q = rand((b, sq, h, d), dtype)
+    k = rand((b, sk, h, d), dtype)
+    v = rand((b, sk, h, d), dtype)
+    kw = dict(causal=causal, block_q=bq, block_k=bk)
+    fused = flash_attention(q, k, v, fused=True, **kw)
+    dense = flash_attention(q, k, v, fused=False, **kw)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(dense))
+    if causal and sq != sk:
+        # the kernels' causal diagonal is start-aligned (kpos <= qpos);
+        # the oracle end-aligns it — only the lowerings are comparable
+        return
+    ref = ref_attention(q, k, v, causal=causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(fused, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_fused_causal_is_single_launch_fewer_tiles():
+    """Acceptance (DESIGN.md §10): a causal dispatch with fused legal is
+    exactly ONE pallas_call and walks fewer tiles than the dense (q, k)
+    grid — the masked k-blocks never enter the table."""
+    from repro.core import FlashDescriptor, FlashPlan, engine, plan_flash
+    desc = FlashDescriptor(batch_heads=4, sq=512, sk=512, d=64, causal=True)
+    assert plan_flash(desc).fused  # the planner takes the one-kernel stance
+    # pin 128x128 blocks: a 4x4 (q, k) grid whose upper triangle the
+    # table drops — 10 tiles instead of 16
+    plan = FlashPlan(desc, 128, 128, fused=True)
+    sched = plan.tile_schedule()
+    assert sched.dense_tiles == 16 and sched.num_tiles == 10
+    engine.reset_stats()
+    q = rand((2, 512, 2, 64))
+    out = flash_attention(q, q, q, causal=True, block_q=128, block_k=128)
+    assert engine.stats()["flash_attention"]["launches"] == 1
+    np.testing.assert_allclose(out, ref_attention(q, q, q, causal=True),
+                               atol=2e-3, rtol=2e-3)
+    # the dense-grid fallback is also one pallas_call — it pays in grid
+    # steps for masked tiles, not dispatches
+    flash_attention(q, q, q, causal=True, block_q=128, block_k=128,
+                    fused=False)
+    assert engine.stats()["flash_attention"]["launches"] == 2
+
+
+def test_flash_plan_defaults_to_fused():
+    """Fused whenever one batch-head slice of q/k/v + out stages in VMEM;
+    VMEM-oversized problems fall back to the dense grid."""
+    from repro.core import FlashDescriptor, flash_fused_legal, plan_flash
+    d = FlashDescriptor(batch_heads=8, sq=2048, sk=2048, d=64)
+    assert flash_fused_legal(d)
+    assert plan_flash(d).fused
+    huge = FlashDescriptor(batch_heads=8, sq=1 << 20, sk=1 << 20, d=128)
+    assert not flash_fused_legal(huge)
+    assert not plan_flash(huge).fused
+
+
+# ---------------------------------------------------------------------------
 # SSD intra-chunk kernel (the small-GEMM ladder in its Mamba-2 habitat)
 # ---------------------------------------------------------------------------
 
@@ -276,3 +354,100 @@ def test_ssd_chunk_matches_model_ladder():
     y_ref = jnp.einsum("bnhqk,bnkhp->bnqhp", w.astype(x.dtype), xdt)
     np.testing.assert_allclose(y_kernel.transpose(0, 1, 3, 2, 4), y_ref,
                                atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD carried-state scan (DESIGN.md §10): the fused single-launch lowering
+# (state carried across the sequential chunk grid dimension) vs the diag
+# kernel + XLA associative-scan fallback vs the sequential oracle.
+# ---------------------------------------------------------------------------
+
+def _ssd_scan_case(g, nc, q, n, p, seed=11):
+    r = np.random.default_rng(seed)
+    arr = lambda s: jnp.asarray(r.standard_normal(s), jnp.float32)
+    c, b = arr((g, nc, q, n)), arr((g, nc, q, n))
+    l = jnp.tril(jnp.exp(arr((g, nc, q, q)) * 0.1))
+    x = arr((g, nc, q, p))
+    # physical decays: da negative, so decay_in = exp(da_cs) in (0, 1]
+    # with decay_in[-1] the whole-chunk decay the state update reads
+    da_cs = -jnp.cumsum(jnp.abs(arr((g, nc, q))) * 0.1, axis=-1)
+    di = jnp.exp(da_cs)
+    do = jnp.exp(da_cs[..., -1:] - da_cs)
+    s0 = arr((g, p, n))
+    return c, b, l, x, di, do, s0
+
+
+@pytest.mark.parametrize("g,nc,q,n,p", [
+    (2, 3, 16, 8, 12),    # odd little everything
+    (1, 1, 8, 4, 4),      # single chunk: recurrence degenerates to s0
+    (4, 7, 32, 16, 8),    # longer carried-state walk
+])
+def test_ssd_scan_fused_matches_fallback(g, nc, q, n, p):
+    from repro.core import engine
+    from repro.kernels.ssd_chunk import ssd_chunk_scan, ref_ssd_chunk_scan
+    ops = _ssd_scan_case(g, nc, q, n, p)
+    engine.reset_stats()
+    from repro.core.config import use
+    y_f, s_f = ssd_chunk_scan(*ops)
+    # fused: the whole scan — intra ladder AND inter-chunk recurrence —
+    # is exactly ONE pallas_call
+    assert engine.stats()["ssd_chunk"]["launches"] == 1
+    with use(fused="off"):
+        y_m, s_m = ssd_chunk_scan(*ops)
+    np.testing.assert_allclose(y_f, y_m, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s_f, s_m, atol=2e-3, rtol=2e-3)
+    y_r, s_r = ref_ssd_chunk_scan(*ops)
+    np.testing.assert_allclose(y_f, y_r, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s_f, s_r, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_scan_carried_state_tail():
+    """Carried-state tails: a scan split in two with the intermediate
+    state handed across the seam equals the unsplit scan — the property
+    decode warm-starts (s0 != 0) rely on."""
+    from repro.kernels.ssd_chunk import ssd_chunk_scan
+    c, b, l, x, di, do, s0 = _ssd_scan_case(2, 4, 16, 8, 12)
+    y_full, s_full = ssd_chunk_scan(c, b, l, x, di, do, s0)
+    cut = 2
+    y1, s_mid = ssd_chunk_scan(c[:, :cut], b[:, :cut], l[:, :cut],
+                               x[:, :cut], di[:, :cut], do[:, :cut], s0)
+    y2, s_end = ssd_chunk_scan(c[:, cut:], b[:, cut:], l[:, cut:],
+                               x[:, cut:], di[:, cut:], do[:, cut:], s_mid)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], axis=1), y_full,
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s_end, s_full, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_scan_under_jit():
+    """The scan form must trace: static shapes, carried scratch, two
+    outputs."""
+    from repro.kernels.ssd_chunk import ssd_chunk_scan, ref_ssd_chunk_scan
+    ops = _ssd_scan_case(2, 3, 8, 4, 4)
+    y_j, s_j = jax.jit(ssd_chunk_scan)(*ops)
+    y_r, s_r = ref_ssd_chunk_scan(*ops)
+    np.testing.assert_allclose(y_j, y_r, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s_j, s_r, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_model_routes_through_scan():
+    """models/ssd.py under the pallas backend: one ssd_chunk launch for
+    the whole chunked forward, bit-for-bit state/output parity with the
+    XLA formulation within tolerance."""
+    from repro.core import engine
+    from repro.core.config import use
+    from repro.models.ssd import _ssd_chunked
+    r = np.random.default_rng(3)
+    b, s, h, p, g, n, chunk = 2, 20, 4, 8, 2, 6, 8  # ragged s: pad to 24
+    x = jnp.asarray(r.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    a = -jnp.asarray(r.uniform(0.5, 1.5, (h,)), jnp.float32)
+    B = jnp.asarray(r.standard_normal((b, s, g, n)), jnp.float32)
+    C = jnp.asarray(r.standard_normal((b, s, g, n)), jnp.float32)
+    s0 = jnp.asarray(r.standard_normal((b, h, p, n)), jnp.float32)
+    y_x, f_x = _ssd_chunked(x, dt, a, B, C, chunk, s0)
+    engine.reset_stats()
+    with use(backend="pallas"):
+        y_p, f_p = _ssd_chunked(x, dt, a, B, C, chunk, s0)
+    assert engine.stats()["ssd_chunk"]["launches"] == 1
+    np.testing.assert_allclose(y_x, y_p, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(f_x, f_p, atol=2e-3, rtol=2e-3)

@@ -1,5 +1,6 @@
-"""The schedule layer (DESIGN.md §9): property-style validation of the
-dense and grouped tile schedules, table packing, and launch accounting."""
+"""The schedule layer (DESIGN.md §9/§10): property-style validation of
+the dense, grouped and flash tile schedules, table packing, and launch
+accounting."""
 import numpy as np
 import pytest
 
@@ -12,7 +13,8 @@ except ImportError:
 from repro.core import (GemmDescriptor, GroupedGemmDescriptor,
                         GroupedTileSchedule, plan_gemm, plan_grouped)
 from repro.core.schedule import (TILE_COMPUTE, TILE_SKIP, TILE_ZERO,
-                                 ceil_div, flatten_regions, pack_table,
+                                 ceil_div, flash_tile_schedule,
+                                 flatten_regions, pack_table,
                                  plan_launches)
 
 
@@ -144,6 +146,70 @@ def test_grouped_compute_tiles_never_cross_experts():
         if state != TILE_COMPUTE:
             continue
         assert offsets[expert] <= row0 and row_end <= offsets[expert + 1]
+
+
+# ---------------------------------------------------------------------------
+# Flash (causal-aware) schedules
+# ---------------------------------------------------------------------------
+
+def _check_flash_schedule(sq, sk, bq, bk, causal):
+    """Every query row drained exactly once; causal k-blocks above the
+    diagonal dropped at plan time; every kept (q, k) pair that the dense
+    grid would compute is covered by exactly one tile's [k0, k_end)."""
+    sched = flash_tile_schedule(sq, sk, bq, bk, causal)
+    sched.validate()
+    assert sched.num_tiles <= sched.dense_tiles
+    # column coverage per q-block: union of [k0, k_end) over its tiles
+    # equals the visible prefix of [0, sk)
+    cover = {}
+    for q0, q_end, qs, k0, k_end, ks, first, last in sched.tiles:
+        cover.setdefault((q0, q_end), []).append((k0, k_end))
+    for (q0, q_end), spans in cover.items():
+        hit = np.zeros(sk, np.int64)
+        for k0, k_end in spans:
+            hit[k0:k_end] += 1
+        if causal:
+            # every column visible to the last owned row is covered once
+            visible = min(sk, q_end)
+            assert (hit[:visible] == 1).all()
+            assert (hit[min(sk, ceil_div(q_end, sched.bk) * sched.bk):]
+                    == 0).all()
+        else:
+            assert (hit == 1).all()
+
+
+_FLASH_CASES = [
+    (256, 256, 128, 128, True), (96, 96, 64, 64, True),
+    (100, 100, 64, 32, True), (130, 70, 64, 32, False),
+    (1, 1, 64, 64, True), (7, 300, 8, 128, True), (512, 512, 128, 64, False),
+]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(sq=st.integers(1, 600), sk=st.integers(1, 600),
+           bq=st.sampled_from([8, 32, 64, 128]),
+           bk=st.sampled_from([8, 32, 64, 128]),
+           causal=st.booleans())
+    def test_flash_schedule_coverage(sq, sk, bq, bk, causal):
+        _check_flash_schedule(sq, sk, bq, bk, causal)
+else:
+    @pytest.mark.parametrize("sq,sk,bq,bk,causal", _FLASH_CASES)
+    def test_flash_schedule_coverage(sq, sk, bq, bk, causal):
+        _check_flash_schedule(sq, sk, bq, bk, causal)
+
+
+def test_flash_schedule_causal_drops_tiles():
+    """The causal triangle drops ~half the dense grid at plan time — the
+    acceptance property the launch/step savings rest on."""
+    sched = flash_tile_schedule(2048, 2048, 128, 128, causal=True)
+    assert sched.num_tiles < sched.dense_tiles
+    # 16x16 grid: lower triangle = 136 of 256
+    assert sched.dense_tiles == 256 and sched.num_tiles == 136
+    dense = flash_tile_schedule(2048, 2048, 128, 128, causal=False)
+    assert dense.num_tiles == dense.dense_tiles == 256
+    table = pack_table(sched.tiles)
+    assert table.dtype == np.int32 and table.shape == (136, 8)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 gate: byte-compile the package, check docs consistency
-# (DESIGN.md section references, README module/path references), and run
-# the test suite.
+# (DESIGN.md section references, README module/path references, core
+# docstrings, §10 family list), execute the quickstart/serving examples
+# (so they can't drift from the engine API), and run the test suite.
 # Usage: bash tools/check.sh   (from anywhere; cd's to the repo root)
 set -euo pipefail
 
@@ -12,4 +13,6 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m compileall -q src
 python tools/check_docs.py
+python examples/quickstart.py > /dev/null
+python examples/serve_batched.py > /dev/null
 python -m pytest -q

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Docs consistency gate (run by tools/check.sh and CI).
 
-Two contracts, one per doc surface:
+Four contracts across the doc surfaces:
 
   * every ``DESIGN.md §n`` cited in a ``src/`` docstring (or in README.md)
     must resolve to a real ``## §n`` section of DESIGN.md — stale section
@@ -9,12 +9,20 @@ Two contracts, one per doc surface:
   * README.md must only name things that exist: local markdown links,
     repo paths in backticks, dotted ``repro.*`` module references, and
     the imports inside fenced python snippets (attribute-verified when
-    the package is importable, file-verified when it is not).
+    the package is importable, file-verified when it is not);
+  * every exported ``src/repro/core`` symbol (public top-level class or
+    function) must carry a docstring — the engine is the system's public
+    API and an undocumented export is a regression;
+  * DESIGN.md §10 (the schedule-layer-everywhere chapter) must name
+    every kernel family the engine registers — the family list drifts
+    otherwise.
 
-Stdlib only; exits non-zero with one line per violation.
+Stdlib only (``ast``-based, no imports of the package needed for the
+docstring gate); exits non-zero with one line per violation.
 """
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
@@ -108,19 +116,76 @@ def check_readme() -> list:
     return errors
 
 
+def check_core_docstrings() -> list:
+    """Every exported (public, top-level) class/function under
+    ``src/repro/core`` carries a docstring.  Modules with ``__all__``
+    restrict the check to it; otherwise every non-underscore top-level
+    class/def counts as exported."""
+    errors = []
+    for path in sorted((ROOT / "src" / "repro" / "core").glob("*.py")):
+        tree = ast.parse(path.read_text())
+        exported = None
+        for node in tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and getattr(node.targets[0], "id", None) == "__all__"):
+                exported = {getattr(e, "value", None)
+                            for e in getattr(node.value, "elts", [])}
+        for node in tree.body:
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                continue
+            if node.name.startswith("_"):
+                continue
+            if exported is not None and node.name not in exported:
+                continue
+            if ast.get_docstring(node) is None:
+                errors.append(
+                    f"{path.relative_to(ROOT)}: exported symbol "
+                    f"{node.name!r} has no docstring")
+    return errors
+
+
+def engine_families() -> list:
+    """Kernel family names the engine registers, parsed from the
+    ``_FAMILY_MODULES`` table in ``core/engine.py`` source."""
+    text = (ROOT / "src" / "repro" / "core" / "engine.py").read_text()
+    m = re.search(r"_FAMILY_MODULES\s*=\s*\{(.*?)\}", text, re.S)
+    if not m:
+        return []
+    return re.findall(r'"(\w+)"\s*:\s*"repro\.kernels', m.group(1))
+
+
+def check_design_families() -> list:
+    """DESIGN.md §10 names every registered kernel family."""
+    design = (ROOT / "DESIGN.md").read_text()
+    m = re.search(r"^## §10\b.*?(?=^## §|\Z)", design, re.S | re.M)
+    if not m:
+        return ["DESIGN.md: no '## §10' section (the schedule-layer "
+                "chapter the family matrix lives in)"]
+    section = m.group(0)
+    families = engine_families()
+    if not families:
+        return ["tools/check_docs.py: could not parse _FAMILY_MODULES "
+                "from core/engine.py"]
+    return [f"DESIGN.md §10: registered family {fam!r} missing from the "
+            f"family list" for fam in families if fam not in section]
+
+
 def main() -> int:
     sections = design_sections()
     if not sections:
         print("check_docs: DESIGN.md has no '## §n' sections", file=sys.stderr)
         return 1
-    errors = check_design_refs(sections) + check_readme()
+    errors = (check_design_refs(sections) + check_readme()
+              + check_core_docstrings() + check_design_families())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         n_refs = sum(len(re.findall(r"DESIGN\.md\s+§\d+", p.read_text()))
                      for p in (ROOT / "src").rglob("*.py"))
         print(f"check_docs: OK ({len(sections)} DESIGN sections, "
-              f"{n_refs} src citations, README verified)")
+              f"{n_refs} src citations, README verified, core docstrings "
+              f"+ §10 family list verified)")
     return 1 if errors else 0
 
 
