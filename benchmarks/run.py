@@ -18,12 +18,17 @@ warm — so every table is per-phase, not cumulative.
   flash   — scheduled flash attention: fused causal-pruned walk vs the
             dense grid, deltas + skipped-tile counts
             (BENCH_flash_fused.json)
+  train   — fused-VJP vs reference-autodiff train-step time on a small
+            LM config, plus per-family gradient deltas and backward
+            launch counts (BENCH_train.json)
 
 ``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep plus
-the grouped and flash suites at reduced size, exercising the fused
-single-launch GEMM, scheduled grouped-GEMM *and* scheduled flash paths
-end-to-end on every PR and still emitting ``BENCH_gemm_fused.json`` +
-``BENCH_grouped_fused.json`` + ``BENCH_flash_fused.json``.
+the grouped, flash and train suites at reduced size, exercising the
+fused single-launch GEMM, the scheduled grouped-GEMM and flash paths
+*and* the scheduled backward walks (DESIGN.md §11) end-to-end on every
+PR, still emitting ``BENCH_gemm_fused.json`` +
+``BENCH_grouped_fused.json`` + ``BENCH_flash_fused.json`` +
+``BENCH_train.json``.
 """
 import argparse
 import sys
@@ -39,7 +44,7 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
                             fig45_alignment, fig7_blocking, fig89_gemm_sweep,
-                            flash_fused, grouped_fused)
+                            flash_fused, grouped_fused, train_step)
     suites = {
         "table1": table1_throughput.run,
         "fig1": fig1_scaling.run,
@@ -49,13 +54,15 @@ def main() -> None:
         "fig89": fig89_gemm_sweep.run,
         "grouped": grouped_fused.run,
         "flash": flash_fused.run,
+        "train": train_step.run,
     }
     if args.smoke:
         if args.only:
             ap.error("--smoke selects its own suite; drop --only")
         suites = {"fig89": lambda: fig89_gemm_sweep.run(smoke=True),
                   "grouped": lambda: grouped_fused.run(smoke=True),
-                  "flash": lambda: flash_fused.run(smoke=True)}
+                  "flash": lambda: flash_fused.run(smoke=True),
+                  "train": lambda: train_step.run(smoke=True)}
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     from repro.core import engine
@@ -79,6 +86,7 @@ def _emit_engine_stats(phase: str, engine) -> None:
               f"kernel_misses={c['kernel_misses']};"
               f"kernel_evictions={c['kernel_evictions']};"
               f"launches={c['launches']};"
+              f"launches_bwd={c['launches_bwd']};"
               f"plan_src_model={c['plan_source_model']};"
               f"plan_src_autotuned={c['plan_source_autotuned']};"
               f"plan_src_tuned_cache={c['plan_source_tuned_cache']};"

@@ -1,0 +1,249 @@
+"""Train-step benchmark: fused-VJP vs reference-path autodiff (§11).
+
+One optimization step (forward + backward + SGD update) of a small
+causal LM whose mixers ARE the engine's scheduled families — flash
+attention for sequence mixing, grouped GEMM for a static-routed expert
+MLP — timed twice: once with the families' custom VJPs on the fused
+path (each backward is ONE scheduled ``pallas_call``) and once under
+``fused="off"`` (reference forward + reference-path autodiff).  Dense
+projections are plain XLA in both variants so the delta isolates the
+scheduled kernels.  Per-family gradient timings ride along, including
+the SSD chunked scan — whose interpret-mode reverse walk loses to the
+compiled ``lax.scan`` reference on CPU and is recorded honestly (the
+fused win there is the launch-count / no-staged-state-materialization
+story, not an interpret-mode wall-clock one).
+
+Asserts the acceptance contract on the way through: every family
+gradient is exactly one traced backward launch, and (at full size) the
+causal flash backward walks strictly fewer tiles than the dense dKdV
+grid.  Writes ``BENCH_train.json``; ``run(smoke=True)`` is the CI
+variant (reduced sizes, same code paths), wired into
+``benchmarks/run.py --smoke``.
+"""
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import FlashBwdDescriptor, FlashDescriptor, engine, \
+    plan_flash_bwd
+from repro.core.config import use
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_gemm import grouped_gemm
+from repro.kernels.ssd_chunk import ssd_chunk_scan
+
+TRAIN_JSON = "BENCH_train.json"
+VOCAB = 512
+LR = 1e-2
+
+# (seq, heads, head_dim, experts, d_ff, layers) — seq stays >= 1024 even
+# in smoke: below that the reference path's rematerialized score /
+# gathered-weight tensors still fit in cache and there is nothing for
+# the schedule to win.  Full size is 2048 so the causal planner actually
+# prunes (at <= 1024 one tile covers the whole walk).
+LM_FULL = (2048, 2, 64, 8, 256, 1)
+LM_SMOKE = (1024, 2, 64, 4, 256, 1)
+
+
+# ---------------------------------------------------------------------------
+# the model: embed -> [flash mixer + grouped-GEMM expert MLP] x L -> unembed
+# ---------------------------------------------------------------------------
+
+def _init_params(rng, seq, h, hd, e, dff, layers):
+    dm = h * hd
+
+    def g(*shape, scale=1.0):
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    blocks = [{"wqkv": g(dm, 3 * dm, scale=dm ** -0.5),
+               "wo": g(dm, dm, scale=dm ** -0.5),
+               "w_up": g(e, dm, dff, scale=dm ** -0.5),
+               "w_dn": g(e, dff, dm, scale=dff ** -0.5)}
+              for _ in range(layers)]
+    return {"embed": g(VOCAB, dm, scale=1.0),
+            "unembed": g(dm, VOCAB, scale=dm ** -0.5),
+            "blocks": blocks}
+
+
+def _forward(params, tokens, *, h, hd, group_sizes):
+    seq = tokens.shape[0]
+    dm = h * hd
+    x = params["embed"][tokens]
+    for blk in params["blocks"]:
+        qkv = (x @ blk["wqkv"]).reshape(1, seq, 3, h, hd)
+        q, k, v = (qkv[:, :, i] for i in range(3))
+        a = flash_attention(q, k, v, causal=True)
+        x = x + a.reshape(seq, dm) @ blk["wo"]
+        # Static routing: tokens arrive pre-sorted by expert, so the MLP
+        # is two scheduled grouped GEMMs over contiguous equal groups.
+        mid = grouped_gemm(x, blk["w_up"], group_sizes, epilogue="gelu")
+        x = x + grouped_gemm(mid, blk["w_dn"], group_sizes)
+    return x @ params["unembed"]
+
+
+def _loss(params, tokens, labels, *, h, hd, group_sizes):
+    logits = _forward(params, tokens, h=h, hd=hd, group_sizes=group_sizes)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def _make_step(h, hd, group_sizes):
+    loss_fn = functools.partial(_loss, h=h, hd=hd, group_sizes=group_sizes)
+
+    def step(params, tokens, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+        new = jax.tree.map(lambda p, g: p - LR * g, params, grads)
+        return loss, new
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# per-family gradient micro-timings (fused VJP vs reference autodiff)
+# ---------------------------------------------------------------------------
+
+def _grad_pair(make_grad, args, family, iters, warmup):
+    """(fused_us, ref_us, launches_bwd): times the same gradient under the
+    default (fused) config and under fused="off", and counts the traced
+    backward launches one fused gradient emits.  ``make_grad`` builds a
+    FRESH function per variant — jax caches traces on function identity,
+    and the config is read at trace time, so reusing one callable would
+    silently time the fused executable twice."""
+    before = engine.stats().get(family, {}).get("launches_bwd", 0)
+    jax.block_until_ready(make_grad()(*args))
+    launches_bwd = engine.stats()[family]["launches_bwd"] - before
+    us_fused = time_fn(jax.jit(make_grad()), *args, iters=iters,
+                       warmup=warmup)
+    with use(fused="off"):
+        us_ref = time_fn(jax.jit(make_grad()), *args, iters=iters,
+                         warmup=warmup)
+    return us_fused, us_ref, launches_bwd
+
+
+def _family_cases(rng, smoke):
+    sq, h, d = (1024, 2, 64) if smoke else (2048, 2, 64)
+    t, k, n, e = (1024, 256, 256, 4) if smoke else (1024, 256, 256, 8)
+    g_, nc, q_, n_, p_ = (2, 3, 32, 16, 32) if smoke else (2, 4, 64, 32, 64)
+
+    def r(*shape, scale=1.0, dtype=jnp.float32):
+        return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+    qkv = [r(1, sq, h, d) for _ in range(3)]
+
+    def flash_grad():
+        return jax.grad(
+            lambda q, k, v: jnp.sum(
+                flash_attention(q, k, v, causal=True) ** 2),
+            argnums=(0, 1, 2))
+
+    gs = jnp.full((e,), t // e, jnp.int32)
+    gx, gw = r(t, k), r(e, k, n, scale=0.3)
+
+    def grouped_grad():
+        return jax.grad(
+            lambda x, w: jnp.sum(grouped_gemm(x, w, gs) ** 2),
+            argnums=(0, 1))
+
+    ssd_ops = (r(g_, nc, q_, n_, scale=0.5), r(g_, nc, q_, n_, scale=0.5),
+               jnp.asarray(np.tril(np.exp(-np.abs(
+                   rng.standard_normal((g_, nc, q_, q_))))), jnp.float32),
+               r(g_, nc, q_, p_, scale=0.5),
+               jnp.asarray(np.exp(-np.abs(
+                   rng.standard_normal((g_, nc, q_)))), jnp.float32),
+               jnp.asarray(np.exp(-np.abs(
+                   rng.standard_normal((g_, nc, q_)))), jnp.float32),
+               r(g_, p_, n_, scale=0.3))
+    def ssd_grad():
+        return jax.grad(
+            lambda *o: jnp.sum(ssd_chunk_scan(*o)[0] ** 2),
+            argnums=tuple(range(7)))
+
+    return [
+        ("grad_flash", "flash_attention", flash_grad, tuple(qkv),
+         {"sq": sq, "h": h, "d": d}),
+        ("grad_grouped", "grouped_gemm", grouped_grad, (gx, gw),
+         {"tokens": t, "k": k, "n": n, "experts": e}),
+        ("grad_ssd", "ssd_chunk", ssd_grad, ssd_ops,
+         {"groups": g_, "chunks": nc, "q": q_, "n": n_, "p": p_}),
+    ]
+
+
+def run(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    iters, warmup = (2, 1) if smoke else (3, 1)
+    entries = {}
+
+    # -- the train step ------------------------------------------------
+    seq, h, hd, e, dff, layers = LM_SMOKE if smoke else LM_FULL
+    group_sizes = jnp.full((e,), seq // e, jnp.int32)
+    params = _init_params(rng, seq, h, hd, e, dff, layers)
+    tokens = jnp.asarray(rng.integers(0, VOCAB, (seq,)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, VOCAB, (seq,)), jnp.int32)
+
+    # acceptance: one eager step -> every family gradient is exactly ONE
+    # traced backward launch per call site
+    engine.reset_stats(entries=False)
+    jax.block_until_ready(_make_step(h, hd, group_sizes)(
+        params, tokens, labels))
+    stats = engine.stats()
+    assert stats["flash_attention"]["launches_bwd"] == layers, stats
+    assert stats["grouped_gemm"]["launches_bwd"] == 2 * layers, stats
+
+    # acceptance: the causal backward walk prunes the dense dKdV grid
+    sched = plan_flash_bwd(FlashBwdDescriptor.from_forward(
+        FlashDescriptor(batch_heads=h, sq=seq, sk=seq, d=hd,
+                        causal=True))).tile_schedule()
+    if not smoke:  # smoke seqs fit one tile; nothing to prune
+        assert sched.num_tiles < sched.dense_tiles, \
+            (sched.num_tiles, sched.dense_tiles)
+
+    # fresh closure per variant — see _grad_pair on trace caching
+    us_fused = time_fn(jax.jit(_make_step(h, hd, group_sizes)),
+                       params, tokens, labels, iters=iters, warmup=warmup)
+    with use(fused="off"):
+        us_ref = time_fn(jax.jit(_make_step(h, hd, group_sizes)),
+                         params, tokens, labels, iters=iters, warmup=warmup)
+    entries["train_step"] = {
+        "seq": seq, "d_model": h * hd, "heads": h, "experts": e,
+        "d_ff": dff, "layers": layers, "vocab": VOCAB,
+        "fused_us": round(us_fused, 1), "ref_us": round(us_ref, 1),
+        "delta_us": round(us_ref - us_fused, 1),
+        "speedup": round(us_ref / us_fused, 3) if us_fused else None,
+        "launches_bwd_flash": stats["flash_attention"]["launches_bwd"],
+        "launches_bwd_grouped": stats["grouped_gemm"]["launches_bwd"],
+        "bwd_tiles_walked": sched.num_tiles,
+        "bwd_tiles_dense": sched.dense_tiles,
+    }
+    emit("train_step/step", us_fused,
+         f"ref_us={us_ref:.0f};speedup={us_ref / us_fused:.2f};"
+         f"launches_bwd=flash:{stats['flash_attention']['launches_bwd']},"
+         f"grouped:{stats['grouped_gemm']['launches_bwd']};"
+         f"bwd_tiles={sched.num_tiles}/{sched.dense_tiles}")
+
+    # -- per-family gradients ------------------------------------------
+    for label, family, grad_fn, args, shape in _family_cases(rng, smoke):
+        us_f, us_r, launches_bwd = _grad_pair(grad_fn, args, family,
+                                              iters, warmup)
+        entries[label] = {
+            **shape, "fused_us": round(us_f, 1), "ref_us": round(us_r, 1),
+            "delta_us": round(us_r - us_f, 1),
+            "speedup": round(us_r / us_f, 3) if us_f else None,
+            "launches_bwd": launches_bwd,
+        }
+        assert launches_bwd == 1, (label, launches_bwd)
+        emit(f"train_step/{label}", us_f,
+             f"ref_us={us_r:.0f};speedup={us_r / us_f:.2f};"
+             f"launches_bwd={launches_bwd}")
+
+    with open(TRAIN_JSON, "w") as f:
+        json.dump({"mode": "smoke" if smoke else "full",
+                   "entries": entries}, f, indent=1, sort_keys=True)
+    emit("train_step/json", 0, f"wrote={TRAIN_JSON};entries={len(entries)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -14,13 +14,16 @@ to every kernel family in the system (DESIGN.md).
   * ``microbench`` — machine-characterization harness (§III analogue)
 """
 from repro.core.descriptor import (  # noqa: F401
-    FlashDescriptor, GemmDescriptor, GroupedGemmDescriptor,
-    KernelDescriptor, SsdChunkDescriptor, TransposeDescriptor)
+    FlashBwdDescriptor, FlashDescriptor, GemmDescriptor,
+    GroupedGemmBwdDescriptor, GroupedGemmDescriptor, KernelDescriptor,
+    SsdChunkBwdDescriptor, SsdChunkDescriptor, TransposeDescriptor)
 from repro.core.blocking import (  # noqa: F401
     BlockingPlan, FlashPlan, GroupedGemmPlan, Region, SsdChunkPlan,
-    TransposePlan, candidate_plans, flash_fused_legal, fused_legal,
-    grouped_fused_legal, palette, plan_flash, plan_gemm, plan_grouped,
-    plan_ssd, plan_transpose, ssd_fused_legal)
+    TransposePlan, candidate_plans, flash_bwd_fused_legal,
+    flash_fused_legal, fused_legal, grouped_bwd_fused_legal,
+    grouped_fused_legal, palette, plan_flash, plan_flash_bwd, plan_gemm,
+    plan_grouped, plan_grouped_bwd, plan_ssd, plan_ssd_bwd, plan_transpose,
+    ssd_bwd_fused_legal, ssd_fused_legal)
 from repro.core.schedule import (  # noqa: F401
     FlashTileSchedule, GroupedTileSchedule, TileSchedule,
     flash_tile_schedule, flatten_regions, plan_launches)

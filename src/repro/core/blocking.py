@@ -33,9 +33,10 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from .descriptor import (FlashDescriptor, GemmDescriptor,
-                         GroupedGemmDescriptor, SsdChunkDescriptor,
-                         TransposeDescriptor)
+from .descriptor import (BIAS_EPILOGUES, FlashBwdDescriptor, FlashDescriptor,
+                         GemmDescriptor, GroupedGemmBwdDescriptor,
+                         GroupedGemmDescriptor, SsdChunkBwdDescriptor,
+                         SsdChunkDescriptor, TransposeDescriptor)
 from .machine import MachineModel, DEFAULT_MACHINE
 # The flattening/predication machinery lives in the schedule layer
 # (DESIGN.md §9); re-exported here for compatibility — plans *produce*
@@ -191,6 +192,18 @@ class BlockingPlan:
 # Cost model
 # ---------------------------------------------------------------------------
 
+# Calibration against BENCH_gemm_fused.json (measured fused/multi deltas).
+# The bench showed the previous model over-charged the multi-launch path
+# (fused vs multi predicted identically for single-region plans, yet fused
+# measured 0.79x at nn_128 and 0.82x at hetero_640): fused execution is
+# not free — every grid step decodes a tile-table row and the accumulator
+# read-modify-writes its output window — while the measured multi-launch
+# dispatch + stitch overhead is ~4x smaller than the model charged.
+FUSED_TILE_DECODE_S = 6e-7   # per fused grid step: table decode + predication
+EXTRA_LAUNCH_FACTOR = 0.25   # measured cost of each launch beyond the first
+STITCH_DISCOUNT = 0.25       # measured fraction of naive stitch-traffic bytes
+
+
 def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
                      machine: MachineModel, fused: bool = False) -> float:
     """Napkin-math time model used to rank candidate plans.
@@ -199,10 +212,12 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
     system: systolic compute on *issued* MACs (masked lanes still occupy
     the MXU — the SME predicate analogue), HBM traffic for inputs + C,
     per-grid-step overhead, and per-``pallas_call`` dispatch overhead.
-    The fused path (DESIGN.md §8) pays dispatch once; the multi-launch
-    path pays it per region plus the inter-region stitching traffic
-    (``dynamic_slice`` operand copies and the ``zeros`` +
-    ``dynamic_update_slice`` assembly of C).
+    The fused path (DESIGN.md §8) pays dispatch once but adds per-step
+    tile-table decode plus the accumulator's output-window re-read
+    (read-modify-write); the multi-launch path pays dispatch per region
+    plus the inter-region stitching traffic (``dynamic_slice`` operand
+    copies and the ``zeros`` + ``dynamic_update_slice`` assembly of C).
+    Both extras are calibrated against BENCH_gemm_fused.json.
     """
     k = desc.k
     in_sz = jnp.dtype(desc.in_dtype).itemsize
@@ -215,16 +230,23 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
     memory_s = traffic / machine.hbm_bw
     steps = sum(r.num_microkernels for r in regions) * ceil_div(k, bk)
     launches = 1 if fused else len(regions)
+    launch_s = machine.launch_overhead_s * (
+        1 + (launches - 1) * EXTRA_LAUNCH_FACTOR)
     stitch_s = 0.0
-    if not fused and len(regions) > 1:
+    fused_s = 0.0
+    if fused:
+        # Table decode per step plus the RMW re-read of each output window.
+        fused_s = (steps * FUSED_TILE_DECODE_S
+                   + out_elems * out_sz / machine.hbm_bw)
+    elif len(regions) > 1:
         # Operand slices are copied in and region outputs copied out again
         # when stitching C — traffic the fused path never generates.
         stitch_bytes = sum((r.rows + r.cols) * k for r in regions) * in_sz
         stitch_bytes += 2 * out_elems * out_sz
-        stitch_s = stitch_bytes / machine.hbm_bw
+        stitch_s = STITCH_DISCOUNT * stitch_bytes / machine.hbm_bw
     # compute and memory overlap in the pipelined kernel: take max + overhead
     return (max(compute_s, memory_s) + steps * machine.step_overhead_s
-            + launches * machine.launch_overhead_s + stitch_s)
+            + launch_s + stitch_s + fused_s)
 
 
 def _pick_bk(desc: GemmDescriptor, bm: int, bn: int,
@@ -739,6 +761,106 @@ def plan_ssd(desc: SsdChunkDescriptor,
 
 
 # ---------------------------------------------------------------------------
+# Backward-family planners (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# The backward walks reuse the forward plan classes (same tiling knobs,
+# same tile schedules) under backward descriptors, so plans are cached /
+# autotuned / provenance-counted exactly like forward plans.  The fused
+# bit gates dispatch: when a backward lowering is not VMEM-legal the
+# custom VJP falls back to reference-path autodiff and never reaches the
+# engine.
+
+def flash_bwd_fused_legal(desc: FlashBwdDescriptor,
+                          machine: MachineModel = DEFAULT_MACHINE) -> bool:
+    """Can this flash backward run as one scheduled ``pallas_call``?
+
+    The backward walk stages one batch-head slice of q/k/v/o/do plus the
+    dq/dk/dv outputs (dk/dv accumulated fp32) and the staged LSE row."""
+    isz = jnp.dtype(desc.dtype).itemsize
+    need = (3 * desc.sq + 2 * desc.sk) * desc.d * isz  # q/o/do + k/v
+    need += desc.sq * desc.d * isz                     # dq
+    need += 2 * desc.sk * desc.d * 4                   # dk/dv, fp32 RMW
+    need += desc.sq * 4                                # lse row
+    return need <= machine.vmem_bytes // 2
+
+
+def plan_flash_bwd(desc: FlashBwdDescriptor,
+                   machine: MachineModel = DEFAULT_MACHINE) -> FlashPlan:
+    """Plan the flash backward walk: same (block_q, block_k) search as the
+    forward — the backward reuses the forward ``FlashTileSchedule`` so the
+    dKdV walk skips the same fully-masked causal k-blocks — gated by
+    :func:`flash_bwd_fused_legal`."""
+    fused = flash_bwd_fused_legal(desc, machine)
+    best = min(_flash_legal(desc, machine),
+               key=lambda s: _predict_flash_seconds(desc, *s, machine=machine,
+                                                    fused=fused))
+    return FlashPlan(desc, *best, fused=fused)
+
+
+def grouped_bwd_fused_legal(desc: GroupedGemmBwdDescriptor,
+                            machine: MachineModel = DEFAULT_MACHINE) -> bool:
+    """Can this grouped-GEMM backward run as one scheduled ``pallas_call``?
+
+    dgrad and wgrad share one launch: x, dy and dx stage whole, the expert
+    panel double-buffers, and dW (plus db for biased epilogues) stages
+    whole in fp32 for read-modify-write accumulation."""
+    isz = jnp.dtype(desc.dtype).itemsize
+    need = desc.t * (2 * desc.k + desc.n) * isz      # x, dx, dy
+    need += 2 * desc.k * desc.n * isz                # double-buffered panel
+    need += desc.num_experts * desc.k * desc.n * 4   # dW, fp32 RMW
+    if desc.epilogue in BIAS_EPILOGUES:
+        need += desc.num_experts * desc.n * 4        # db, fp32
+    need += ACC_BUDGET_ELEMS * 4
+    return need <= machine.vmem_bytes
+
+
+def plan_grouped_bwd(desc: GroupedGemmBwdDescriptor,
+                     machine: MachineModel = DEFAULT_MACHINE
+                     ) -> GroupedGemmPlan:
+    """Plan the grouped backward: same (bm, bk, bn) search as the forward
+    — both gradients walk ``GroupedTileSchedule`` runtime tile tables over
+    ``group_sizes`` — gated by :func:`grouped_bwd_fused_legal`."""
+    fused = grouped_bwd_fused_legal(desc, machine)
+    best = min(_grouped_legal(desc, machine),
+               key=lambda s: _predict_grouped_seconds(desc, *s,
+                                                      machine=machine,
+                                                      fused=fused))
+    return GroupedGemmPlan(desc, *best, fused=fused)
+
+
+def ssd_bwd_fused_legal(desc: SsdChunkBwdDescriptor,
+                        machine: MachineModel = DEFAULT_MACHINE) -> bool:
+    """Can this SSD-scan backward run as one carried-state ``pallas_call``?
+
+    The reverse walk needs a chunk's forward cell, its dY cotangent and
+    saved carried state (double-buffered), the cotangent output cell, and
+    the fp32 dS carry + score scratch resident in VMEM."""
+    if not desc.chunks:
+        return False
+    isz = jnp.dtype(desc.dtype).itemsize
+    q, n, p = desc.q, desc.n, desc.p
+    per_step = (2 * q * n + q * q + 2 * q * p + 2 * q) * isz  # fwd cell
+    per_step += q * p * isz                                   # dY cell
+    per_step += p * n * 4                                     # saved state
+    per_step += (2 * q * n + q * q + q * p) * isz + 2 * q * 4  # cotangents
+    need = 2 * per_step + (q * q + 2 * p * n) * 4 + p * n * 4
+    return need <= machine.vmem_bytes // 2
+
+
+def plan_ssd_bwd(desc: SsdChunkBwdDescriptor,
+                 machine: MachineModel = DEFAULT_MACHINE) -> SsdChunkPlan:
+    """Plan the SSD backward: no free tiling knobs — one reverse-walk
+    launch carrying the (p, n) cotangent as accumulator scratch — gated by
+    :func:`ssd_bwd_fused_legal`."""
+    isz = jnp.dtype(desc.dtype).itemsize
+    per_step = (2 * desc.q * desc.n + desc.q * desc.q
+                + 2 * desc.q * desc.p) * isz
+    per_step += desc.q * desc.q * 4
+    return SsdChunkPlan(desc, fits_vmem=per_step <= machine.vmem_bytes // 2,
+                        fused=ssd_bwd_fused_legal(desc, machine))
+
+
+# ---------------------------------------------------------------------------
 # Candidate enumeration (the autotuner's search space)
 # ---------------------------------------------------------------------------
 
@@ -791,6 +913,22 @@ def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
             for fused in ((True, False) if fused_ok else (False,)):
                 add(GroupedGemmPlan(desc, bm, bk, bn, fused=fused),
                     (bm, bk, bn, fused))
+    elif fam == "flash_attention_bwd":
+        # The backward walk has a single (fused) lowering — the non-fused
+        # alternative is reference-path autodiff outside the engine — so
+        # only fused variants enter the search when legal.
+        fused_ok = flash_bwd_fused_legal(desc, machine)
+        for bq, bk in _flash_legal(desc, machine):
+            add(FlashPlan(desc, bq, bk, fused=fused_ok), (bq, bk))
+    elif fam == "grouped_gemm_bwd":
+        # As for flash backward: fused-or-fallback, no pad/scatter variant.
+        fused_ok = grouped_bwd_fused_legal(desc, machine)
+        for bm, bk, bn in _grouped_legal(desc, machine):
+            add(GroupedGemmPlan(desc, bm, bk, bn, fused=fused_ok),
+                (bm, bk, bn))
+    elif fam == "ssd_chunk_bwd":
+        # No free tiling knobs and a single reverse-walk lowering.
+        add(plan_ssd_bwd(desc, machine), ())
     elif fam == "transpose":
         for bt in _transpose_legal(desc, machine):
             add(TransposePlan(desc, bt), (bt,))

@@ -356,6 +356,123 @@ class SsdChunkDescriptor(KernelDescriptor):
 
 
 @dataclasses.dataclass(frozen=True)
+class FlashBwdDescriptor(FlashDescriptor):
+    """Flash-attention backward: dO, O, LSE, Q, K, V -> dQ, dK, dV.
+
+    Same geometry fields as :class:`FlashDescriptor` (the backward walk
+    reuses the forward ``FlashTileSchedule``), but a distinct ``family`` so
+    the engine caches/autotunes/counts backward plans separately
+    (DESIGN.md §11).
+    """
+
+    family = "flash_attention_bwd"
+
+    @classmethod
+    def from_forward(cls, desc: FlashDescriptor) -> "FlashBwdDescriptor":
+        """Backward descriptor sharing a forward descriptor's geometry."""
+        return cls(**dataclasses.asdict(desc))
+
+    @property
+    def flops(self) -> int:
+        # Five tile GEMMs per visited (q,k) tile (dV, dP, dQ, dK plus the
+        # recomputed P) vs the forward's two — charge 2.5x forward.
+        return (5 * super().flops) // 2
+
+    @property
+    def in_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        # q/k/v/o/do operand panels plus the staged fp32 LSE rows.
+        return (self.batch_heads * (3 * self.sq + 2 * self.sk) * self.d * isz
+                + self.batch_heads * self.sq * 4)
+
+    @property
+    def out_bytes(self) -> int:
+        # dQ (operand dtype) + dK/dV accumulated in fp32.
+        isz = jnp.dtype(self.dtype).itemsize
+        return self.batch_heads * (self.sq * self.d * isz
+                                   + 2 * self.sk * self.d * 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedGemmBwdDescriptor(GroupedGemmDescriptor):
+    """Grouped-GEMM backward: dY, X, W, group_sizes -> dX, dW, (dB).
+
+    Inherits the forward geometry so ``GroupedGemmPlan.tile_schedule()``
+    applies unchanged; the distinct ``family`` keys separate plan/kernel
+    cache rows and launch counters (DESIGN.md §11).
+    """
+
+    family = "grouped_gemm_bwd"
+
+    @classmethod
+    def from_forward(cls, desc: GroupedGemmDescriptor
+                     ) -> "GroupedGemmBwdDescriptor":
+        """Backward descriptor sharing a forward descriptor's geometry."""
+        return cls(**dataclasses.asdict(desc))
+
+    @property
+    def flops(self) -> int:
+        # dX = dY @ W^T and dW = X^T @ dY: two contractions of forward cost.
+        return 2 * super().flops
+
+    @property
+    def in_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        return (self.t * (self.k + self.n)
+                + self.num_experts * self.k * self.n) * isz
+
+    @property
+    def out_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        # dX in operand dtype; dW (and db when biased) staged in fp32.
+        total = self.t * self.k * isz + self.num_experts * self.k * self.n * 4
+        if self.epilogue in BIAS_EPILOGUES:
+            total += self.num_experts * self.n * 4
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class SsdChunkBwdDescriptor(SsdChunkDescriptor):
+    """SSD chunked-scan backward: reverse walk with carried (p,n) cotangent.
+
+    Geometry matches the forward :class:`SsdChunkDescriptor` (scan form,
+    ``chunks >= 1``); the distinct ``family`` gives backward plans their
+    own cache/autotune/launch accounting (DESIGN.md §11).
+    """
+
+    family = "ssd_chunk_bwd"
+
+    @classmethod
+    def from_forward(cls, desc: SsdChunkDescriptor) -> "SsdChunkBwdDescriptor":
+        """Backward descriptor sharing a forward descriptor's geometry."""
+        return cls(**dataclasses.asdict(desc))
+
+    @property
+    def flops(self) -> int:
+        # Each forward GEMM spawns two cotangent GEMMs in reverse.
+        return 2 * super().flops
+
+    @property
+    def in_bytes(self) -> int:
+        # Forward operands + dY/dSf cotangents + the saved per-chunk fp32
+        # carried states the reverse walk consumes.
+        extra = (self.cells * self.q * self.p
+                 * jnp.dtype(self.dtype).itemsize          # dY
+                 + 2 * self.groups * self.p * self.n * 4   # dSf + s0
+                 + self.cells * self.p * self.n * 4)       # saved states
+        return super().in_bytes + extra
+
+    @property
+    def out_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        per_cell = (2 * self.q * self.n + self.q * self.q  # dc, db, dl
+                    + self.q * self.p)                     # dx
+        return (self.cells * per_cell * isz
+                + self.cells * 2 * self.q * 4              # ddi/ddo, fp32
+                + self.groups * self.p * self.n * 4)       # ds0
+
+
+@dataclasses.dataclass(frozen=True)
 class TransposeDescriptor(KernelDescriptor):
     """Blocked (batched) 2-D transpose: (..., rows, cols) -> (..., cols, rows).
 

@@ -67,8 +67,11 @@ _registry_lock = threading.Lock()
 _FAMILY_MODULES = {
     "gemm": "repro.kernels.gemm.ops",
     "flash_attention": "repro.kernels.flash_attention.ops",
+    "flash_attention_bwd": "repro.kernels.flash_attention.ops",
     "grouped_gemm": "repro.kernels.grouped_gemm.ops",
+    "grouped_gemm_bwd": "repro.kernels.grouped_gemm.ops",
     "ssd_chunk": "repro.kernels.ssd_chunk.ops",
+    "ssd_chunk_bwd": "repro.kernels.ssd_chunk.ops",
     "transpose": "repro.kernels.transpose.ops",
 }
 
@@ -278,39 +281,55 @@ def stats() -> Dict[str, Dict[str, int]]:
               plan_source_tuned_cache, plan_source_autotuned,
               plan_source_model, autotune_timings, launches,
               kernel_hits, kernel_misses, kernel_evictions}}
+
+    Backward families (``<family>_bwd`` descriptors, DESIGN.md §11) fold
+    into their forward family's bucket under ``*_bwd``-suffixed keys
+    (``launches_bwd``, ``plan_source_model_bwd``, ...), so one row tells
+    the whole forward + backward story per family.
     """
     out: Dict[str, Dict[str, int]] = {}
 
     def bucket(fam: str) -> Dict[str, int]:
         return out.setdefault(fam, {
-            "plan_hits": 0, "plan_misses": 0, "plan_evictions": 0,
-            "planner_calls": 0,
-            **{f"plan_source_{s}": 0 for s in PLAN_SOURCES},
-            "autotune_timings": 0, "launches": 0,
-            "kernel_hits": 0, "kernel_misses": 0, "kernel_evictions": 0,
+            **{k + sfx: 0 for sfx in ("", "_bwd") for k in (
+                "plan_hits", "plan_misses", "plan_evictions",
+                "planner_calls",
+                *(f"plan_source_{s}" for s in PLAN_SOURCES),
+                "autotune_timings", "launches",
+                "kernel_hits", "kernel_misses", "kernel_evictions")},
         })
 
+    def slot(fam: str):
+        """Bucket + key suffix: backward families report into the forward
+        family's row under ``*_bwd`` keys."""
+        if fam.endswith("_bwd"):
+            return bucket(fam[:-4]), "_bwd"
+        return bucket(fam), ""
+
     for fam, c in PLAN_CACHE.family_stats().items():
-        b = bucket(fam)
-        b["plan_hits"] = c["hits"]
-        b["plan_misses"] = c["misses"]
-        b["plan_evictions"] = c["evictions"]
+        b, sfx = slot(fam)
+        b["plan_hits" + sfx] = c["hits"]
+        b["plan_misses" + sfx] = c["misses"]
+        b["plan_evictions" + sfx] = c["evictions"]
     with _plan_calls_lock:
         for fam, n in _plan_calls.items():
-            bucket(fam)["planner_calls"] = n
+            b, sfx = slot(fam)
+            b["planner_calls" + sfx] = n
         for fam, sources in _plan_sources.items():
-            b = bucket(fam)
+            b, sfx = slot(fam)
             for s, n in sources.items():
-                b[f"plan_source_{s}"] = n
+                b[f"plan_source_{s}{sfx}"] = n
         for fam, n in _autotune_timings.items():
-            bucket(fam)["autotune_timings"] = n
+            b, sfx = slot(fam)
+            b["autotune_timings" + sfx] = n
         for fam, n in _launches.items():
-            bucket(fam)["launches"] = n
+            b, sfx = slot(fam)
+            b["launches" + sfx] = n
     for fam, c in GLOBAL_KERNEL_CACHE.family_stats().items():
-        b = bucket(fam)
-        b["kernel_hits"] = c["hits"]
-        b["kernel_misses"] = c["misses"]
-        b["kernel_evictions"] = c["evictions"]
+        b, sfx = slot(fam)
+        b["kernel_hits" + sfx] = c["hits"]
+        b["kernel_misses" + sfx] = c["misses"]
+        b["kernel_evictions" + sfx] = c["evictions"]
     return out
 
 

@@ -51,18 +51,59 @@ def matmul(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
         a = a.reshape(-1, a.shape[-1])
         if c is not None:
             c = c.reshape(-1, c.shape[-1])
-    # Engine path: descriptor -> cached plan -> cached kernel build.
-    from repro.core import engine
-    desc = GemmDescriptor.from_operands(
-        a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
-        out_dtype=out_dtype)
-    out = engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
+    if plan is None:
+        # Differentiable engine path: the primal is the scheduled Pallas
+        # dispatch, the backward is reference autodiff through the XLA
+        # oracle (dense GEMM has no scheduled backward family — only the
+        # three DESIGN.md §11 families do).
+        out = _engine_vjp(layout, epilogue, jnp.dtype(out_dtype),
+                          a, b, c, bias)
+    else:
+        # Explicit-plan path: descriptor -> caller's plan -> kernel build.
+        from repro.core import engine
+        desc = GemmDescriptor.from_operands(
+            a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
+            out_dtype=out_dtype)
+        out = engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
     if lead is not None:
         out = out.reshape(*lead, out.shape[-1])
     return out
 
 
 import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _engine_vjp(layout, epilogue, out_dtype, a, b, c, bias):
+    """Engine GEMM with a differentiable front: pallas primal, reference
+    backward.  Keeps ``backend="pallas"`` trainable end to end — the qkv /
+    out / unembed projections of a training step pull their gradients
+    through here while the three scheduled families (DESIGN.md §11) run
+    their own single-launch backward walks."""
+    from repro.core import engine
+    desc = GemmDescriptor.from_operands(
+        a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
+        out_dtype=out_dtype)
+    return engine.dispatch(desc, a, b, plan=None, bias=bias, c=c)
+
+
+def _engine_vjp_fwd(layout, epilogue, out_dtype, a, b, c, bias):
+    out = _engine_vjp(layout, epilogue, out_dtype, a, b, c, bias)
+    return out, (a, b, c, bias)
+
+
+def _engine_vjp_bwd(layout, epilogue, out_dtype, res, g):
+    a, b, c, bias = res
+
+    def oracle(a, b, c, bias):
+        return _xla_gemm(a, b, c, layout, epilogue, bias, out_dtype,
+                         jnp.float32)
+
+    _, pullback = jax.vjp(oracle, a, b, c, bias)
+    return pullback(g)
+
+
+_engine_vjp.defvjp(_engine_vjp_fwd, _engine_vjp_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))

@@ -150,7 +150,8 @@ def build_flash_kernel(*, batch_heads: int, sq: int, sk: int, d: int,
 # ---------------------------------------------------------------------------
 
 def _fused_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
-                        m_ref, l_ref, acc_ref, *, bq, bk, d, causal, scale):
+                        m_ref, l_ref, acc_ref, *, bq, bk, d, causal, scale,
+                        lse_ref=None):
     """Walk the flattened causal-aware tile table: one grid step = one
     active (q-block, k-block) pair.  q/k/v/out are staged whole per
     batch-head slice (clamped ragged windows need element-granular
@@ -189,11 +190,20 @@ def _fused_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
         # previous q-block already drained — write only owned rows.
         own = ownership_mask((bq, d), qs, 0, q0, q_end, 0, d)
         predicated_store(o_ref, (0, pl.ds(qs, bq), pl.ds(0, d)), out, own)
+        if lse_ref is not None:
+            # Log-sum-exp rows for the backward walk (DESIGN.md §11):
+            # lse = m + log(l), the softmax statistics the VJP recomputes
+            # P from without re-running the online reduction.
+            lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+            own1 = ownership_mask((bq, 1), qs, 0, q0, q_end, 0, 1)
+            predicated_store(lse_ref, (0, pl.ds(qs, bq), pl.ds(0, 1)),
+                             lse, own1)
 
 
 def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
                              batch_heads: int, d: int,
-                             dtype=jnp.bfloat16, interpret: bool = True):
+                             dtype=jnp.bfloat16, interpret: bool = True,
+                             return_lse: bool = False):
     """Generate ONE pallas_call executing a whole flash tile schedule.
 
     Returns ``f(q:(BH,sq,d), k:(BH,sk,d), v:(BH,sk,d)) -> (BH,sq,d)``.
@@ -201,14 +211,28 @@ def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
     folded in as the leading parallel dimension, the causal-pruned tile
     walk as the sequential carry dimension — and the tile table rides in
     scalar-prefetch SMEM (DESIGN.md §10).
+
+    ``return_lse=True`` additionally drains the log-sum-exp rows
+    (``(BH, sq)`` fp32) — the residual the backward walk recomputes P
+    from (DESIGN.md §11); the forward math is bit-identical either way.
     """
     sq, sk = schedule.sq, schedule.sk
     bq, bk = schedule.bq, schedule.bk
     table = pack_table(schedule.tiles)  # (tiles, 8) int32, trace-time
 
-    body = functools.partial(
-        _fused_flash_kernel, bq=bq, bk=bk, d=d, causal=schedule.causal,
-        scale=d ** -0.5)
+    opts = dict(bq=bq, bk=bk, d=d, causal=schedule.causal, scale=d ** -0.5)
+    if return_lse:
+        def body(tbl, q, k, v, o_ref, lse_ref, m_ref, l_ref, acc_ref):
+            _fused_flash_kernel(tbl, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                                lse_ref=lse_ref, **opts)
+        out_shape = [jax.ShapeDtypeStruct((batch_heads, sq, d), dtype),
+                     jax.ShapeDtypeStruct((batch_heads, sq, 1), jnp.float32)]
+        out_specs = [pl.BlockSpec((1, sq, d), lambda b, t, tbl: (b, 0, 0)),
+                     pl.BlockSpec((1, sq, 1), lambda b, t, tbl: (b, 0, 0))]
+    else:
+        body = functools.partial(_fused_flash_kernel, **opts)
+        out_shape = jax.ShapeDtypeStruct((batch_heads, sq, d), dtype)
+        out_specs = pl.BlockSpec((1, sq, d), lambda b, t, tbl: (b, 0, 0))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # the tile table
@@ -218,7 +242,7 @@ def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
             pl.BlockSpec((1, sk, d), lambda b, t, tbl: (b, 0, 0)),
             pl.BlockSpec((1, sk, d), lambda b, t, tbl: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, sq, d), lambda b, t, tbl: (b, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),  # running max
             pltpu.VMEM((bq, 1), jnp.float32),  # running denom
@@ -229,7 +253,7 @@ def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
     kernel = pl.pallas_call(
         body,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((batch_heads, sq, d), dtype),
+        out_shape=out_shape,
         compiler_params=CompilerParams(
             # batch x heads parallel; the tile walk is the sequential
             # carry dimension (the online-softmax state threads it)
@@ -239,6 +263,144 @@ def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
     )
 
     def run(q, k, v):
+        if return_lse:
+            o, lse = kernel(table, q, k, v)
+            return o, lse[..., 0]
         return kernel(table, q, k, v)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Fused scheduled backward (DESIGN.md §11): ONE launch walks the same
+# causal-pruned tile table as the forward, producing dQ/dK/dV with the
+# D = rowsum(dO . O) precompute fused into each q-block's first tile
+# ---------------------------------------------------------------------------
+
+def _fused_flash_bwd_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref, do_ref,
+                            lse_ref, dq_ref, dk_ref, dv_ref,
+                            d_ref, dqacc_ref, *, bq, bk, d, causal, scale):
+    """One grid step = one active (q-block, k-block) pair of the forward
+    schedule.  P is recomputed from the staged LSE rows (no second online
+    reduction); dK/dV accumulate fp32 across q-blocks by read-modify-write
+    on the whole-staged outputs (contributions outside a tile's owned
+    rows/cols are masked to zero, so clamped-window overlap adds zero);
+    dQ accumulates in scratch across a q-block's k walk and drains with a
+    predicated store at ``last`` tiles."""
+    t = pl.program_id(1)
+    q0, q_end, qs = tbl_ref[t, 0], tbl_ref[t, 1], tbl_ref[t, 2]
+    k0, k_end, ks = tbl_ref[t, 3], tbl_ref[t, 4], tbl_ref[t, 5]
+
+    @pl.when(t == 0)
+    def _zero_outputs():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    o_win = o_ref[0, pl.ds(qs, bq), :].astype(jnp.float32)
+    do_win = do_ref[0, pl.ds(qs, bq), :].astype(jnp.float32)
+
+    @pl.when(tbl_ref[t, 6] == 1)
+    def _init():
+        # D = rowsum(dO . O), computed once per q-block on its first tile
+        # and carried in scratch for the rest of the k walk.
+        d_ref[...] = jnp.sum(do_win * o_win, axis=1, keepdims=True)
+        dqacc_ref[...] = jnp.zeros_like(dqacc_ref)
+
+    q = q_ref[0, pl.ds(qs, bq), :]
+    k = k_ref[0, pl.ds(ks, bk), :]
+    v = v_ref[0, pl.ds(ks, bk), :]
+    lse = lse_ref[0, pl.ds(qs, bq), :]  # (bq, 1) fp32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # Own both axes: unlike the forward (whose per-q-block carry only
+    # needed the k-range predicate), the backward RMW-accumulates dK/dV
+    # across q-blocks, so clamped-window rows another q-block owns must
+    # contribute exactly zero.
+    qpos = qs + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ks + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = (kpos >= k0) & (kpos < k_end) & (qpos >= q0) & (qpos < q_end)
+    if causal:
+        valid &= kpos <= qpos
+    p = jnp.where(valid, jnp.exp(s - lse), 0.0)  # (bq, bk) fp32
+
+    # dV += P^T @ dO — zero rows outside [k0, k_end) make the clamped
+    # k-window overlap-add a no-op.
+    dv_ref[0, pl.ds(ks, bk), :] += jax.lax.dot_general(
+        p, do_win, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    dp = jax.lax.dot_general(do_win, v.astype(jnp.float32),
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - d_ref[...]) * scale  # (bq, bk) fp32
+
+    # dK += dS^T @ Q
+    dk_ref[0, pl.ds(ks, bk), :] += jax.lax.dot_general(
+        ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # dQ accumulates over the q-block's k walk in scratch.
+    dqacc_ref[...] += jax.lax.dot_general(
+        ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(tbl_ref[t, 7] == 1)
+    def _store_dq():
+        own = ownership_mask((bq, d), qs, 0, q0, q_end, 0, d)
+        predicated_store(dq_ref, (0, pl.ds(qs, bq), pl.ds(0, d)),
+                         dqacc_ref[...], own)
+
+
+def build_fused_flash_bwd_kernel(*, schedule: FlashTileSchedule,
+                                 batch_heads: int, d: int,
+                                 dtype=jnp.bfloat16, interpret: bool = True):
+    """Generate ONE pallas_call executing a whole flash backward schedule.
+
+    Returns ``f(q, k, v, o, do, lse) -> (dq, dk, dv)`` over ``(BH, s, d)``
+    operands (``lse``: ``(BH, sq)`` fp32); gradients come back fp32 (the
+    ops wrapper casts).  Supergrid, tile table and predication mirror
+    :func:`build_fused_flash_kernel` — the backward walks the *same*
+    causal-pruned schedule, so it skips the same fully-masked k-blocks
+    (DESIGN.md §11).
+    """
+    sq, sk = schedule.sq, schedule.sk
+    bq, bk = schedule.bq, schedule.bk
+    table = pack_table(schedule.tiles)
+
+    body = functools.partial(
+        _fused_flash_bwd_kernel, bq=bq, bk=bk, d=d, causal=schedule.causal,
+        scale=d ** -0.5)
+
+    spec_q = pl.BlockSpec((1, sq, d), lambda b, t, tbl: (b, 0, 0))
+    spec_k = pl.BlockSpec((1, sk, d), lambda b, t, tbl: (b, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch_heads, schedule.num_tiles),
+        in_specs=[spec_q, spec_k, spec_k, spec_q, spec_q,
+                  pl.BlockSpec((1, sq, 1), lambda b, t, tbl: (b, 0, 0))],
+        out_specs=[spec_q, spec_k, spec_k],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # D = rowsum(dO . O)
+            pltpu.VMEM((bq, d), jnp.float32),  # dQ accumulator
+        ],
+    )
+
+    kernel = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((batch_heads, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((batch_heads, sk, d), jnp.float32),
+            jax.ShapeDtypeStruct((batch_heads, sk, d), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+
+    def run(q, k, v, o, do, lse):
+        return kernel(table, q, k, v, o, do, lse[..., None])
 
     return run

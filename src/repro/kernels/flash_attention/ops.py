@@ -22,15 +22,21 @@ through ``engine.count_launches`` → ``engine.stats()``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.blocking import FlashPlan, plan_flash
-from repro.core.descriptor import FlashDescriptor
+from repro.core.blocking import (FlashPlan, flash_bwd_fused_legal,
+                                 plan_flash, plan_flash_bwd)
+from repro.core.config import get_config
+from repro.core.descriptor import FlashBwdDescriptor, FlashDescriptor
+from repro.core.machine import canonical_dtype
 from repro.core.schedule import plan_launches
-from repro.kernels.flash_attention.kernel import (build_flash_kernel,
+from repro.kernels.flash_attention.kernel import (NEG_INF, build_flash_kernel,
+                                                  build_fused_flash_bwd_kernel,
                                                   build_fused_flash_kernel)
 
 
@@ -64,6 +70,108 @@ def execute(desc: FlashDescriptor, plan: FlashPlan, qf, kf, vf, *,
 engine.register_family("flash_attention", planner=plan_flash, execute=execute)
 
 
+# ---------------------------------------------------------------------------
+# Backward family (DESIGN.md §11): ONE pallas_call walks the forward's
+# causal-pruned tile table, producing dQ/dK/dV
+# ---------------------------------------------------------------------------
+
+def execute_bwd(desc: FlashBwdDescriptor, plan: FlashPlan, qf, kf, vf, o, do,
+                lse, *, interpret: bool = False):
+    """Engine executor: run one planned flash attention backward.
+
+    Single lowering — the scheduled walk; illegal descriptors never reach
+    the engine (the custom VJP falls back to reference autodiff first).
+    """
+    engine.count_launches("flash_attention_bwd", 1)
+    key = desc.cache_key() + ("fused", plan.block_q, plan.block_k, interpret)
+    kernel = engine.build_cached(key, lambda: build_fused_flash_bwd_kernel(
+        schedule=plan.tile_schedule(), batch_heads=desc.batch_heads,
+        d=desc.d, dtype=qf.dtype, interpret=interpret))
+    return kernel(qf, kf, vf, o, do, lse)
+
+
+engine.register_family("flash_attention_bwd", planner=plan_flash_bwd,
+                       execute=execute_bwd)
+
+
+def _flat_desc(causal, qf, kf) -> FlashDescriptor:
+    return FlashDescriptor(batch_heads=qf.shape[0], sq=qf.shape[1],
+                           sk=kf.shape[1], d=qf.shape[2], causal=causal,
+                           dtype=canonical_dtype(qf.dtype))
+
+
+def _ref_flat(causal, qf, kf, vf):
+    """Pure-jnp reference over flattened (BH, s, d) operands — the
+    differentiable oracle the VJP falls back to when the scheduled
+    backward is not legal (and the gradient-parity baseline in tests)."""
+    scale = qf.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", qf.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if causal:
+        # Same convention as the kernels: kpos <= qpos, no diagonal offset.
+        sq, sk = qf.shape[1], kf.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      vf.astype(jnp.float32)).astype(qf.dtype)
+
+
+def _flash_dispatch(causal, qf, kf, vf):
+    """The engine-dispatched forward on flattened operands (primal path)."""
+    return engine.dispatch(_flat_desc(causal, qf, kf), qf, kf, vf)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_vjp(causal, qf, kf, vf):
+    """Differentiable flattened flash attention (custom VJP,
+    DESIGN.md §11): forward = the engine-dispatched kernel; backward =
+    the scheduled single-launch dQ/dK/dV walk when legal, reference-path
+    autodiff otherwise."""
+    return _flash_dispatch(causal, qf, kf, vf)
+
+
+def _flash_vjp_fwd(causal, qf, kf, vf):
+    cfg = get_config()
+    desc = _flat_desc(causal, qf, kf)
+    bdesc = FlashBwdDescriptor.from_forward(desc)
+    fused_ok = (cfg.fused != "off"
+                and flash_bwd_fused_legal(bdesc, cfg.machine))
+    if fused_ok:
+        plan = engine.plan_for(desc)
+        fused_ok = engine.resolve_fused(plan)
+    if not fused_ok:
+        # Reference-path fallback: primal still runs the engine forward;
+        # only the backward re-derives through the jnp reference.
+        return _flash_dispatch(causal, qf, kf, vf), {"ref": (qf, kf, vf)}
+    # Forward with the LSE rows drained for the backward walk — same
+    # schedule, same online-softmax math as the primal fused kernel.
+    interpret = cfg.interpret
+    key = desc.cache_key() + ("fused_lse", plan.block_q, plan.block_k,
+                              interpret)
+    kernel = engine.build_cached(key, lambda: build_fused_flash_kernel(
+        schedule=plan.tile_schedule(), batch_heads=desc.batch_heads,
+        d=desc.d, dtype=qf.dtype, interpret=interpret, return_lse=True))
+    engine.count_launches("flash_attention", 1)
+    o, lse = kernel(qf, kf, vf)
+    return o, {"fused": (qf, kf, vf, o, lse)}
+
+
+def _flash_vjp_bwd(causal, res, g):
+    if "fused" in res:
+        qf, kf, vf, o, lse = res["fused"]
+        bdesc = FlashBwdDescriptor.from_forward(_flat_desc(causal, qf, kf))
+        dq, dk, dv = engine.dispatch(bdesc, qf, kf, vf, o, g, lse)
+    else:
+        qf, kf, vf = res["ref"]
+        _, vjp = jax.vjp(functools.partial(_ref_flat, causal), qf, kf, vf)
+        dq, dk, dv = vjp(g.astype(qf.dtype))
+    return (dq.astype(qf.dtype), dk.astype(kf.dtype), dv.astype(vf.dtype))
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     block_q: Optional[int] = None,
                     block_k: Optional[int] = None,
@@ -85,7 +193,11 @@ def flash_attention(q, k, v, *, causal: bool = True,
         auto = engine.plan_for(desc)
         plan = FlashPlan(desc, block_q or auto.block_q,
                          block_k or auto.block_k, fused=auto.fused)
-    if fused is None:
+    if plan is None and fused is None:
+        # Default path: differentiable — training flows through the
+        # custom VJP onto the scheduled backward walk (DESIGN.md §11).
+        out = _flash_vjp(causal, qf, kf, vf)
+    elif fused is None:
         out = engine.dispatch(desc, qf, kf, vf, plan=plan)
     else:
         from repro.core.config import use

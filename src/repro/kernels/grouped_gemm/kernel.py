@@ -165,6 +165,160 @@ def build_fused_grouped_kernel(*, schedule: GroupedTileSchedule,
 
 
 # ---------------------------------------------------------------------------
+# Fused scheduled backward (DESIGN.md §11): ONE launch over the same
+# runtime tile tables computes dgrad (dX = dY @ W^T) and wgrad
+# (dW = X^T @ dY, plus db for biased epilogues) — neither gradient ever
+# touches the pad/scatter path
+# ---------------------------------------------------------------------------
+
+def _fused_grouped_bwd_kernel(tbl_ref, *refs, kdim, n, bm, bk, bn,
+                              k_steps, n_steps, with_db):
+    """Walk the ragged tile table with the grid reordered to
+    ``(row-block, K-panel, N-block)``: the dX tile ``(bm, bk)``
+    accumulates over the innermost N walk in scratch and drains with a
+    predicated store; dW (and db) are whole-staged fp32 and accumulate by
+    read-modify-write — contributions outside a tile's owned rows /
+    nominal columns are masked to zero, so clamped-window overlap and
+    revisits add nothing.  dW/db zero at the very first grid step,
+    *outside* the tile-state conditional, so zero-size experts (which own
+    no COMPUTE tile) still come back zero rather than garbage."""
+    idx = 0
+    x_ref = refs[idx]; idx += 1
+    dy_ref = refs[idx]; idx += 1
+    w_ref = refs[idx]; idx += 1
+    dx_ref = refs[idx]; idx += 1
+    dw_ref = refs[idx]; idx += 1
+    db_ref = None
+    if with_db:
+        db_ref = refs[idx]; idx += 1
+    dxacc_ref = refs[idx]
+
+    g = pl.program_id(0)
+    ks = pl.program_id(1)
+    j = pl.program_id(2)
+    row0, row_end, rs = tbl_ref[g, 0], tbl_ref[g, 1], tbl_ref[g, 2]
+    e = tbl_ref[g, 3]
+    state = tbl_ref[g, 4]
+
+    @pl.when((g == 0) & (ks == 0) & (j == 0))
+    def _zero_wgrad():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+        if db_ref is not None:
+            db_ref[...] = jnp.zeros_like(db_ref)
+
+    col0 = j * bn
+    cs = jnp.minimum(col0, n - bn)
+    k0, kstart = clamped_k_window(ks, bk, kdim)
+    k_end = jnp.minimum(k0 + bk, kdim)
+
+    @pl.when(state == TILE_COMPUTE)
+    def _compute():
+        @pl.when(j == 0)
+        def _init():
+            dxacc_ref[...] = jnp.zeros_like(dxacc_ref)
+
+        # dY window, masked to owned rows and nominal columns (the
+        # clamped N window may revisit columns of the previous block).
+        dy_blk = dy_ref[pl.ds(rs, bm), pl.ds(cs, bn)].astype(jnp.float32)
+        own_dy = ownership_mask((bm, bn), rs, cs, row0, row_end, col0, n)
+        dy_m = jnp.where(own_dy, dy_blk, 0.0)
+        w_blk = w_ref[0, pl.ds(kstart, bk), pl.ds(cs, bn)].astype(jnp.float32)
+
+        # dgrad: dX[rows, kpanel] += dY @ W^T — masked dY zeroes every
+        # term another tile owns, so no W-side mask is needed.
+        dxacc_ref[...] += jax.lax.dot_general(
+            dy_m, w_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        # wgrad: dW[e, kpanel, nblock] += X^T @ dY.
+        x_blk = x_ref[pl.ds(rs, bm), pl.ds(kstart, bk)].astype(jnp.float32)
+        own_x = ownership_mask((bm, bk), rs, kstart, row0, row_end, k0, kdim)
+        x_m = jnp.where(own_x, x_blk, 0.0)
+        dw_ref[pl.ds(e, 1), pl.ds(kstart, bk), pl.ds(cs, bn)] += (
+            jax.lax.dot_general(x_m, dy_m, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)[None])
+
+        if db_ref is not None:
+            @pl.when(ks == 0)
+            def _db():
+                db_ref[pl.ds(e, 1), pl.ds(cs, bn)] += (
+                    jnp.sum(dy_m, axis=0, keepdims=True))
+
+        @pl.when(j == n_steps - 1)
+        def _store_dx():
+            own = ownership_mask((bm, bk), rs, kstart,
+                                 row0, row_end, k0, k_end)
+            predicated_store(dx_ref, (pl.ds(rs, bm), pl.ds(kstart, bk)),
+                             dxacc_ref[...], own)
+
+    # Rows past sum(group_sizes) belong to no expert -> zero dX rows.
+    @pl.when((state == TILE_ZERO) & (j == n_steps - 1))
+    def _zero_dx():
+        own = ownership_mask((bm, bk), rs, kstart, row0, row_end, k0, k_end)
+        predicated_store(dx_ref, (pl.ds(rs, bm), pl.ds(kstart, bk)),
+                         jnp.zeros((bm, bk), jnp.float32), own)
+
+
+def build_fused_grouped_bwd_kernel(*, schedule: GroupedTileSchedule,
+                                   with_db: bool = False,
+                                   in_dtype=jnp.float32,
+                                   interpret: bool = True):
+    """Generate ONE pallas_call executing a whole grouped backward.
+
+    Returns ``f(table, x, dy, w) -> (dx, dw[, db])`` with
+    ``x: (T, K)``, ``dy: (T, N)`` (the *pre-epilogue* cotangent — the ops
+    wrapper peels activations off first), ``w: (E, K, N)``; gradients
+    come back fp32 (the ops wrapper casts).  The supergrid is
+    ``(max_tiles, k_steps, n_steps)`` — K outside N so the dX tile drains
+    once per K-panel (DESIGN.md §11).
+    """
+    t, kdim, n = schedule.t, schedule.k, schedule.n
+    bm, bk, bn = schedule.bm, schedule.bk, schedule.bn
+    e = schedule.num_experts
+
+    body = functools.partial(
+        _fused_grouped_bwd_kernel, kdim=kdim, n=n, bm=bm, bk=bk, bn=bn,
+        k_steps=schedule.k_steps, n_steps=schedule.n_steps, with_db=with_db)
+
+    in_specs = [
+        pl.BlockSpec((t, kdim), lambda g, ks, j, tbl: (0, 0)),
+        pl.BlockSpec((t, n), lambda g, ks, j, tbl: (0, 0)),
+        pl.BlockSpec((1, kdim, n), lambda g, ks, j, tbl: (tbl[g, 3], 0, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((t, kdim), lambda g, ks, j, tbl: (0, 0)),
+        pl.BlockSpec((e, kdim, n), lambda g, ks, j, tbl: (0, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((t, kdim), jnp.float32),
+        jax.ShapeDtypeStruct((e, kdim, n), jnp.float32),
+    ]
+    if with_db:
+        out_specs.append(pl.BlockSpec((e, n), lambda g, ks, j, tbl: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((e, n), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the tile table
+        grid=(schedule.max_tiles, schedule.k_steps, schedule.n_steps),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+    )
+
+    kernel = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+
+    def run(table, x, dy, w):
+        return tuple(kernel(table, x, dy, w))
+
+    return run
+
+
+# ---------------------------------------------------------------------------
 # Pad/scatter lowering (pre-schedule fallback + autotune alternative)
 # ---------------------------------------------------------------------------
 

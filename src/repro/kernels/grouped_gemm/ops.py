@@ -22,16 +22,22 @@ through ``repro.kernels.epilogue`` on both paths.  Tile sizes
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.blocking import GroupedGemmPlan, plan_grouped
-from repro.core.descriptor import GroupedGemmDescriptor, check_bias
+from repro.core.blocking import (GroupedGemmPlan, grouped_bwd_fused_legal,
+                                 plan_grouped, plan_grouped_bwd)
+from repro.core.config import get_config
+from repro.core.descriptor import (GroupedGemmBwdDescriptor,
+                                   GroupedGemmDescriptor, check_bias)
 from repro.core.schedule import plan_launches
-from repro.kernels.grouped_gemm.kernel import (build_fused_grouped_kernel,
+from repro.kernels.epilogue import apply_epilogue, needs_bias
+from repro.kernels.grouped_gemm.kernel import (build_fused_grouped_bwd_kernel,
+                                               build_fused_grouped_kernel,
                                                build_grouped_gemm_kernel)
 
 
@@ -116,6 +122,134 @@ def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
 engine.register_family("grouped_gemm", planner=plan_grouped, execute=execute)
 
 
+# ---------------------------------------------------------------------------
+# Backward family (DESIGN.md §11): ONE pallas_call walks the same runtime
+# tile tables producing dX and dW (and db) — never the pad/scatter path
+# ---------------------------------------------------------------------------
+
+def execute_bwd(desc: GroupedGemmBwdDescriptor, plan: GroupedGemmPlan, x, dy,
+                w, group_sizes, *, interpret: bool = False):
+    """Engine executor: run one planned grouped-GEMM backward.
+
+    ``dy`` is the *pre-epilogue* cotangent (the custom VJP peels the
+    activation chain off first).  Single lowering — the scheduled walk;
+    illegal descriptors never reach the engine (the custom VJP falls back
+    to reference autodiff first).
+    """
+    engine.count_launches("grouped_gemm_bwd", 1)
+    sched = plan.tile_schedule()
+    table = sched.tables(group_sizes)
+    key = desc.cache_key() + ("fused", sched.bm, sched.bk, sched.bn,
+                              interpret)
+    kernel = engine.build_cached(key, lambda: build_fused_grouped_bwd_kernel(
+        schedule=sched, with_db=needs_bias(desc.epilogue),
+        in_dtype=x.dtype, interpret=interpret))
+    return kernel(table, x, dy, w)
+
+
+engine.register_family("grouped_gemm_bwd", planner=plan_grouped_bwd,
+                       execute=execute_bwd)
+
+
+_ACTIVATIONS = {"gelu": jax.nn.gelu, "silu": jax.nn.silu,
+                "relu": lambda p: jnp.maximum(p, 0)}
+
+
+def _act_name(epilogue: Optional[str]) -> Optional[str]:
+    """The activation half of an epilogue name (None when linear)."""
+    if epilogue is None or epilogue == "bias":
+        return None
+    return epilogue.split("_")[-1]
+
+
+def _ref_grouped(epilogue, x, w, group_sizes, bias):
+    """Pure-jnp epilogue-aware reference — the differentiable oracle the
+    VJP falls back to when the scheduled backward is not legal (and the
+    gradient-parity baseline in tests).  Rows past ``sum(group_sizes)``
+    are zero regardless of epilogue, matching both kernel lowerings."""
+    t = x.shape[0]
+    sizes = group_sizes.astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)])
+    row = jnp.arange(t, dtype=jnp.int32)
+    grp = jnp.clip(jnp.searchsorted(offsets, row, side="right") - 1,
+                   0, group_sizes.shape[0] - 1)
+    out = jnp.einsum("tk,tkn->tn", x.astype(jnp.float32),
+                     w.astype(jnp.float32)[grp])
+    out = apply_epilogue(out, epilogue,
+                         None if bias is None else bias[grp])
+    valid = (row < offsets[-1])[:, None]
+    return jnp.where(valid, out, 0).astype(x.dtype)
+
+
+def _grouped_dispatch(epilogue, x, w, group_sizes, bias):
+    """The engine-dispatched forward (primal path)."""
+    desc = GroupedGemmDescriptor.from_operands(x, w, epilogue=epilogue)
+    return engine.dispatch(desc, x, w, group_sizes, bias=bias)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grouped_vjp(epilogue, x, w, group_sizes, bias):
+    """Differentiable grouped GEMM (custom VJP, DESIGN.md §11): forward =
+    the engine-dispatched kernel; backward = the scheduled single-launch
+    dX/dW walk over the same runtime tile tables when legal,
+    reference-path autodiff otherwise."""
+    return _grouped_dispatch(epilogue, x, w, group_sizes, bias)
+
+
+def _grouped_vjp_fwd(epilogue, x, w, group_sizes, bias):
+    cfg = get_config()
+    desc = GroupedGemmDescriptor.from_operands(x, w, epilogue=epilogue)
+    bdesc = GroupedGemmBwdDescriptor.from_forward(desc)
+    fused_ok = (cfg.fused != "off"
+                and grouped_bwd_fused_legal(bdesc, cfg.machine))
+    out = engine.dispatch(desc, x, w, group_sizes, bias=bias)
+    # Residual dict keys are pytree *structure* — the backward branch is
+    # resolved at trace time, not with traced booleans.
+    res = {"fused" if fused_ok else "ref": (x, w, group_sizes, bias)}
+    return out, res
+
+
+def _grouped_vjp_bwd(epilogue, res, g):
+    if "fused" in res:
+        x, w, group_sizes, bias = res["fused"]
+        dpre = g.astype(jnp.float32)
+        act = _act_name(epilogue)
+        if act is not None:
+            # Peel the activation off the chain: recompute the
+            # pre-activation via the engine forward with the activation
+            # stripped from the epilogue, then pull ``g`` through the
+            # activation alone.  What remains (``dpre``) is the cotangent
+            # of x @ w (+ bias), which the scheduled walk consumes — the
+            # same quantity db sums per expert.
+            biased = needs_bias(epilogue)
+            pre = _grouped_dispatch("bias" if biased else None, x, w,
+                                    group_sizes, bias if biased else None)
+            _, act_vjp = jax.vjp(
+                lambda p: _ACTIVATIONS[act](p.astype(jnp.float32)), pre)
+            dpre = act_vjp(dpre)[0]
+        bdesc = GroupedGemmBwdDescriptor.from_forward(
+            GroupedGemmDescriptor.from_operands(x, w, epilogue=epilogue))
+        grads = engine.dispatch(bdesc, x, dpre, w, group_sizes)
+        dx, dw = grads[0], grads[1]
+        db = grads[2].astype(bias.dtype) if needs_bias(epilogue) else None
+    else:
+        x, w, group_sizes, bias = res["ref"]
+        if bias is None:
+            _, vjp = jax.vjp(
+                lambda x_, w_: _ref_grouped(epilogue, x_, w_, group_sizes,
+                                            None), x, w)
+            (dx, dw), db = vjp(g.astype(x.dtype)), None
+        else:
+            _, vjp = jax.vjp(
+                lambda x_, w_, b_: _ref_grouped(epilogue, x_, w_,
+                                                group_sizes, b_), x, w, bias)
+            dx, dw, db = vjp(g.astype(x.dtype))
+    return (dx.astype(x.dtype), dw.astype(w.dtype), None, db)
+
+
+_grouped_vjp.defvjp(_grouped_vjp_fwd, _grouped_vjp_bwd)
+
+
 def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
                  epilogue: Optional[str] = None,
                  bias: Optional[jax.Array] = None,
@@ -138,6 +272,11 @@ def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
         auto = engine.plan_for(desc)
         plan = GroupedGemmPlan(desc, bm or auto.bm, bk or auto.bk,
                                bn or auto.bn, fused=auto.fused)
+    if plan is None and fused is None:
+        # Default path: differentiable — training flows through the
+        # custom VJP onto the scheduled backward walk (DESIGN.md §11).
+        check_bias(epilogue, bias)
+        return _grouped_vjp(epilogue, x, w, group_sizes, bias)
     if fused is None:
         return engine.dispatch(desc, x, w, group_sizes, plan=plan, bias=bias)
     from repro.core.config import use

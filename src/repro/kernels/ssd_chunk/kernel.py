@@ -75,16 +75,23 @@ def build_ssd_chunk_kernel(*, groups: int, q: int, n: int, p: int,
 # ---------------------------------------------------------------------------
 
 def _ssd_scan_body(c_ref, b_ref, l_ref, x_ref, di_ref, do_ref, s0_ref,
-                   y_ref, sf_ref, state_ref, *, q, chunks):
+                   y_ref, sf_ref, *rest, q, chunks):
     """One grid step = one (group, chunk) cell; the chunk dimension is
     sequential, so ``state_ref`` (the (p, n) SSM state, fp32) carries
     across it as accumulator scratch — the inter-chunk recurrence *is*
-    the tile walk, not a separate dispatch."""
+    the tile walk, not a separate dispatch.  With ``return_states`` the
+    state *entering* each chunk is also drained per cell (the residual
+    the backward walk replays, DESIGN.md §11)."""
+    states_ref = rest[0] if len(rest) == 2 else None
+    state_ref = rest[-1]
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
     def _init():
         state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    if states_ref is not None:
+        states_ref[0, 0] = state_ref[...]
 
     c = c_ref[0, 0]          # (Q, n)
     b = b_ref[0, 0]          # (Q, n)
@@ -119,7 +126,8 @@ def _ssd_scan_body(c_ref, b_ref, l_ref, x_ref, di_ref, do_ref, s0_ref,
 
 
 def build_ssd_scan_kernel(*, groups: int, chunks: int, q: int, n: int,
-                          p: int, dtype=jnp.float32, interpret: bool = True):
+                          p: int, dtype=jnp.float32, interpret: bool = True,
+                          return_states: bool = False):
     """Generate ONE pallas_call executing a whole chunked SSD scan.
 
     Returns ``f(C, B, L, xdt, decay_in, decay_out, s0) -> (y, s_final)``
@@ -128,8 +136,24 @@ def build_ssd_scan_kernel(*, groups: int, chunks: int, q: int, n: int,
     ``s0: (G, p, n)`` fp32 — yielding ``y: (G, NC, Q, p)`` and the final
     state ``(G, p, n)`` fp32.  The supergrid is ``(groups, chunks)`` with
     the chunk dimension sequential (the carried-state walk).
+
+    ``return_states`` appends a third output, the fp32 state *entering*
+    each chunk, ``(G, NC, p, n)`` — the residual the reverse-walk
+    backward replays (DESIGN.md §11).
     """
     body = functools.partial(_ssd_scan_body, q=q, chunks=chunks)
+    out_specs = [
+        pl.BlockSpec((1, 1, q, p), lambda g, c: (g, c, 0, 0)),
+        pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((groups, chunks, q, p), dtype),
+        jax.ShapeDtypeStruct((groups, p, n), jnp.float32),
+    ]
+    if return_states:
+        out_specs.append(pl.BlockSpec((1, 1, p, n), lambda g, c: (g, c, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((groups, chunks, p, n), jnp.float32))
     kernel = pl.pallas_call(
         body,
         grid=(groups, chunks),
@@ -142,12 +166,146 @@ def build_ssd_scan_kernel(*, groups: int, chunks: int, q: int, n: int,
             pl.BlockSpec((1, 1, q), lambda g, c: (g, c, 0)),
             pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
         ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# Fused carried-state backward (DESIGN.md §11): one reverse-walk launch
+# ---------------------------------------------------------------------------
+
+def _ssd_scan_bwd_body(c_ref, b_ref, l_ref, x_ref, di_ref, do_ref,
+                       states_ref, dy_ref, dsf_ref, dc_ref, db_ref, dl_ref,
+                       dx_ref, ddi_ref, ddo_ref, ds0_ref, ds_ref, *,
+                       q, chunks):
+    """One grid step = one (group, chunk) cell walked in *reverse* chunk
+    order (the BlockSpec index maps flip the chunk coordinate); the
+    ``(p, n)`` state cotangent carries backward through the walk as
+    accumulator scratch, exactly mirroring the forward's carried state.
+    Every per-cell quantity the chain rule needs (scores, decay-weighted
+    windows) is recomputed in-register from the staged operands — only
+    the carried state itself rides in from the forward as a residual."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        ds_ref[...] = dsf_ref[0]
+
+    c = c_ref[0, 0].astype(jnp.float32)      # (Q, n)
+    b = b_ref[0, 0].astype(jnp.float32)      # (Q, n)
+    l = l_ref[0, 0].astype(jnp.float32)      # (Q, Q)
+    x = x_ref[0, 0].astype(jnp.float32)      # (Q, p)
+    di = di_ref[0, 0]                        # (Q,) fp32
+    do = do_ref[0, 0]                        # (Q,) fp32
+    s_in = states_ref[0, 0]                  # (p, n) state entering chunk
+    dy = dy_ref[0, 0].astype(jnp.float32)    # (Q, p)
+    ds_out = ds_ref[...]                     # (p, n) cotangent of S_out
+
+    # state update S_out = S_in * di[Q-1] + Bᵀ(x ⊙ do) backward: the
+    # carried cotangent splits into the decay leg and the Bx leg.
+    ds_in = ds_out * di[q - 1]
+    ddi_last = jnp.sum(s_in * ds_out)        # scalar -> ddi[Q-1]
+    dxw = jax.lax.dot_general(b, ds_out, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q, p)
+    xw = x * do[:, None]
+    db = jax.lax.dot_general(xw, ds_out, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, n)
+    dx = dxw * do[:, None]
+    ddo = jnp.sum(dxw * x, axis=1, keepdims=True)                  # (Q, 1)
+
+    # intra-chunk ladder backward: recompute scores/W, then walk
+    # y = (scores ⊙ L) · x backward.
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * l
+    dw = jax.lax.dot_general(dy, x, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    dx += jax.lax.dot_general(w, dy, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dscores = dw * l
+    dl = dw * scores
+    dc = jax.lax.dot_general(dscores, b, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    db += jax.lax.dot_general(dscores, c, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    # inter-chunk offset y_off = (C · S_inᵀ) ⊙ di backward.
+    a = dy * di[:, None]
+    y_off_raw = jax.lax.dot_general(c, s_in, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    dc += jax.lax.dot_general(a, s_in, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ds_in += jax.lax.dot_general(a, c, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ddi = jnp.sum(dy * y_off_raw, axis=1, keepdims=True)           # (Q, 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, 1), 0)
+    ddi += jnp.where(row == q - 1, ddi_last, 0.0)
+
+    dc_ref[0, 0] = dc.astype(dc_ref.dtype)
+    db_ref[0, 0] = db.astype(db_ref.dtype)
+    dl_ref[0, 0] = dl.astype(dl_ref.dtype)
+    dx_ref[0, 0] = dx.astype(dx_ref.dtype)
+    ddi_ref[0, 0] = ddi[:, 0]
+    ddo_ref[0, 0] = ddo[:, 0]
+    ds_ref[...] = ds_in
+
+    @pl.when(ci == chunks - 1)
+    def _final():
+        ds0_ref[0] = ds_ref[...]
+
+
+def build_ssd_scan_bwd_kernel(*, groups: int, chunks: int, q: int, n: int,
+                              p: int, dtype=jnp.float32,
+                              interpret: bool = True):
+    """Generate ONE reverse-walk pallas_call for the chunked-scan backward.
+
+    Returns ``f(C, B, L, xdt, decay_in, decay_out, states, dY, dSf) ->
+    (dC, dB, dL, dxdt, d_decay_in, d_decay_out, ds0)`` — cell shapes as
+    the forward, ``states: (G, NC, p, n)`` fp32 (the per-chunk entering
+    states the forward drained), gradients fp32.  The supergrid is
+    ``(groups, chunks)`` with the chunk coordinate *flipped* in every
+    index map, so the sequential dimension walks chunks last-to-first and
+    the state cotangent carries in scratch (DESIGN.md §11).
+    """
+    last = chunks - 1
+    body = functools.partial(_ssd_scan_bwd_body, q=q, chunks=chunks)
+    kernel = pl.pallas_call(
+        body,
+        grid=(groups, chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, n), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q, q), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q, p), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda g, c: (g, last - c, 0)),
+            pl.BlockSpec((1, 1, q), lambda g, c: (g, last - c, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q, p), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
+        ],
         out_specs=[
-            pl.BlockSpec((1, 1, q, p), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q, q), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q, p), lambda g, c: (g, last - c, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda g, c: (g, last - c, 0)),
+            pl.BlockSpec((1, 1, q), lambda g, c: (g, last - c, 0)),
             pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((groups, chunks, q, p), dtype),
+            jax.ShapeDtypeStruct((groups, chunks, q, n), jnp.float32),
+            jax.ShapeDtypeStruct((groups, chunks, q, n), jnp.float32),
+            jax.ShapeDtypeStruct((groups, chunks, q, q), jnp.float32),
+            jax.ShapeDtypeStruct((groups, chunks, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((groups, chunks, q), jnp.float32),
+            jax.ShapeDtypeStruct((groups, chunks, q), jnp.float32),
             jax.ShapeDtypeStruct((groups, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],

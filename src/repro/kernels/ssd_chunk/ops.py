@@ -21,11 +21,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.blocking import SsdChunkPlan, plan_ssd
-from repro.core.descriptor import SsdChunkDescriptor
+from repro.core.blocking import SsdChunkPlan, plan_ssd, plan_ssd_bwd, \
+    ssd_bwd_fused_legal
+from repro.core.config import get_config
+from repro.core.descriptor import SsdChunkBwdDescriptor, SsdChunkDescriptor
 from repro.core.schedule import plan_launches
 from repro.kernels.ssd_chunk.kernel import (build_ssd_chunk_kernel,
+                                            build_ssd_scan_bwd_kernel,
                                             build_ssd_scan_kernel)
+from repro.kernels.ssd_chunk.ref import ref_ssd_chunk_scan
 
 
 def _execute_diag(desc: SsdChunkDescriptor, groups: int, c_mat, b_mat,
@@ -106,6 +110,97 @@ def execute(desc: SsdChunkDescriptor, plan: SsdChunkPlan, c_mat, b_mat,
 engine.register_family("ssd_chunk", planner=plan_ssd, execute=execute)
 
 
+# ---------------------------------------------------------------------------
+# Backward family (DESIGN.md §11): ONE reverse-walk pallas_call carrying
+# the (p, n) state cotangent as accumulator scratch
+# ---------------------------------------------------------------------------
+
+def execute_bwd(desc: SsdChunkBwdDescriptor, plan: SsdChunkPlan, c, b, l,
+                xdt, decay_in, decay_out, states, dy, dsf, *,
+                interpret: bool = False):
+    """Engine executor: run one planned SSD chunked-scan backward.
+
+    ``states`` is the forward's per-chunk entering-state residual
+    ``(G, NC, p, n)`` fp32; ``dy``/``dsf`` the output cotangents.  Single
+    lowering — the reverse carried-state walk; illegal descriptors never
+    reach the engine (the custom VJP falls back to reference autodiff
+    first).
+    """
+    engine.count_launches("ssd_chunk_bwd", 1)
+    key = desc.cache_key() + ("fused", interpret)
+    kernel = engine.build_cached(key, lambda: build_ssd_scan_bwd_kernel(
+        groups=desc.groups, chunks=desc.chunks, q=desc.q, n=desc.n,
+        p=desc.p, dtype=xdt.dtype, interpret=interpret))
+    return kernel(c, b, l, xdt, decay_in, decay_out, states, dy, dsf)
+
+
+engine.register_family("ssd_chunk_bwd", planner=plan_ssd_bwd,
+                       execute=execute_bwd)
+
+
+def _scan_dispatch(c, b, l, xdt, decay_in, decay_out, s0):
+    """The engine-dispatched scan (primal path)."""
+    desc = SsdChunkDescriptor.from_scan_operands(c, xdt)
+    return engine.dispatch(desc, c, b, l, xdt, decay_in, decay_out, s0)
+
+
+@jax.custom_vjp
+def _ssd_vjp(c, b, l, xdt, decay_in, decay_out, s0):
+    """Differentiable chunked SSD scan (custom VJP, DESIGN.md §11):
+    forward = the engine-dispatched kernel; backward = the single
+    reverse-walk launch carrying the state cotangent when legal,
+    reference-path autodiff otherwise."""
+    return _scan_dispatch(c, b, l, xdt, decay_in, decay_out, s0)
+
+
+def _ssd_vjp_fwd(c, b, l, xdt, decay_in, decay_out, s0):
+    cfg = get_config()
+    desc = SsdChunkDescriptor.from_scan_operands(c, xdt)
+    bdesc = SsdChunkBwdDescriptor.from_forward(desc)
+    fused_ok = (cfg.fused != "off"
+                and ssd_bwd_fused_legal(bdesc, cfg.machine))
+    if fused_ok:
+        # The backward replays the per-chunk entering states, so the
+        # forward must run fused too (the states drain from its walk).
+        fused_ok = engine.resolve_fused(engine.plan_for(desc))
+    if not fused_ok:
+        out = _scan_dispatch(c, b, l, xdt, decay_in, decay_out, s0)
+        return out, {"ref": (c, b, l, xdt, decay_in, decay_out, s0)}
+    # Forward with the entering states drained for the reverse walk —
+    # same schedule, same carried-state math as the primal fused kernel.
+    interpret = cfg.interpret
+    key = desc.cache_key() + ("fused_states", interpret)
+    kernel = engine.build_cached(key, lambda: build_ssd_scan_kernel(
+        groups=desc.groups, chunks=desc.chunks, q=desc.q, n=desc.n,
+        p=desc.p, dtype=xdt.dtype, interpret=interpret, return_states=True))
+    engine.count_launches("ssd_chunk", 1)
+    y, sf, states = kernel(c, b, l, xdt, decay_in, decay_out, s0)
+    return (y, sf), {"fused": (c, b, l, xdt, decay_in, decay_out, states)}
+
+
+def _ssd_vjp_bwd(res, g):
+    dy, dsf = g
+    if "fused" in res:
+        c, b, l, xdt, decay_in, decay_out, states = res["fused"]
+        bdesc = SsdChunkBwdDescriptor.from_forward(
+            SsdChunkDescriptor.from_scan_operands(c, xdt))
+        dc, db, dl, dx, ddi, ddo, ds0 = engine.dispatch(
+            bdesc, c, b, l, xdt, decay_in, decay_out, states,
+            dy.astype(jnp.float32), dsf.astype(jnp.float32))
+    else:
+        c, b, l, xdt, decay_in, decay_out, s0 = res["ref"]
+        _, vjp = jax.vjp(ref_ssd_chunk_scan, c, b, l, xdt,
+                         decay_in, decay_out, s0)
+        dc, db, dl, dx, ddi, ddo, ds0 = vjp(
+            (dy.astype(xdt.dtype), dsf.astype(jnp.float32)))
+    return (dc.astype(c.dtype), db.astype(b.dtype), dl.astype(l.dtype),
+            dx.astype(xdt.dtype), ddi.astype(decay_in.dtype),
+            ddo.astype(decay_out.dtype), ds0.astype(jnp.float32))
+
+
+_ssd_vjp.defvjp(_ssd_vjp_fwd, _ssd_vjp_bwd)
+
+
 def ssd_chunk_diag(c_mat, b_mat, l_mat, xdt):
     """Batched intra-chunk SSD: (G,Q,n)x2, (G,Q,Q), (G,Q,p) -> (G,Q,p)."""
     desc = SsdChunkDescriptor.from_operands(c_mat, xdt)
@@ -120,8 +215,7 @@ def ssd_chunk_scan(c_mat, b_mat, l_mat, xdt, decay_in, decay_out, s0):
     (``exp(da_cs)`` and ``exp(da_tot - da_cs)``); ``s0``: (G, p, n) fp32
     initial state.  Returns ``(y: (G, NC, Q, p), s_final: (G, p, n))``
     with the inter-chunk recurrence carried inside the kernel when the
-    plan is fused.
+    plan is fused.  Differentiable: training flows through the custom
+    VJP onto the reverse carried-state walk (DESIGN.md §11).
     """
-    desc = SsdChunkDescriptor.from_scan_operands(c_mat, xdt)
-    return engine.dispatch(desc, c_mat, b_mat, l_mat, xdt,
-                           decay_in, decay_out, s0)
+    return _ssd_vjp(c_mat, b_mat, l_mat, xdt, decay_in, decay_out, s0)

@@ -32,7 +32,25 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--backend", choices=("xla", "pallas"), default=None,
+                    help="engine backend: pallas routes the kernel families"
+                         " (and their scheduled backward walks) through the"
+                         " engine; default keeps the process config")
+    ap.add_argument("--fused", choices=("auto", "on", "off"), default=None,
+                    help="fused-lowering policy for engine dispatches,"
+                         " forward and backward (DESIGN.md §10-11)")
     args = ap.parse_args()
+
+    if args.backend is not None or args.fused is not None:
+        from repro.core.config import configure
+        overrides = {}
+        if args.backend is not None:
+            overrides["backend"] = args.backend
+            if args.backend == "pallas":
+                overrides["interpret"] = True  # container has no TPU
+        if args.fused is not None:
+            overrides["fused"] = args.fused
+        configure(**overrides)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -74,6 +92,14 @@ def main():
     print(f"nll: {first:.3f} -> {last:.3f} (structure floor ~{floor:.3f}, "
           f"uniform {jnp.log(cfg.vocab_size):.3f}); "
           f"stragglers={out['stragglers']} restarts={out['restarts']}")
+    # Engine provenance: which families dispatched, and whether gradients
+    # flowed through the scheduled backward walks (DESIGN.md §11).
+    for fam, s in sorted(out.get("engine_stats", {}).items()):
+        if s["launches"] or s["launches_bwd"]:
+            print(f"engine[{fam}]: launches={s['launches']} "
+                  f"launches_bwd={s['launches_bwd']} "
+                  f"plan_hits={s['plan_hits']} "
+                  f"plan_hits_bwd={s['plan_hits_bwd']}")
 
 
 if __name__ == "__main__":

@@ -143,9 +143,13 @@ def _attention_seq(q, k, v, q_pos, k_pos, window, softcap):
     # Engine routing: under the pallas backend the plain-causal full-seq
     # case lowers to the flash-attention kernel family (descriptor-planned
     # block sizes, engine-cached build; fused plans walk the causal-aware
-    # tile table in one launch — DESIGN.md §10).  Windowing, softcap and
-    # shifted q/k stay on the XLA formulation; positions are assumed
-    # contiguous ascending here (true for the train/prefill callers).
+    # tile table in one launch — DESIGN.md §10).  The routed call is
+    # differentiable: training pulls gradients through the family's
+    # custom VJP, whose backward is ONE scheduled dQ/dK/dV walk over the
+    # same causal-pruned tile table (DESIGN.md §11) — not XLA autodiff of
+    # the kernel.  Windowing, softcap and shifted q/k stay on the XLA
+    # formulation; positions are assumed contiguous ascending here (true
+    # for the train/prefill callers).
     if (get_config().backend == "pallas" and window is None
             and not softcap and sq == k.shape[1]):
         from repro.kernels.flash_attention import flash_attention

@@ -33,6 +33,9 @@ def _expert_gemm_grouped(x4, w, epilogue=None):
     transpose, exactly the layout the kernel's scalar-prefetch dispatch
     expects.  ``epilogue`` fuses the activation into the kernel's store
     (DESIGN.md §9) instead of a follow-up elementwise pass.
+    Differentiable: training pulls gradients through the family's custom
+    VJP, whose backward is ONE scheduled dX/dW walk over the same
+    runtime tile tables — never the pad/scatter path (DESIGN.md §11).
     """
     from repro.kernels.grouped_gemm import grouped_gemm
     n, e, cap, k = x4.shape

@@ -106,6 +106,9 @@ def _ssd_chunked(x, dt, a, b_mat, c_mat, chunk, s0=None):
         # (batch, head) pair a group and the (p, n) state carried across
         # the chunk walk inside the kernel; the associative-scan +
         # einsum composition below never materializes on this path.
+        # Differentiable: training pulls gradients through the family's
+        # custom VJP, whose backward is ONE reverse-walk launch carrying
+        # the state cotangent in scratch (DESIGN.md §11).
         from repro.kernels.ssd_chunk import ssd_chunk_scan
         gdim = bsz * h
         cg = jnp.repeat(cc, rep, axis=3).transpose(0, 3, 1, 2, 4) \

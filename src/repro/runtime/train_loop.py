@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.core import engine
 
 
 @dataclasses.dataclass
@@ -88,7 +89,13 @@ def train(step_fn: Callable, params, opt_state, batch_fn: Callable[[int], Any],
     mgr.wait()
     return {"params": params, "opt_state": opt_state,
             "metrics": metrics_hist, "stragglers": stats.stragglers,
-            "final_step": step}
+            "final_step": step,
+            # Engine provenance for the run: per-family plan/launch
+            # counters including the backward (``*_bwd``) slots, so a
+            # training job reports whether its gradients flowed through
+            # the scheduled single-launch backward walks (DESIGN.md §11)
+            # or the reference fallback.
+            "engine_stats": engine.stats()}
 
 
 def run_with_restarts(make_state: Callable[[], tuple], step_fn, batch_fn,

@@ -109,15 +109,23 @@ def test_gemm_candidates_ranked_and_agree_with_planner():
     assert 1 <= len(cands) <= 6
     times = [p.predicted_seconds(TPU_V5E) for p in cands]
     assert times == sorted(times)
-    assert cands[0].predicted_seconds(TPU_V5E) == pytest.approx(
-        plan_gemm(d).predicted_seconds(TPU_V5E))
+    # The cheapest candidate is at least as good as the planner's pick:
+    # the planner's fused bit is legality-gated while the calibrated cost
+    # model may rank the multi-launch lowering of the same cover first
+    # (see test_blocking's measured-loss-shapes regression), so the two
+    # need not be the *same* plan.
+    assert (cands[0].predicted_seconds(TPU_V5E)
+            <= plan_gemm(d).predicted_seconds(TPU_V5E) * (1 + 1e-9))
     for p in cands:
         p.validate()  # every candidate covers C exactly once
     # knob-level dedup: fused and multi-launch lowerings of one region
     # cover are distinct candidates (DESIGN.md §8)
     knobs = [(p.regions, p.bk, p.fused) for p in cands]
     assert len(set(knobs)) == len(knobs)
-    assert any(p.fused for p in cands) and any(not p.fused for p in cands)
+    # Both lowerings are enumerated (the calibrated model ranks fused
+    # behind multi-launch on this shape, so check the full search space).
+    full = candidate_plans(d, top_k=256)
+    assert any(p.fused for p in full) and any(not p.fused for p in full)
 
 
 def test_flash_and_transpose_candidates():

@@ -1,0 +1,266 @@
+"""Gradient parity: scheduled single-launch backward vs reference autodiff.
+
+DESIGN.md §11 acceptance: training gradients of the three fused families
+— flash attention, grouped GEMM, the SSD chunked scan — flow through the
+families' custom VJPs onto ONE scheduled ``pallas_call`` each, match
+reference-path autodiff across dtypes / ragged tails / degenerate group
+sizes, and fall back to the reference when forced off the fused path.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.config import use
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import _ref_flat
+from repro.kernels.grouped_gemm import grouped_gemm
+from repro.kernels.grouped_gemm.ops import _ref_grouped
+from repro.kernels.ssd_chunk import ref_ssd_chunk_scan, ssd_chunk_scan
+
+RNG = np.random.default_rng(11)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def assert_grads_close(got, want, dtype):
+    tol = dict(atol=2e-4, rtol=2e-3) if dtype == jnp.float32 \
+        else dict(atol=1e-1, rtol=1e-1)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), **tol)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _ref_attention_kernel_convention(q, k, v, causal):
+    """(b, s, h, d) reference sharing the kernels' causal convention
+    (kpos <= qpos, no diagonal offset) via the VJP's own flat oracle."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    flat = [t.transpose(0, 2, 1, 3).reshape(b * h, t.shape[1], d)
+            for t in (q, k, v)]
+    out = _ref_flat(causal, *flat)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("b,h,sq,sk,d,causal,dtype", [
+    (1, 2, 128, 128, 32, True, jnp.float32),
+    (1, 1, 96, 80, 24, True, jnp.float32),    # tails on every dim + sq != sk
+    (1, 2, 100, 128, 64, False, jnp.float32),  # sq tail, non-causal
+    (1, 2, 128, 128, 32, True, jnp.bfloat16),
+])
+def test_flash_grad_parity(b, h, sq, sk, d, causal, dtype):
+    q, k, v = rand((b, sq, h, d), dtype), rand((b, sk, h, d), dtype), \
+        rand((b, sk, h, d), dtype)
+    w = rand((b, sq, h, d))
+
+    def loss(f):
+        return lambda q, k, v: jnp.sum(f(q, k, v).astype(jnp.float32) * w)
+
+    got = jax.grad(loss(functools.partial(flash_attention, causal=causal)),
+                   argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(
+        loss(lambda q, k, v: _ref_attention_kernel_convention(
+            q, k, v, causal)), argnums=(0, 1, 2))(q, k, v)
+    assert_grads_close(got, want, dtype)
+
+
+def test_flash_bwd_single_launch_fewer_tiles():
+    """Acceptance (DESIGN.md §11): a causal gradient is exactly ONE
+    backward pallas_call walking strictly fewer tiles than the dense
+    dKdV grid — the masked k-blocks never enter the backward table."""
+    from repro.core import (FlashBwdDescriptor, FlashDescriptor,
+                            plan_flash_bwd)
+    engine.reset_stats()
+    q = rand((1, 2048, 2, 64))
+    jax.grad(lambda q, k, v: jnp.sum(flash_attention(q, k, v, causal=True)),
+             argnums=(0, 1, 2))(q, q, q)
+    s = engine.stats()["flash_attention"]
+    assert s["launches_bwd"] == 1
+    assert s["plan_source_model_bwd"] == 1
+    # the backward plan reuses the forward's causal-pruned schedule
+    desc = FlashDescriptor(batch_heads=2, sq=2048, sk=2048, d=64, causal=True)
+    sched = plan_flash_bwd(
+        FlashBwdDescriptor.from_forward(desc)).tile_schedule()
+    assert sched.num_tiles < sched.dense_tiles
+
+
+def test_flash_grad_fallback_matches_fused():
+    """fused="off" routes the backward down reference autodiff; the
+    gradients agree with the scheduled walk."""
+    q, k, v = (rand((1, 64, 2, 32)) for _ in range(3))
+
+    def loss(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True) ** 2)
+
+    engine.reset_stats()
+    got = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    assert engine.stats()["flash_attention"]["launches_bwd"] == 1
+    with use(fused="off"):
+        want = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    # the fallback never reaches the backward family
+    assert engine.stats()["flash_attention"]["launches_bwd"] == 1
+    assert_grads_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense matmul front door (pallas primal, reference backward)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("epilogue", [None, "bias_gelu"])
+def test_matmul_pallas_backend_grad_parity(epilogue):
+    """The engine GEMM path is differentiable (pallas forward, reference
+    backward) so ``backend="pallas"`` trains end to end; gradients match
+    the XLA backend."""
+    from repro.core.matmul import matmul
+    a, b = rand((48, 40)), rand((40, 56))
+    bias = rand((56,), scale=0.2) if epilogue else None
+    w = rand((48, 56))
+
+    def loss(a, b, bias):
+        return jnp.sum(matmul(a, b, epilogue=epilogue, bias=bias)
+                       .astype(jnp.float32) * w)
+
+    argnums = (0, 1, 2) if epilogue else (0, 1)
+    with use(backend="pallas", interpret=True):
+        got = jax.grad(loss, argnums=argnums)(a, b, bias)
+    with use(backend="xla"):
+        want = jax.grad(loss, argnums=argnums)(a, b, bias)
+    assert_grads_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# grouped GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,k,n,sizes,epilogue,dtype", [
+    (64, 32, 48, [20, 0, 30], None, jnp.float32),   # zero-size expert + tail
+    (96, 40, 56, [96, 0, 0], None, jnp.float32),    # one expert owns all rows
+    (80, 48, 64, [10, 30, 25], "bias", jnp.float32),
+    (80, 48, 64, [10, 30, 25], "bias_gelu", jnp.float32),
+    (80, 48, 64, [10, 30, 25], "silu", jnp.float32),
+    (64, 32, 48, [20, 0, 30], None, jnp.bfloat16),
+])
+def test_grouped_grad_parity(t, k, n, sizes, epilogue, dtype):
+    x = rand((t, k), dtype)
+    w = rand((len(sizes), k, n), dtype, scale=0.3)
+    gs = jnp.asarray(sizes, jnp.int32)
+    biased = epilogue is not None and epilogue.startswith("bias")
+    bias = rand((len(sizes), n), dtype, scale=0.2) if biased else None
+    wy = rand((t, n))
+
+    def loss(f):
+        def inner(x, w, b):
+            out = f(x, w, gs, epilogue=epilogue, bias=b) if f is grouped_gemm \
+                else _ref_grouped(epilogue, x, w, gs, b)
+            return jnp.sum(out.astype(jnp.float32) * wy)
+        return inner
+
+    argnums = (0, 1, 2) if biased else (0, 1)
+    args = (x, w, bias) if biased else (x, w)
+    if biased:
+        got = jax.grad(loss(grouped_gemm), argnums=argnums)(*args, )
+        want = jax.grad(loss(None), argnums=argnums)(*args)
+    else:
+        got = jax.grad(lambda x, w: loss(grouped_gemm)(x, w, None),
+                       argnums=argnums)(*args)
+        want = jax.grad(lambda x, w: loss(None)(x, w, None),
+                        argnums=argnums)(*args)
+    assert_grads_close(got, want, dtype)
+
+
+def test_grouped_bwd_single_launch():
+    """dgrad AND wgrad ride ONE backward pallas_call over the runtime
+    tile tables — the pad/scatter path is never taken (DESIGN.md §11)."""
+    engine.reset_stats()
+    x, w = rand((64, 32)), rand((4, 32, 48), scale=0.3)
+    gs = jnp.asarray([16, 0, 40, 8], jnp.int32)
+    jax.grad(lambda x, w: jnp.sum(grouped_gemm(x, w, gs) ** 2),
+             argnums=(0, 1))(x, w)
+    s = engine.stats()["grouped_gemm"]
+    assert s["launches_bwd"] == 1
+    assert s["plan_source_model_bwd"] == 1
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def _ssd_grad_case(g, nc, q, n, p, dtype=jnp.float32):
+    c = rand((g, nc, q, n), dtype, scale=0.5)
+    b = rand((g, nc, q, n), dtype, scale=0.5)
+    l = jnp.asarray(np.tril(np.exp(
+        -np.abs(RNG.standard_normal((g, nc, q, q))))), dtype)
+    x = rand((g, nc, q, p), dtype, scale=0.5)
+    di = jnp.asarray(np.exp(-np.abs(RNG.standard_normal((g, nc, q)))),
+                     jnp.float32)
+    do = jnp.asarray(np.exp(-np.abs(RNG.standard_normal((g, nc, q)))),
+                     jnp.float32)
+    s0 = rand((g, p, n), jnp.float32, scale=0.3)
+    return c, b, l, x, di, do, s0
+
+
+@pytest.mark.parametrize("g,nc,q,n,p,dtype", [
+    (2, 4, 16, 8, 12, jnp.float32),
+    (1, 1, 8, 8, 8, jnp.float32),     # single chunk: recurrence is s0 only
+    (2, 3, 16, 8, 8, jnp.bfloat16),
+])
+def test_ssd_grad_parity(g, nc, q, n, p, dtype):
+    ops = _ssd_grad_case(g, nc, q, n, p, dtype)
+    wy, ws = rand((g, nc, q, p)), rand((g, p, n))
+
+    def loss(f):
+        def inner(*ops):
+            y, sf = f(*ops)
+            return jnp.sum(y.astype(jnp.float32) * wy) + jnp.sum(sf * ws)
+        return inner
+
+    got = jax.grad(loss(ssd_chunk_scan), argnums=tuple(range(7)))(*ops)
+    want = jax.grad(loss(ref_ssd_chunk_scan), argnums=tuple(range(7)))(*ops)
+    assert_grads_close(got, want, dtype)
+
+
+def test_ssd_grad_carried_state_tail():
+    """Gradients across a carried-state seam: differentiating a scan
+    split in two (state handed across the cut, cotangent handed back
+    through ``ds0``/``dsf``) matches differentiating the unsplit scan."""
+    ops = _ssd_grad_case(2, 4, 16, 8, 12)
+    wy = rand((2, 4, 16, 12))
+    cut = 2
+
+    def loss_full(c, b, l, x, di, do, s0):
+        y, _ = ssd_chunk_scan(c, b, l, x, di, do, s0)
+        return jnp.sum(y.astype(jnp.float32) * wy)
+
+    def loss_split(c, b, l, x, di, do, s0):
+        head = [t[:, :cut] for t in (c, b, l, x, di, do)]
+        tail = [t[:, cut:] for t in (c, b, l, x, di, do)]
+        y1, s_mid = ssd_chunk_scan(*head, s0)
+        y2, _ = ssd_chunk_scan(*tail, s_mid)
+        y = jnp.concatenate([y1, y2], axis=1)
+        return jnp.sum(y.astype(jnp.float32) * wy)
+
+    argnums = tuple(range(7))
+    got = jax.grad(loss_split, argnums=argnums)(*ops)
+    want = jax.grad(loss_full, argnums=argnums)(*ops)
+    assert_grads_close(got, want, jnp.float32)
+
+
+def test_ssd_bwd_single_launch():
+    """The whole reverse walk — every chunk's cotangent ladder AND the
+    carried state cotangent — is exactly ONE backward pallas_call."""
+    engine.reset_stats()
+    ops = _ssd_grad_case(2, 5, 16, 8, 8)
+    jax.grad(lambda *ops: jnp.sum(ssd_chunk_scan(*ops)[0] ** 2),
+             argnums=tuple(range(7)))(*ops)
+    s = engine.stats()["ssd_chunk"]
+    assert s["launches_bwd"] == 1
+    assert s["plan_source_model_bwd"] == 1

@@ -13,9 +13,10 @@ Four contracts across the doc surfaces:
   * every exported ``src/repro/core`` symbol (public top-level class or
     function) must carry a docstring — the engine is the system's public
     API and an undocumented export is a regression;
-  * DESIGN.md §10 (the schedule-layer-everywhere chapter) must name
-    every kernel family the engine registers — the family list drifts
-    otherwise.
+  * DESIGN.md §10 + §11 (the schedule-layer and backward-passes
+    chapters) must together name every kernel family the engine
+    registers — forward families in §10, ``*_bwd`` families in §11 —
+    the family lists drift otherwise.
 
 Stdlib only (``ast``-based, no imports of the package needed for the
 docstring gate); exits non-zero with one line per violation.
@@ -156,19 +157,28 @@ def engine_families() -> list:
 
 
 def check_design_families() -> list:
-    """DESIGN.md §10 names every registered kernel family."""
+    """DESIGN.md §10-§11 together name every registered kernel family
+    (forward families in the schedule-layer chapter, ``*_bwd`` families
+    in the backward-passes chapter)."""
     design = (ROOT / "DESIGN.md").read_text()
-    m = re.search(r"^## §10\b.*?(?=^## §|\Z)", design, re.S | re.M)
-    if not m:
-        return ["DESIGN.md: no '## §10' section (the schedule-layer "
-                "chapter the family matrix lives in)"]
-    section = m.group(0)
+    section = ""
+    missing_chapters = []
+    for num in ("10", "11"):
+        m = re.search(rf"^## §{num}\b.*?(?=^## §|\Z)", design, re.S | re.M)
+        if m:
+            section += m.group(0)
+        else:
+            missing_chapters.append(
+                f"DESIGN.md: no '## §{num}' section (the family matrices "
+                f"live in §10 + §11)")
+    if missing_chapters:
+        return missing_chapters
     families = engine_families()
     if not families:
         return ["tools/check_docs.py: could not parse _FAMILY_MODULES "
                 "from core/engine.py"]
-    return [f"DESIGN.md §10: registered family {fam!r} missing from the "
-            f"family list" for fam in families if fam not in section]
+    return [f"DESIGN.md §10-§11: registered family {fam!r} missing from "
+            f"the family lists" for fam in families if fam not in section]
 
 
 def main() -> int:
@@ -185,7 +195,7 @@ def main() -> int:
                      for p in (ROOT / "src").rglob("*.py"))
         print(f"check_docs: OK ({len(sections)} DESIGN sections, "
               f"{n_refs} src citations, README verified, core docstrings "
-              f"+ §10 family list verified)")
+              f"+ §10-§11 family lists verified)")
     return 1 if errors else 0
 
 
