@@ -21,14 +21,18 @@ warm — so every table is per-phase, not cumulative.
   train   — fused-VJP vs reference-autodiff train-step time on a small
             LM config, plus per-family gradient deltas and backward
             launch counts (BENCH_train.json)
+  serve   — continuous-batching Poisson trace through the paged serving
+            runtime (DESIGN.md §12): tokens/s + p50/p99 per-token
+            latency + the flat-launch-count proof (BENCH_serve.json)
 
 ``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep plus
-the grouped, flash and train suites at reduced size, exercising the
-fused single-launch GEMM, the scheduled grouped-GEMM and flash paths
-*and* the scheduled backward walks (DESIGN.md §11) end-to-end on every
-PR, still emitting ``BENCH_gemm_fused.json`` +
-``BENCH_grouped_fused.json`` + ``BENCH_flash_fused.json`` +
-``BENCH_train.json``.
+the grouped, flash, train and serve suites at reduced size, exercising
+the fused single-launch GEMM, the scheduled grouped-GEMM and flash
+paths, the scheduled backward walks (DESIGN.md §11) *and* the
+continuous-batching decode path (DESIGN.md §12) end-to-end on every PR,
+still emitting ``BENCH_gemm_fused.json`` + ``BENCH_grouped_fused.json``
++ ``BENCH_flash_fused.json`` + ``BENCH_train.json`` +
+``BENCH_serve.json``.
 """
 import argparse
 import sys
@@ -44,7 +48,8 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
                             fig45_alignment, fig7_blocking, fig89_gemm_sweep,
-                            flash_fused, grouped_fused, train_step)
+                            flash_fused, grouped_fused, serve_trace,
+                            train_step)
     suites = {
         "table1": table1_throughput.run,
         "fig1": fig1_scaling.run,
@@ -55,6 +60,7 @@ def main() -> None:
         "grouped": grouped_fused.run,
         "flash": flash_fused.run,
         "train": train_step.run,
+        "serve": serve_trace.run,
     }
     if args.smoke:
         if args.only:
@@ -62,7 +68,8 @@ def main() -> None:
         suites = {"fig89": lambda: fig89_gemm_sweep.run(smoke=True),
                   "grouped": lambda: grouped_fused.run(smoke=True),
                   "flash": lambda: flash_fused.run(smoke=True),
-                  "train": lambda: train_step.run(smoke=True)}
+                  "train": lambda: train_step.run(smoke=True),
+                  "serve": lambda: serve_trace.run(smoke=True)}
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     from repro.core import engine

@@ -39,7 +39,9 @@ def main():
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (b, prompt_len), 0, cfg.vocab_size)
         engine.reset_stats()
-        tokens, t_p, t_d = generate(cfg, params, prompts, gen_steps)
+        res = generate(cfg, params, prompts, gen_steps)
+        tokens, t_p, t_d = (res["tokens"], res["prefill_seconds"],
+                            res["decode_seconds"])
         print(f"{arch:20s} out={tuple(tokens.shape)} "
               f"prefill {b*prompt_len/t_p:7.0f} tok/s | "
               f"decode {b*(gen_steps-1)/max(t_d,1e-9):7.0f} tok/s")

@@ -33,7 +33,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from .descriptor import (BIAS_EPILOGUES, FlashBwdDescriptor, FlashDescriptor,
+from .descriptor import (BIAS_EPILOGUES, FlashBwdDescriptor,
+                         FlashDecodeDescriptor, FlashDescriptor,
                          GemmDescriptor, GroupedGemmBwdDescriptor,
                          GroupedGemmDescriptor, SsdChunkBwdDescriptor,
                          SsdChunkDescriptor, TransposeDescriptor)
@@ -41,9 +42,10 @@ from .machine import MachineModel, DEFAULT_MACHINE
 # The flattening/predication machinery lives in the schedule layer
 # (DESIGN.md §9); re-exported here for compatibility — plans *produce*
 # schedules, so blocking is the schedule layer's only upstream.
-from .schedule import (FlashTileSchedule, GroupedTileSchedule,  # noqa: F401
-                       TileSchedule, ceil_div, flash_tile_schedule,
-                       flatten_regions, plan_launches, round_up)
+from .schedule import (DecodeTileSchedule, FlashTileSchedule,  # noqa: F401
+                       GroupedTileSchedule, TileSchedule, ceil_div,
+                       flash_tile_schedule, flatten_regions, plan_launches,
+                       round_up)
 
 # ---------------------------------------------------------------------------
 # Palette
@@ -539,6 +541,50 @@ def plan_flash(desc: FlashDescriptor,
 
 
 @dataclasses.dataclass(frozen=True)
+class FlashDecodePlan:
+    """Plan of one paged decode-attention step (DESIGN.md §12).
+
+    The page size *is* the k-block (the pool layout fixed it at cache
+    construction), so the only planning freedom is the schedule itself;
+    like the grouped family, the plan is always ``fused`` — the ragged
+    page walk happens inside ONE ``pallas_call`` riding runtime tables,
+    and the non-fused alternative is the model-level XLA gather path
+    that never enters the engine."""
+
+    desc: FlashDecodeDescriptor
+    fused: bool = True
+    plan_source: str = "model"  # see BlockingPlan.plan_source
+
+    def tile_schedule(self) -> DecodeTileSchedule:
+        """The runtime-table schedule this step walks (one row per live
+        KV page, plus the per-slot dummy floor)."""
+        d = self.desc
+        return DecodeTileSchedule(num_seqs=d.num_seqs, pages=d.pages,
+                                  page_size=d.page_size,
+                                  max_blocks=d.max_blocks)
+
+    def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE
+                          ) -> float:
+        """Napkin-math step time: every walked tile issues a full
+        (h, page_size, hd) MAC pair; traffic streams each live page once
+        plus the q/out rows and the prefetch tables."""
+        d = self.desc
+        steps = self.tile_schedule().max_tiles
+        compute_s = d.flops / machine.peak(d.dtype)
+        memory_s = (d.in_bytes + d.out_bytes) / machine.hbm_bw
+        return (max(compute_s, memory_s) + steps * machine.step_overhead_s
+                + machine.launch_overhead_s)
+
+
+def plan_flash_decode(desc: FlashDecodeDescriptor,
+                      machine: MachineModel = DEFAULT_MACHINE
+                      ) -> FlashDecodePlan:
+    """Single-lowering planner: the pool geometry fixed every knob at
+    cache construction, so the plan only packages the schedule."""
+    return FlashDecodePlan(desc)
+
+
+@dataclasses.dataclass(frozen=True)
 class GroupedGemmPlan:
     """Planned (bm, bk, bn) tiling of one ragged grouped GEMM, plus the
     ``fused`` execution-path bit (scheduled single launch vs pad/scatter
@@ -929,6 +975,10 @@ def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
     elif fam == "ssd_chunk_bwd":
         # No free tiling knobs and a single reverse-walk lowering.
         add(plan_ssd_bwd(desc, machine), ())
+    elif fam == "flash_decode":
+        # No free knobs: the page size is the k-block (fixed at cache
+        # construction) and the walk is always the scheduled single launch.
+        add(plan_flash_decode(desc, machine), ())
     elif fam == "transpose":
         for bt in _transpose_legal(desc, machine):
             add(TransposePlan(desc, bt), (bt,))

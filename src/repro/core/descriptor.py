@@ -221,6 +221,71 @@ class FlashDescriptor(KernelDescriptor):
 
 
 @dataclasses.dataclass(frozen=True)
+class FlashDecodeDescriptor(KernelDescriptor):
+    """Paged decode attention (continuous batching, DESIGN.md §12):
+    one query row per slot against that slot's live KV pages.
+
+    ``(q: (S, h, hd))`` x ``(k/v pool: (pages, page_size, hkv, hd))``
+    -> ``(S, h, hd)``, mapped by runtime ``(block_tables, lengths)``
+    operands.  Like the grouped-GEMM family, the *ragged part is data*:
+    the descriptor carries only the static pool geometry, so the kernel
+    is built once per (pool, heads) shape and the churning batch rides
+    through as scalar-prefetch tables (no retrace on admission/eviction).
+    """
+
+    family = "flash_decode"
+
+    num_seqs: int     # decode slots
+    pages: int        # pool size in pages
+    page_size: int    # KV slots per page
+    max_blocks: int   # block-table width
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        for v in (self.num_seqs, self.pages, self.page_size,
+                  self.max_blocks, self.num_heads, self.num_kv_heads,
+                  self.head_dim):
+            if v <= 0:
+                raise ValueError(f"decode dims must be positive, got {self}")
+        if self.num_heads % self.num_kv_heads:
+            raise ValueError(f"GQA group must divide heads, got {self}")
+
+    @classmethod
+    def from_operands(cls, q, k_pool, block_tables):
+        s, h, hd = q.shape
+        pages, page_size, hkv, _ = k_pool.shape
+        return cls(num_seqs=s, pages=pages, page_size=page_size,
+                   max_blocks=block_tables.shape[1], num_heads=h,
+                   num_kv_heads=hkv, head_dim=hd,
+                   dtype=canonical_dtype(q.dtype))
+
+    @property
+    def flops(self) -> int:
+        # QK^T and PV over every pool page (the worst case: all pages
+        # live); actual walked tiles are bounded by the same number since
+        # live pages are exclusively owned.
+        return 4 * self.num_heads * self.head_dim * self.pages \
+            * self.page_size
+
+    @property
+    def in_bytes(self) -> int:
+        isz = jnp.dtype(self.dtype).itemsize
+        q = self.num_seqs * self.num_heads * self.head_dim * isz
+        kv = 2 * self.pages * self.page_size * self.num_kv_heads \
+            * self.head_dim * isz
+        tables = self.num_seqs * (self.max_blocks + 1) * 4
+        return q + kv + tables
+
+    @property
+    def out_bytes(self) -> int:
+        return self.num_seqs * self.num_heads * self.head_dim \
+            * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
 class GroupedGemmDescriptor(KernelDescriptor):
     """Ragged grouped GEMM (MoE expert compute): (T, K) x (E, K, N) -> (T, N).
 

@@ -68,6 +68,7 @@ _FAMILY_MODULES = {
     "gemm": "repro.kernels.gemm.ops",
     "flash_attention": "repro.kernels.flash_attention.ops",
     "flash_attention_bwd": "repro.kernels.flash_attention.ops",
+    "flash_decode": "repro.kernels.flash_attention.ops",
     "grouped_gemm": "repro.kernels.grouped_gemm.ops",
     "grouped_gemm_bwd": "repro.kernels.grouped_gemm.ops",
     "ssd_chunk": "repro.kernels.ssd_chunk.ops",

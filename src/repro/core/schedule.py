@@ -270,6 +270,139 @@ class GroupedTileSchedule:
 
 
 # ---------------------------------------------------------------------------
+# Paged decode tile schedules — runtime tables over live KV pages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeTileSchedule:
+    """Schedule of one continuous-batching decode step over a paged KV
+    cache (DESIGN.md §12).
+
+    The serving runtime stores each sequence's KV in fixed-size *pages*
+    of a shared pool, mapped by per-sequence block tables
+    (``runtime/pages.py``).  A decode step attends each sequence's single
+    query row against exactly its live pages — a ragged walk whose
+    raggedness is *runtime data* (sequence lengths change every step, the
+    batch churns with admissions/evictions), so it gets the
+    :class:`GroupedTileSchedule` treatment, not the trace-time
+    :class:`FlashTileSchedule` one: the geometry (pool size, page size,
+    slot count, the static ``max_tiles`` bound) is trace-time, the tables
+    are jnp data computed from ``(block_tables, lengths)`` each step and
+    shipped to the kernel as a scalar-prefetch operand.  Batch churn
+    never retraces — the kernel is shape-specialized, the batch
+    composition is data.
+
+    Each table row is ``(seq, page, k_len, first, last)``: the decode
+    kernel's grid step ``t`` attends query row ``seq`` against pool page
+    ``page``, of which the first ``k_len`` slots are live (the tail
+    predicate), with ``first``/``last`` bracketing the sequence's
+    contiguous page walk for the online-softmax carry exactly as in the
+    flash schedule.  A sequence always owns at least one table row — an
+    empty (length-0 / inactive) slot gets a single fully-masked row so
+    its carry still initializes and drains (to zeros) without branching.
+    """
+
+    num_seqs: int    # decode slots (pool block-table rows)
+    pages: int       # pool size in pages
+    page_size: int   # KV slots per page
+    max_blocks: int  # block-table width: max pages one sequence may own
+
+    def __post_init__(self):
+        assert self.num_seqs > 0 and self.pages > 0
+        assert self.page_size > 0 and self.max_blocks > 0
+
+    @property
+    def max_tiles(self) -> int:
+        """Static tile bound: live pages are exclusively owned so at most
+        ``pages`` compute tiles exist pool-wide (never more than
+        ``num_seqs * max_blocks``), plus one dummy tile per sequence for
+        the ≥1-row floor."""
+        return min(self.num_seqs * self.max_blocks, self.pages) \
+            + self.num_seqs
+
+    @property
+    def max_len(self) -> int:
+        """Longest sequence the block tables can map."""
+        return self.max_blocks * self.page_size
+
+    def tables(self, block_tables: jax.Array,
+               lengths: jax.Array) -> jax.Array:
+        """Runtime tile table: ``(max_tiles, 5)`` int32 from this step's
+        ``block_tables`` (num_seqs, max_blocks) and ``lengths``
+        (num_seqs,).  All shapes static, values dynamic — traceable under
+        ``jit``, so admissions/evictions/growth never recompile."""
+        P, S = self.page_size, self.num_seqs
+        lengths = lengths.astype(jnp.int32)
+        # ceil(len/P) live pages per sequence, floored at one (dummy) tile
+        # so every slot's carry initializes and drains.
+        nblocks = jnp.maximum((lengths + P - 1) // P, 1)       # (S,)
+        bstart = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(nblocks)])        # (S+1,)
+        g = jnp.arange(self.max_tiles, dtype=jnp.int32)
+        seq = jnp.clip(jnp.searchsorted(bstart, g, side="right") - 1,
+                       0, S - 1)
+        local = g - bstart[seq]
+        active = g < bstart[-1]
+        lcl = jnp.clip(local, 0, self.max_blocks - 1)
+        page = jnp.clip(block_tables[seq, lcl], 0, self.pages - 1)
+        k_len = jnp.clip(lengths[seq] - local * P, 0, P)
+        first = active & (local == 0)
+        last = active & (local == nblocks[seq] - 1)
+        page = jnp.where(active, page, 0)
+        k_len = jnp.where(active, k_len, 0)
+        return jnp.stack([seq, page, k_len,
+                          first.astype(jnp.int32), last.astype(jnp.int32)],
+                         axis=1).astype(jnp.int32)
+
+    def validate_tables(self, table, block_tables, lengths) -> bool:
+        """Property check on one concrete table (tests): every sequence's
+        live pages visited exactly once, in block-table order, with
+        correct tail lengths and carry flags; inactive tail rows inert."""
+        table = np.asarray(table)
+        bt = np.asarray(block_tables)
+        lengths = np.asarray(lengths, dtype=np.int64)
+        P = self.page_size
+        assert table.shape == (self.max_tiles, 5), table.shape
+        assert table.dtype == np.int32, table.dtype
+        nblocks = np.maximum(-(-lengths // P), 1)
+        total = int(nblocks.sum())
+        assert total <= self.max_tiles, (total, self.max_tiles)
+        visited = {}  # seq -> list of (page, k_len)
+        open_seq = None
+        for i, (seq, page, k_len, first, last) in enumerate(table):
+            if i >= total:  # inactive tail: inert rows, legal indices only
+                assert first == 0 and last == 0 and k_len == 0, table[i]
+                assert 0 <= seq < self.num_seqs and 0 <= page < self.pages
+                continue
+            assert 0 <= seq < self.num_seqs and 0 <= page < self.pages
+            if first:
+                assert open_seq is None, "carry re-opened before drain"
+                open_seq = seq
+                visited.setdefault(int(seq), [])
+            assert open_seq == seq, "row outside the open carry"
+            visited[int(seq)].append((int(page), int(k_len)))
+            if last:
+                open_seq = None
+        assert open_seq is None, "carry never drained"
+        for s in range(self.num_seqs):
+            walk = visited.get(s, [])
+            n, length = int(nblocks[s]), int(lengths[s])
+            assert len(walk) == n, (s, walk, n)
+            # pages follow the block table; each live page exactly once
+            pages_seen = [p for p, _ in walk]
+            if length > 0:
+                expect = [int(bt[s, j]) for j in range(n)]
+                assert pages_seen == expect, (s, pages_seen, expect)
+                assert len(set(pages_seen)) == n, "page visited twice"
+            # k_len: P per full page, the ragged tail on the last one
+            assert sum(kl for _, kl in walk) == length, (s, walk, length)
+            for j, (_, kl) in enumerate(walk):
+                want = min(max(length - j * P, 0), P)
+                assert kl == want, (s, j, kl, want)
+        return True
+
+
+# ---------------------------------------------------------------------------
 # Flash-attention tile schedules — trace-time tables, causal-aware
 # ---------------------------------------------------------------------------
 

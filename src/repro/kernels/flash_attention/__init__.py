@@ -1,2 +1,4 @@
-from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
-from repro.kernels.flash_attention.ref import ref_attention  # noqa: F401
+from repro.kernels.flash_attention.ops import (flash_attention,  # noqa: F401
+                                               paged_decode_attention)
+from repro.kernels.flash_attention.ref import (ref_attention,  # noqa: F401
+                                               ref_paged_decode_attention)

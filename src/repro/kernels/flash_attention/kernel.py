@@ -31,8 +31,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.schedule import (FlashTileSchedule, ownership_mask,
-                                 pack_table, predicated_store)
+from repro.core.schedule import (DecodeTileSchedule, FlashTileSchedule,
+                                 ownership_mask, pack_table,
+                                 predicated_store)
 from repro.kernels.pallas_compat import CompilerParams
 
 NEG_INF = -1e30
@@ -269,6 +270,115 @@ def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
         return kernel(table, q, k, v)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Paged decode lowering (DESIGN.md §12): one launch walks the runtime
+# DecodeTileSchedule — one grid step = one live KV page of one sequence,
+# pulled from the pool by a table-driven BlockSpec index map
+# ---------------------------------------------------------------------------
+
+def _decode_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page_size, rep, scale):
+    """One grid step of the paged decode walk.
+
+    ``tbl_ref`` rows are ``(seq, page, k_len, first, last)``
+    (:class:`~repro.core.schedule.DecodeTileSchedule`): the BlockSpec
+    index maps already pulled query row ``seq`` and pool page ``page``
+    into VMEM, so the body only masks the page tail (``k_len``), runs the
+    per-head online-softmax update, and drains the carry into the owned
+    output row at ``last`` — the same m/l/acc discipline as the fused
+    flash walk, batched over heads instead of query rows."""
+    t = pl.program_id(0)
+    k_len = tbl_ref[t, 2]
+
+    @pl.when(tbl_ref[t, 3] == 1)
+    def _init():
+        _carry_init(m_ref, l_ref, acc_ref)
+
+    q = q_ref[0]                       # (h, hd)
+    k = k_ref[0].astype(q.dtype)       # (page_size, hkv, hd)
+    v = v_ref[0].astype(q.dtype)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)  # GQA: -> (page_size, h, hd)
+        v = jnp.repeat(v, rep, axis=1)
+    # Dead page slots may hold stale sequences' values — `where`, never
+    # multiply (§IV-B); zeroed v also keeps a fully-masked (empty-slot)
+    # tile draining exact zeros.
+    col = jax.lax.broadcasted_iota(jnp.int32, (page_size, 1, 1), 0)
+    v = jnp.where(col < k_len, v, 0)
+    # scores (h, page_size): heads are the batch dim of both tile GEMMs.
+    s = jax.lax.dot_general(q, k, (((1,), (2,)), ((0,), (1,))),
+                            preferred_element_type=jnp.float32) * scale
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < k_len, s, NEG_INF)
+
+    # Per-head online-softmax update — the m/l algebra of
+    # `_online_softmax_update` with the PV contraction batched over heads.
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(tbl_ref[t, 4] == 1)
+    def _store():
+        o_ref[0] = _carry_drain(l_ref, acc_ref, o_ref.dtype)
+
+
+def build_decode_flash_kernel(*, schedule: DecodeTileSchedule,
+                              num_heads: int, num_kv_heads: int,
+                              head_dim: int, dtype=jnp.bfloat16,
+                              kv_dtype=None, interpret: bool = True):
+    """Generate ONE pallas_call executing a whole paged decode step.
+
+    Returns ``f(table, q:(S,h,hd), k_pool:(pages,P,hkv,hd), v_pool) ->
+    (S,h,hd)`` where ``table`` is the runtime ``(max_tiles, 5)`` int32
+    tile table (:meth:`DecodeTileSchedule.tables`).  Unlike the fused
+    flash kernel's trace-time table, this one is a *scalar-prefetch
+    operand*: the batch composition is data, so the kernel compiles once
+    per pool geometry and the churning batch never retraces.  The
+    BlockSpec index maps read the table — grid step ``t`` stages exactly
+    query row ``table[t, 0]`` and pool page ``table[t, 1]``, which is
+    how the walk touches only live pages (DESIGN.md §12)."""
+    S, P = schedule.num_seqs, schedule.page_size
+    h, hkv, hd = num_heads, num_kv_heads, head_dim
+    kv_dtype = kv_dtype or dtype
+    body = functools.partial(_decode_flash_kernel, page_size=P,
+                             rep=h // hkv, scale=hd ** -0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the runtime tile table
+        grid=(schedule.max_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda t, tbl: (tbl[t, 0], 0, 0)),
+            pl.BlockSpec((1, P, hkv, hd),
+                         lambda t, tbl: (tbl[t, 1], 0, 0, 0)),
+            pl.BlockSpec((1, P, hkv, hd),
+                         lambda t, tbl: (tbl[t, 1], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda t, tbl: (tbl[t, 0], 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),   # running max
+            pltpu.VMEM((h, 1), jnp.float32),   # running denom
+            pltpu.VMEM((h, hd), jnp.float32),  # output accumulator
+        ],
+    )
+
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, h, hd), dtype),
+        compiler_params=CompilerParams(
+            # one sequential dimension: the carry threads the page walk
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )
 
 
 # ---------------------------------------------------------------------------

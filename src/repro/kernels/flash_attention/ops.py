@@ -29,13 +29,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.blocking import (FlashPlan, flash_bwd_fused_legal,
-                                 plan_flash, plan_flash_bwd)
+from repro.core.blocking import (FlashDecodePlan, FlashPlan,
+                                 flash_bwd_fused_legal, plan_flash,
+                                 plan_flash_bwd, plan_flash_decode)
 from repro.core.config import get_config
-from repro.core.descriptor import FlashBwdDescriptor, FlashDescriptor
+from repro.core.descriptor import (FlashBwdDescriptor, FlashDecodeDescriptor,
+                                   FlashDescriptor)
 from repro.core.machine import canonical_dtype
 from repro.core.schedule import plan_launches
-from repro.kernels.flash_attention.kernel import (NEG_INF, build_flash_kernel,
+from repro.kernels.flash_attention.kernel import (NEG_INF,
+                                                  build_decode_flash_kernel,
+                                                  build_flash_kernel,
                                                   build_fused_flash_bwd_kernel,
                                                   build_fused_flash_kernel)
 
@@ -92,6 +96,50 @@ def execute_bwd(desc: FlashBwdDescriptor, plan: FlashPlan, qf, kf, vf, o, do,
 
 engine.register_family("flash_attention_bwd", planner=plan_flash_bwd,
                        execute=execute_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode family (DESIGN.md §12): ONE pallas_call per decode step,
+# riding the runtime DecodeTileSchedule tables over live KV pages
+# ---------------------------------------------------------------------------
+
+def execute_decode(desc: FlashDecodeDescriptor, plan: FlashDecodePlan,
+                   q, k_pool, v_pool, block_tables, lengths, *,
+                   interpret: bool = False):
+    """Engine executor: run one planned paged decode-attention step.
+
+    The kernel is cached on the static pool geometry alone; the batch
+    composition (block tables + lengths) becomes the runtime tile table,
+    built with jnp ops at trace time and shipped as a scalar-prefetch
+    operand — so a churning batch re-enters the same compiled launch.
+    """
+    engine.count_launches("flash_decode", 1)
+    schedule = plan.tile_schedule()
+    key = desc.cache_key() + ("decode", canonical_dtype(k_pool.dtype),
+                              interpret)
+    kernel = engine.build_cached(key, lambda: build_decode_flash_kernel(
+        schedule=schedule, num_heads=desc.num_heads,
+        num_kv_heads=desc.num_kv_heads, head_dim=desc.head_dim,
+        dtype=q.dtype, kv_dtype=k_pool.dtype, interpret=interpret))
+    table = schedule.tables(block_tables, lengths)
+    return kernel(table, q, k_pool, v_pool)
+
+
+engine.register_family("flash_decode", planner=plan_flash_decode,
+                       execute=execute_decode)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables,
+                           lengths) -> jax.Array:
+    """One decode step against a paged KV pool (DESIGN.md §12).
+
+    q: (S, h, hd) — one query row per decode slot; k_pool/v_pool:
+    (pages, page_size, hkv, hd); block_tables: (S, max_blocks) int32 page
+    ids; lengths: (S,) live KV length per slot (0 = inactive, output row
+    is zeros).  Returns (S, h, hd).
+    """
+    desc = FlashDecodeDescriptor.from_operands(q, k_pool, block_tables)
+    return engine.dispatch(desc, q, k_pool, v_pool, block_tables, lengths)
 
 
 def _flat_desc(causal, qf, kf) -> FlashDescriptor:

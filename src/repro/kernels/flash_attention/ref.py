@@ -5,6 +5,38 @@ import jax
 import jax.numpy as jnp
 
 
+def ref_paged_decode_attention(q, k_pool, v_pool, block_tables,
+                               lengths) -> jax.Array:
+    """Oracle for the paged decode kernel (DESIGN.md §12).
+
+    q: (S, h, hd); k_pool/v_pool: (pages, P, hkv, hd); block_tables:
+    (S, max_blocks) int32; lengths: (S,) -> (S, h, hd).  Gathers each
+    slot's block-table pages into a contiguous KV view (gathered column
+    ``j`` holds absolute position ``j``), masks ``j >= length``, and runs
+    plain fp32 softmax attention — also the XLA fallback formulation in
+    ``repro.models.attention``.  A zero-length slot returns zeros."""
+    s, h, hd = q.shape
+    pages, p, hkv, _ = k_pool.shape
+    b = block_tables.shape[1]
+    gk = k_pool[jnp.clip(block_tables, 0, pages - 1)]  # (S, B, P, hkv, hd)
+    gv = v_pool[jnp.clip(block_tables, 0, pages - 1)]
+    gk = gk.reshape(s, b * p, hkv, hd).astype(q.dtype)
+    gv = gv.reshape(s, b * p, hkv, hd).astype(q.dtype)
+    if h != hkv:
+        gk = jnp.repeat(gk, h // hkv, axis=2)
+        gv = jnp.repeat(gv, h // hkv, axis=2)
+    scale = hd ** -0.5
+    scores = jnp.einsum("shd,skhd->shk", q, gk,
+                        preferred_element_type=jnp.float32) * scale
+    live = jnp.arange(b * p)[None, :] < lengths[:, None]  # (S, B*P)
+    scores = jnp.where(live[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(live[:, None, :], probs, 0)  # len-0 slots: exact 0
+    out = jnp.einsum("shk,skhd->shd", probs.astype(gv.dtype), gv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
 def ref_attention(q, k, v, *, causal: bool = True) -> jax.Array:
     """q/k/v: (b, s, h, d) -> (b, s, h, d), fp32 softmax."""
     scale = q.shape[-1] ** -0.5

@@ -184,7 +184,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 args.append(ispecs["enc_out"])
             jitted = jax.jit(step_fn,
                              in_shardings=tuple(in_sh),
-                             out_shardings=(None, c_shardings),
+                             out_shardings=(None, c_shardings, None),
                              donate_argnums=(1,))
             args = tuple(args)
 

@@ -1,8 +1,16 @@
 """Serving driver: batched prefill + decode with KV/state caches.
 
-``python -m repro.launch.serve --arch <id> --batch 8 --prompt-len 64
---gen 32`` runs reduced-config batched generation on local devices and
-reports prefill/decode throughput.
+Two modes (DESIGN.md §12):
+
+  * static batch (default): ``python -m repro.launch.serve --arch <id>
+    --batch 8 --prompt-len 64 --gen 32`` — prefill once, decode the
+    whole batch in lock-step.
+  * continuous batching: ``python -m repro.launch.serve --arch <id>
+    --continuous`` — a Poisson-style request trace runs through the
+    paged serving runtime (``repro.runtime.batching``); per-decode-step
+    launch counts stay flat in ``engine.stats()`` while the batch
+    churns, and greedy outputs are checked token-identical against the
+    static path.
 """
 from __future__ import annotations
 
@@ -14,14 +22,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core import engine
 from repro.runtime.steps import make_prefill_step, make_serve_step, model_for
 
 
 def generate(cfg, params, prompts, gen_steps: int, *, capacity=None):
-    """Greedy batched generation. prompts: (b, s) int32."""
+    """Greedy batched generation.  prompts: (b, s) int32.
+
+    Returns a dict: ``tokens`` (b, gen_steps), ``prefill_seconds``,
+    ``decode_seconds``, and an ``engine_stats`` snapshot (the
+    launch-count provenance, mirroring ``launch.train``).  The decode
+    position is carried *inside* the jitted step — the loop never
+    rebuilds a host-side position scalar per token.
+    """
     b, s = prompts.shape
     capacity = capacity or (s + gen_steps)
-    model = model_for(cfg)
     prefill = jax.jit(make_prefill_step(cfg, capacity))
     serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
@@ -31,15 +46,52 @@ def generate(cfg, params, prompts, gen_steps: int, *, capacity=None):
     t_prefill = time.time() - t0
 
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    pos = jnp.asarray(s, jnp.int32)
     out = [tok]
     t0 = time.time()
-    for i in range(gen_steps - 1):
-        logits, cache = serve(params, cache, tok, jnp.asarray(s + i))
+    for _ in range(gen_steps - 1):
+        logits, cache, pos = serve(params, cache, tok, pos)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
-    return jnp.concatenate(out, axis=1), t_prefill, t_decode
+    return {
+        "tokens": jnp.concatenate(out, axis=1),
+        "prefill_seconds": t_prefill,
+        "decode_seconds": t_decode,
+        "engine_stats": engine.stats(),
+    }
+
+
+def run_continuous(cfg, params, *, num_slots=4, num_pages=64, page_size=16,
+                   max_blocks=8, num_requests=6, rate=0.5, prompt_len=12,
+                   max_new=8, seed=0):
+    """Drive the continuous-batching runtime on a Poisson trace and check
+    it against the static-batch path.  Returns the engine's run result
+    with a ``token_identical`` flag added."""
+    from repro.models.attention import PageSpec
+    from repro.runtime.batching import (ContinuousBatchingEngine,
+                                        poisson_trace)
+
+    spec = PageSpec(num_pages, page_size, max_blocks)
+    reqs = poisson_trace(num_requests=num_requests, rate=rate,
+                         prompt_lens=prompt_len, max_new=max_new,
+                         vocab_size=cfg.vocab_size, seed=seed)
+    serving = ContinuousBatchingEngine(cfg, params, num_slots=num_slots,
+                                       spec=spec)
+    result = serving.run(reqs)
+
+    # Oracle: each request decoded alone on the static path must emit the
+    # same greedy tokens the churning batch produced.
+    identical = True
+    for r in reqs:
+        static = generate(cfg, params, jnp.asarray(r.prompt)[None, :],
+                          r.max_new)
+        want = np.asarray(static["tokens"][0])
+        got = result["outputs"][r.rid]
+        identical &= bool(np.array_equal(want, got))
+    result["token_identical"] = identical
+    return result
 
 
 def main():
@@ -48,18 +100,46 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching mode over a Poisson trace")
+    ap.add_argument("--backend", choices=["xla", "pallas"], default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
     model = model_for(cfg)
     params = model.init(jax.random.PRNGKey(0), cfg)
+    if args.backend:
+        from repro.core import configure
+        configure(backend=args.backend)
+
+    if args.continuous:
+        res = run_continuous(cfg, params, prompt_len=args.prompt_len // 4
+                             or 8, max_new=args.gen // 4 or 4,
+                             seed=args.seed)
+        m = res["metrics"]
+        print(f"arch={cfg.name} continuous: requests={m['requests']} "
+              f"tokens={m['total_tokens']} decode_steps={m['decode_steps']} "
+              f"evictions={m['evictions']} "
+              f"tok/s={m['tokens_per_s']:.0f} "
+              f"p50={m['p50_token_latency_s']*1e3:.1f}ms "
+              f"p99={m['p99_token_latency_s']*1e3:.1f}ms "
+              f"token_identical={res['token_identical']}")
+        fam = res["engine_stats"].get("flash_decode", {})
+        if fam.get("launches"):
+            per_step = m["flash_decode_launches"] / max(m["decode_steps"], 1)
+            print(f"engine[flash_decode]: launches={fam['launches']} "
+                  f"({per_step:.2f}/decode step — flat while the batch "
+                  f"churned)")
+        return
+
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    tokens, t_p, t_d = generate(cfg, params, prompts, args.gen)
-    ptput = args.batch * args.prompt_len / t_p
-    dtput = args.batch * (args.gen - 1) / max(t_d, 1e-9)
-    print(f"arch={cfg.name} generated {tokens.shape} "
+    res = generate(cfg, params, prompts, args.gen)
+    ptput = args.batch * args.prompt_len / res["prefill_seconds"]
+    dtput = args.batch * (args.gen - 1) / max(res["decode_seconds"], 1e-9)
+    print(f"arch={cfg.name} generated {res['tokens'].shape} "
           f"prefill={ptput:.0f} tok/s decode={dtput:.0f} tok/s")
 
 

@@ -46,6 +46,41 @@ def init_kv_cache(batch, capacity, n_kv, head_dim, dtype=jnp.bfloat16) -> KVCach
     )
 
 
+class PageSpec(NamedTuple):
+    """Static paged-cache geometry (the serving runtime's pool shape).
+
+    Threaded through ``block_cache``/``stack_cache``/``init_cache``: when
+    present, "attn" blocks get a :class:`PagedKVCache` pool instead of a
+    dense per-slot ring (DESIGN.md §12).  ``max_blocks * page_size`` caps
+    the per-sequence context length the block tables can map."""
+    num_pages: int
+    page_size: int
+    max_blocks: int
+
+
+class PagedKVCache(NamedTuple):
+    """Paged KV pool + per-slot block tables (continuous batching).
+
+    Unlike :class:`KVCache`, storage is not per-slot: ``k``/``v`` pool
+    pages are allocated to sequences by the host-side free-list allocator
+    (``repro.runtime.pages.PagePool``) and mapped by ``tables`` — so a
+    slot's KV footprint tracks its actual length, and admitting/evicting
+    a sequence moves page *indices*, never KV bytes.  Position ``p`` of
+    slot ``i`` lives at ``(tables[i, p // P], p % P)``."""
+    k: jax.Array       # (num_pages, page_size, h_kv, hd)
+    v: jax.Array       # (num_pages, page_size, h_kv, hd)
+    tables: jax.Array  # (num_slots, max_blocks) int32 page ids
+
+
+def init_paged_kv_cache(num_slots, spec: PageSpec, n_kv, head_dim,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((spec.num_pages, spec.page_size, n_kv, head_dim), dtype),
+        v=jnp.zeros((spec.num_pages, spec.page_size, n_kv, head_dim), dtype),
+        tables=jnp.zeros((num_slots, spec.max_blocks), jnp.int32),
+    )
+
+
 def attention_init(rng, cfg, cross: bool = False):
     d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     rq, rk, rv, ro, rn = common.split_rngs(rng, 5)
@@ -194,6 +229,60 @@ def _attention_seq(q, k, v, q_pos, k_pos, window, softcap):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode (continuous batching, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _paged_decode(cfg, cache: PagedKVCache, q, k, v, pos2d, dt, g):
+    """One decode step against the paged KV pool.
+
+    q/k/v: (S, 1, h|hkv, hd); ``pos2d``: (S, 1) per-slot positions (the
+    slot's current length; -1 = inactive).  The new token's KV scatters
+    into page ``tables[i, pos // P]`` at offset ``pos % P`` — inactive
+    rows scatter to an out-of-bounds page id, which ``mode="drop"``
+    discards, so dead slots never touch the pool (their *output* rows
+    are garbage the step-level merge masks).  Attention runs either through the engine's
+    ``flash_decode`` family (pallas backend: ONE launch walking the
+    runtime :class:`~repro.core.schedule.DecodeTileSchedule`) or the XLA
+    gather formulation (``ref_paged_decode_attention``'s math)."""
+    S = q.shape[0]
+    pages, P = cache.k.shape[0], cache.k.shape[1]
+    B = cache.tables.shape[1]
+    hkv, hd = cache.k.shape[2], cache.k.shape[3]
+    pos = pos2d[:, 0] if pos2d.shape[0] == S else \
+        jnp.broadcast_to(pos2d[:, 0], (S,))
+    active = pos >= 0
+    safe = jnp.clip(pos, 0)
+    blk = jnp.take_along_axis(cache.tables, (safe // P)[:, None], axis=1)[:, 0]
+    # Inactive rows scatter to page id == pages: out of bounds, which
+    # mode="drop" discards (NOT -1 — negative indices wrap in jnp).
+    pid = jnp.where(active, blk, pages)
+    off = safe % P
+    k_new = cache.k.at[pid, off].set(k[:, 0].astype(cache.k.dtype),
+                                     mode="drop")
+    v_new = cache.v.at[pid, off].set(v[:, 0].astype(cache.v.dtype),
+                                     mode="drop")
+    new_cache = PagedKVCache(k_new, v_new, cache.tables)
+    lengths = jnp.where(active, pos + 1, 0)
+
+    if get_config().backend == "pallas" and not cfg.attn_logit_softcap:
+        from repro.kernels.flash_attention import paged_decode_attention
+        out = paged_decode_attention(q[:, 0], k_new, v_new, cache.tables,
+                                     lengths)[:, None]
+        return new_cache, out
+    # XLA fallback: gather the block-table pages into a contiguous view
+    # (gathered column j holds absolute position j) and mask j >= length
+    # — identical math to ref_paged_decode_attention, expressed through
+    # the shared _attend so float ops match the dense decode path.
+    gk = k_new[jnp.clip(cache.tables, 0, pages - 1)]  # (S, B, P, hkv, hd)
+    gv = v_new[jnp.clip(cache.tables, 0, pages - 1)]
+    gk = _repeat_kv(gk.reshape(S, B * P, hkv, hd).astype(dt), g)
+    gv = _repeat_kv(gv.reshape(S, B * P, hkv, hd).astype(dt), g)
+    live = jnp.arange(B * P)[None, :] < lengths[:, None]  # (S, B*P)
+    out = _attend(q, gk, gv, live[:, None, None, :], cfg.attn_logit_softcap)
+    return new_cache, out
+
+
+# ---------------------------------------------------------------------------
 # Public apply
 # ---------------------------------------------------------------------------
 
@@ -201,7 +290,10 @@ def attention_apply(params, cfg, x, positions, *, cache: Optional[KVCache] = Non
                     window: Optional[int] = None, kv_override=None):
     """Self-attention (or cross-attention when ``kv_override`` is given).
 
-    positions: (s,) absolute positions of the ``s`` tokens in ``x``.
+    positions: (s,) absolute positions of the ``s`` tokens in ``x``, or
+    (b, s) *per-row* positions (the continuous-batching decode step: each
+    slot sits at its own length; -1 marks an inactive slot whose row is
+    garbage the step-level merge discards — DESIGN.md §12).
     Returns (y, new_cache).  With a cache and s==1 this is one decode step.
     """
     dt = jnp.dtype(cfg.dtype)
@@ -209,6 +301,7 @@ def attention_apply(params, cfg, x, positions, *, cache: Optional[KVCache] = Non
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = hq // hkv
     qspec, _ = _head_axes(hq)
+    pos2d = positions if positions.ndim == 2 else positions[None, :]
 
     q = _split_heads(common.linear(params["wq"], x, compute_dtype=dt), hq, hd)
     kv_src = x if kv_override is None else kv_override
@@ -220,22 +313,25 @@ def attention_apply(params, cfg, x, positions, *, cache: Optional[KVCache] = Non
         k = common.rmsnorm(params["k_norm"], k, cfg.norm_eps)
 
     if cfg.rope:
-        q = apply_rope(q, positions[None, :], cfg.rope_theta)
+        q = apply_rope(q, pos2d, cfg.rope_theta)
         if kv_override is None:
-            k = apply_rope(k, positions[None, :], cfg.rope_theta)
+            k = apply_rope(k, pos2d, cfg.rope_theta)
 
     q = shard_activation(q, qspec)
 
     new_cache = None
-    if cache is not None and kv_override is None:
+    if isinstance(cache, PagedKVCache) and kv_override is None:
+        new_cache, out = _paged_decode(cfg, cache, q, k, v, pos2d, dt, g)
+    elif cache is not None and kv_override is None:
         # Ring-buffer write: slot = pos % capacity (windowed caches stay
         # O(window) even at 500k-token contexts).
         cap = cache.k.shape[1]
-        slots = positions % cap  # (s,)
+        slots = pos2d % cap  # (1|b, s); broadcasts against bidx
         bidx = jnp.arange(b)[:, None]
-        k_new = cache.k.at[bidx, slots[None, :]].set(k.astype(cache.k.dtype))
-        v_new = cache.v.at[bidx, slots[None, :]].set(v.astype(cache.v.dtype))
-        pos_new = cache.pos.at[bidx, slots[None, :]].set(positions[None, :])
+        k_new = cache.k.at[bidx, slots].set(k.astype(cache.k.dtype))
+        v_new = cache.v.at[bidx, slots].set(v.astype(cache.v.dtype))
+        pos_new = cache.pos.at[bidx, slots].set(
+            jnp.broadcast_to(pos2d, (b, s)))
         new_cache = KVCache(k_new, v_new, pos_new)
         if s == 1:
             # Decode: attend over the cache with per-slot positions.
@@ -249,9 +345,10 @@ def attention_apply(params, cfg, x, positions, *, cache: Optional[KVCache] = Non
                 kv_spec = (("pod", "data"), "model", None, None)
                 kf = shard_activation(kf, kv_spec)
                 vf = shard_activation(vf, kv_spec)
-            mask = (new_cache.pos[:, None, None, :] <= positions[0])
+            qpos = pos2d[:, -1].reshape(-1, 1, 1, 1)  # (1|b, 1, 1, 1)
+            mask = (new_cache.pos[:, None, None, :] <= qpos)
             if window is not None:
-                mask &= new_cache.pos[:, None, None, :] > positions[0] - window
+                mask &= new_cache.pos[:, None, None, :] > qpos - window
             mask &= new_cache.pos[:, None, None, :] >= 0
             out = _attend(q, kf, vf, mask, cfg.attn_logit_softcap,
                           kv_seq_sharded=seq_sharded)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.models import common
-from repro.models.attention import attention_apply, attention_init, init_kv_cache
+from repro.models.attention import (attention_apply, attention_init,
+                                    init_kv_cache, init_paged_kv_cache)
 from repro.models.mlp import mlp_apply, mlp_init
 from repro.models.moe import moe_apply, moe_init
 from repro.models.rglru import init_recurrent_state, rglru_apply, rglru_init
@@ -49,9 +50,18 @@ def block_init(rng, cfg, kind: str, cross: bool = False):
     return p
 
 
-def block_cache(batch, cfg, kind: str, capacity: int):
-    """Initial decode-state for one block (None for stateless train)."""
+def block_cache(batch, cfg, kind: str, capacity: int, paged=None):
+    """Initial decode-state for one block (None for stateless train).
+
+    ``paged`` (a :class:`repro.models.attention.PageSpec`) switches "attn"
+    blocks to the paged pool layout of the continuous-batching serving
+    runtime (DESIGN.md §12); "local"/"rec"/"ssm" states are already
+    O(window)/O(1) per slot, so they stay slot-major dense."""
     if kind == "attn":
+        if paged is not None:
+            return init_paged_kv_cache(batch, paged, cfg.num_kv_heads,
+                                       cfg.head_dim,
+                                       jnp.dtype(cfg.kv_cache_dtype))
         return init_kv_cache(batch, capacity, cfg.num_kv_heads, cfg.head_dim,
                              jnp.dtype(cfg.kv_cache_dtype))
     if kind == "local":
@@ -129,12 +139,12 @@ def stack_init(rng, cfg, cross: bool = False):
     return {"groups": stacked, "rem": rem_params}
 
 
-def stack_cache(batch, cfg, capacity: int):
+def stack_cache(batch, cfg, capacity: int, paged=None):
     pat = cfg.block_pattern
     groups, rem = stack_layout(cfg)
 
     def one_group(_):
-        return {f"b{i}": block_cache(batch, cfg, kind, capacity)
+        return {f"b{i}": block_cache(batch, cfg, kind, capacity, paged)
                 for i, kind in enumerate(pat)}
 
     stacked = None
@@ -142,7 +152,8 @@ def stack_cache(batch, cfg, capacity: int):
         stacked = jax.tree.map(
             lambda *xs: jnp.stack(xs), *[one_group(g) for g in range(groups)]) \
             if groups > 1 else jax.tree.map(lambda x: x[None], one_group(0))
-    rem_caches = [block_cache(batch, cfg, kind, capacity) for kind in rem]
+    rem_caches = [block_cache(batch, cfg, kind, capacity, paged)
+                  for kind in rem]
     return {"groups": stacked, "rem": rem_caches}
 
 

@@ -84,5 +84,9 @@ class LanguageModel:
         return logits, new_cache, aux
 
     @staticmethod
-    def init_cache(cfg, batch, capacity):
-        return stack_cache(batch, cfg, capacity)
+    def init_cache(cfg, batch, capacity, paged=None):
+        """``paged`` (a :class:`repro.models.attention.PageSpec`) builds
+        the continuous-batching serving cache: "attn" blocks become paged
+        pools + block tables, everything else stays slot-major dense
+        (DESIGN.md §12)."""
+        return stack_cache(batch, cfg, capacity, paged)

@@ -1,0 +1,246 @@
+"""Paged KV/state cache for the continuous-batching serving runtime.
+
+The serving cache (DESIGN.md §12) replaces the dense capacity-sized
+per-slot KV of the static batch path with a *pool* of fixed-size pages
+plus per-slot block tables:
+
+  * :class:`PagePool` — the host-side free-list allocator.  It owns the
+    int32 block tables as numpy state; admission/growth/eviction move
+    page *indices* on the host, never KV bytes on the device.
+  * :func:`init_serving_cache` — builds the device cache pytree: "attn"
+    blocks become :class:`~repro.models.attention.PagedKVCache` pools,
+    "local"/"rec"/"ssm" states stay slot-major dense (they are already
+    O(window)/O(1) per slot).
+  * :func:`write_prefill` — copies one sequence's freshly prefilled
+    dense cache (batch=1, capacity=length) into its serving slot:
+    paged KV scatters into the slot's pool pages, ring/recurrent state
+    row-copies (resetting the ring first so stale entries from an
+    evicted longer sequence cannot leak into the window mask).
+  * :func:`refresh_tables` — pushes the host block tables into every
+    PagedKVCache leaf after the allocator has moved pages.
+
+All functions are eager host-path helpers: they run at admission time,
+outside the jitted decode step, so python-int lengths are fine and no
+retracing is induced on the hot loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import KVCache, PagedKVCache, PageSpec
+
+
+class OutOfPages(RuntimeError):
+    """Admission/growth needs more pages than the free list holds."""
+
+
+def pages_for(length: int, page_size: int) -> int:
+    """Number of pages needed to hold ``length`` KV positions."""
+    if length <= 0:
+        return 0
+    return -(-length // page_size)
+
+
+class PagePool:
+    """Host-side free-list page allocator + per-slot block tables.
+
+    Invariants (checked by :meth:`check_invariants`, property-tested in
+    tests/test_schedule.py):
+
+      * every page id is owned by exactly one slot OR sits on the free
+        list — never both, never neither;
+      * slot ``i`` owns exactly ``pages_for(len_i, P)`` pages, recorded
+        in block-table order in ``tables[i, :nblocks]``.
+    """
+
+    def __init__(self, spec: PageSpec, num_slots: int):
+        self.spec = spec
+        self.num_slots = num_slots
+        # pop() hands out ascending ids first — deterministic allocation
+        # order makes serving traces reproducible under a fixed seed.
+        self._free: List[int] = list(range(spec.num_pages - 1, -1, -1))
+        self._owned: List[List[int]] = [[] for _ in range(num_slots)]
+        self.tables = np.zeros((num_slots, spec.max_blocks), np.int32)
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def owned_pages(self, slot: int) -> List[int]:
+        return list(self._owned[slot])
+
+    def slot_blocks(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    def can_admit(self, length: int, *, headroom: int = 0) -> bool:
+        """Can a sequence of ``length`` positions (plus ``headroom``
+        future decode tokens) be admitted right now?"""
+        return pages_for(length + headroom,
+                         self.spec.page_size) <= len(self._free)
+
+    # -- mutation -----------------------------------------------------------
+
+    def grow(self, slot: int, length: int) -> List[int]:
+        """Ensure ``slot`` owns enough pages for ``length`` positions.
+
+        Returns the newly allocated page ids (empty when the slot already
+        covers ``length``).  Raises :class:`OutOfPages` when the free
+        list cannot supply them and ValueError when ``length`` exceeds
+        what ``max_blocks`` can ever map."""
+        need = pages_for(length, self.spec.page_size)
+        if need > self.spec.max_blocks:
+            raise ValueError(
+                f"length {length} needs {need} pages > max_blocks "
+                f"{self.spec.max_blocks}")
+        cur = len(self._owned[slot])
+        if need <= cur:
+            return []
+        if need - cur > len(self._free):
+            raise OutOfPages(
+                f"slot {slot} needs {need - cur} pages, free list has "
+                f"{len(self._free)}")
+        new = [self._free.pop() for _ in range(need - cur)]
+        self._owned[slot].extend(new)
+        self.tables[slot, cur:need] = np.asarray(new, np.int32)
+        return new
+
+    def release(self, slot: int) -> int:
+        """Free every page the slot owns; returns how many were freed."""
+        freed = self._owned[slot]
+        self._free.extend(freed)
+        self._owned[slot] = []
+        self.tables[slot, :] = 0
+        return len(freed)
+
+    # -- device views -------------------------------------------------------
+
+    def device_tables(self) -> jax.Array:
+        return jnp.asarray(self.tables)
+
+    # -- checking -----------------------------------------------------------
+
+    def check_invariants(self,
+                         lengths: Optional[List[int]] = None) -> None:
+        all_pages = sorted(self._free
+                           + [p for o in self._owned for p in o])
+        if all_pages != list(range(self.spec.num_pages)):
+            raise AssertionError(
+                f"page conservation broken: {all_pages}")
+        for i, owned in enumerate(self._owned):
+            n = len(owned)
+            if list(self.tables[i, :n]) != owned:
+                raise AssertionError(
+                    f"slot {i} tables {self.tables[i, :n]} != owned {owned}")
+            if lengths is not None:
+                want = pages_for(lengths[i], self.spec.page_size)
+                if n != want:
+                    raise AssertionError(
+                        f"slot {i} owns {n} pages, length {lengths[i]} "
+                        f"wants {want}")
+
+
+# ---------------------------------------------------------------------------
+# Serving-cache pytree helpers
+# ---------------------------------------------------------------------------
+
+def init_serving_cache(cfg, num_slots: int, spec: PageSpec):
+    """The device cache for a continuous batch of ``num_slots`` slots."""
+    from repro.models import LanguageModel
+    capacity = spec.max_blocks * spec.page_size
+    return LanguageModel.init_cache(cfg, num_slots, capacity, paged=spec)
+
+
+def _is_block(x) -> bool:
+    return isinstance(x, (KVCache, PagedKVCache))
+
+
+def _write_one(sv, dv, *, slot: int, length: int, page_ids, page_size: int):
+    """Write one prefilled sequence (dense leaf ``dv``, batch=1) into
+    slot ``slot`` of one serving leaf ``sv`` — single-group shapes; the
+    grouped case vmaps this over the leading stack dim."""
+    if isinstance(sv, PagedKVCache):
+        # Dense attn prefill ran with capacity == length, so dv.k[0, :L]
+        # is position-ordered.  Pad to whole pages and scatter the page
+        # rows into the pool at this slot's block-table entries.
+        n = len(page_ids)
+        pad = n * page_size - length
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
+
+        def scatter(pool, dense):
+            rows = jnp.pad(dense[0, :length],
+                           ((0, pad),) + ((0, 0),) * (dense.ndim - 2))
+            rows = rows.reshape(n, page_size, *dense.shape[2:])
+            return pool.at[ids].set(rows.astype(pool.dtype))
+
+        return PagedKVCache(scatter(sv.k, dv.k), scatter(sv.v, dv.v),
+                            sv.tables)
+    if isinstance(sv, KVCache):
+        # Local ring: the dense prefill ring (cap_d = min(L, window)) and
+        # the serving ring (cap_s = min(capacity, window)) may disagree
+        # on capacity, so re-slot each live entry by its position.  The
+        # row is reset FIRST — an evicted longer sequence leaves stale
+        # (k, v, pos) entries whose positions could otherwise survive the
+        # window mask of the re-admitted shorter one.
+        cap_s = sv.k.shape[1]
+        pos_d = dv.pos[0]
+        # drop-sentinel: positive OOB index (negative would wrap).
+        tgt = jnp.where(pos_d >= 0, pos_d % cap_s, cap_s)
+        k_row = jnp.zeros_like(sv.k[slot]).at[tgt].set(
+            dv.k[0].astype(sv.k.dtype), mode="drop")
+        v_row = jnp.zeros_like(sv.v[slot]).at[tgt].set(
+            dv.v[0].astype(sv.v.dtype), mode="drop")
+        p_row = jnp.full((cap_s,), -1, jnp.int32).at[tgt].set(
+            pos_d, mode="drop")
+        return KVCache(sv.k.at[slot].set(k_row), sv.v.at[slot].set(v_row),
+                       sv.pos.at[slot].set(p_row))
+    # Plain array leaf (rec/ssm state): slot-major row copy.
+    return sv.at[slot].set(dv[0].astype(sv.dtype))
+
+
+def _write_tree(sv, dv, grouped: bool, **kw):
+    fn = functools.partial(_write_one, **kw)
+    one = (lambda s, d: jax.vmap(fn)(s, d)) if grouped else fn
+    return jax.tree.map(one, sv, dv, is_leaf=_is_block)
+
+
+def write_prefill(serving, dense, *, slot: int, length: int, page_ids,
+                  page_size: int):
+    """Copy a batch=1 dense prefill cache into serving slot ``slot``.
+
+    ``page_ids``: the slot's block table prefix (from
+    ``PagePool.grow``/``owned_pages``) — must cover ``length``.
+    Returns the updated serving cache pytree."""
+    assert len(page_ids) == pages_for(length, page_size), \
+        (len(page_ids), length, page_size)
+    kw = dict(slot=slot, length=length, page_ids=page_ids,
+              page_size=page_size)
+    groups = serving["groups"]
+    if groups is not None:
+        groups = _write_tree(groups, dense["groups"], True, **kw)
+    rem = [_write_tree(s, d, False, **kw)
+           for s, d in zip(serving["rem"], dense["rem"])]
+    return {"groups": groups, "rem": rem}
+
+
+def refresh_tables(cache, tables):
+    """Replace every PagedKVCache leaf's block tables with ``tables``
+    ((num_slots, max_blocks) int32) — called after the allocator moved
+    pages; grouped leaves broadcast over the leading stack dim."""
+    tables = jnp.asarray(tables, jnp.int32)
+
+    def f(x):
+        if isinstance(x, PagedKVCache):
+            t = tables if x.tables.ndim == 2 \
+                else jnp.broadcast_to(tables, x.tables.shape)
+            return PagedKVCache(x.k, x.v, t)
+        return x
+
+    return jax.tree.map(f, cache,
+                        is_leaf=lambda x: isinstance(x, PagedKVCache))

@@ -134,7 +134,13 @@ def make_prefill_step(cfg, capacity: int):
 
 
 def make_serve_step(cfg):
-    """One decode step: (params, cache, tokens(b,1), pos) -> (logits, cache)."""
+    """One decode step:
+    (params, cache, tokens(b,1), pos) -> (logits, cache, pos + 1).
+
+    ``pos`` is carried *through* the jitted step (returned incremented)
+    so decode loops never rebuild the position scalar host-side each
+    iteration — rebuilding forced a host->device transfer per token.
+    """
 
     def serve_step(params, cache, tokens, pos, enc_out=None):
         batch = {"tokens": tokens}
@@ -143,9 +149,71 @@ def make_serve_step(cfg):
         positions = pos[None] if pos.ndim == 0 else pos
         logits, new_cache, _ = forward(cfg, params, batch, cache=cache,
                                        positions=positions)
-        return logits[:, -1], new_cache
+        return logits[:, -1], new_cache, pos + 1
 
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _where_slot(active, new, old, axis: int):
+    shp = [1] * new.ndim
+    shp[axis] = active.shape[0]
+    return jnp.where(active.reshape(shp), new, old)
+
+
+def _merge_inactive(new_cache, old_cache, active):
+    """Keep state rows of inactive slots from the previous step.
+
+    Inactive slots run through the forward with position -1: their
+    PagedKVCache scatters are already dropped in-kernel (shared pool —
+    nothing to merge), but ring/recurrent/ssm rows compute garbage
+    updates that must be masked back to the old state.  Grouped leaves
+    carry the stacked-layer dim first (slot axis 1); "rem" leaves are
+    slot-major (axis 0)."""
+    from repro.models.attention import PagedKVCache
+
+    def merge(n, o, axis):
+        def f(nl, ol):
+            if isinstance(nl, PagedKVCache):
+                return nl
+            return _where_slot(active, nl, ol, axis)
+
+        return jax.tree.map(f, n, o,
+                            is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+    out = {"groups": None, "rem": []}
+    if new_cache["groups"] is not None:
+        out["groups"] = merge(new_cache["groups"], old_cache["groups"], 1)
+    out["rem"] = [merge(n, o, 0)
+                  for n, o in zip(new_cache["rem"], old_cache["rem"])]
+    return out
+
+
+def make_paged_serve_step(cfg):
+    """One continuous-batching decode step over the paged serving cache.
+
+    (params, cache, tokens(S,1), lengths(S,), active(S,)) ->
+    (next_tokens(S,1), cache, lengths') — greedy argmax decode; inactive
+    slots are frozen (state merged back, length unchanged, token row is
+    garbage the scheduler ignores).  The signature is shape-stable in
+    everything but the cache pytree, so the whole churning batch re-enters
+    ONE compiled step; batch composition changes only flow through the
+    block tables / lengths *values*.
+    """
+
+    def paged_serve_step(params, cache, tokens, lengths, active):
+        positions = jnp.where(active, lengths, -1).astype(jnp.int32)[:, None]
+        logits, new_cache, _ = forward(cfg, params, {"tokens": tokens},
+                                       cache=cache, positions=positions)
+        new_cache = _merge_inactive(new_cache, cache, active)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        new_lengths = jnp.where(active, lengths + 1, lengths)
+        return tok[:, None], new_cache, new_lengths
+
+    return paged_serve_step
 
 
 # ---------------------------------------------------------------------------

@@ -213,6 +213,159 @@ def test_flash_schedule_causal_drops_tiles():
 
 
 # ---------------------------------------------------------------------------
+# Decode (paged) schedules + the page allocator (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+from repro.core.schedule import DecodeTileSchedule
+from repro.models.attention import PageSpec
+from repro.runtime.pages import OutOfPages, PagePool, pages_for
+
+
+def _pool_for(lengths, page_size, extra_pages=0):
+    """A pool sized to hold ``lengths``, with every slot grown to its
+    length — the allocator state one scheduler tick would produce."""
+    need = [pages_for(L, page_size) for L in lengths]
+    spec = PageSpec(num_pages=max(1, sum(need) + extra_pages),
+                    page_size=page_size,
+                    max_blocks=max(1, max(need, default=1)))
+    pool = PagePool(spec, len(lengths))
+    for i, L in enumerate(lengths):
+        pool.grow(i, L)
+    return pool, spec
+
+
+def _check_decode_tables(lengths, page_size, extra_pages):
+    """Rows visit each live page exactly once in block-table order, tail
+    k_lens are exact, carries bracket, inactive tail rows are inert —
+    and the allocator's invariants hold after building the state."""
+    pool, spec = _pool_for(lengths, page_size, extra_pages)
+    pool.check_invariants(list(lengths))
+    sched = DecodeTileSchedule(num_seqs=len(lengths), pages=spec.num_pages,
+                               page_size=page_size,
+                               max_blocks=spec.max_blocks)
+    import jax.numpy as jnp
+    table = np.asarray(sched.tables(jnp.asarray(pool.tables),
+                                    jnp.asarray(lengths, jnp.int32)))
+    assert table.dtype == np.int32
+    sched.validate_tables(table, pool.tables, np.asarray(lengths))
+
+
+_DECODE_CASES = [
+    ([0, 0, 0], 4, 2),       # all slots idle: one dummy row each
+    ([5], 4, 0),             # single seq, ragged tail
+    ([16, 16], 16, 0),       # exact page multiples
+    ([1, 33, 0, 7], 8, 3),   # mixed live/idle, multi-page walk
+    ([9, 9, 9, 9, 9], 3, 0), # every seq spans several pages
+    ([100], 8, 5),           # long single sequence
+]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(lengths=st.lists(st.integers(0, 70), min_size=1, max_size=6),
+           page_size=st.sampled_from([1, 4, 8, 16]),
+           extra_pages=st.integers(0, 8))
+    def test_decode_tables_coverage(lengths, page_size, extra_pages):
+        _check_decode_tables(lengths, page_size, extra_pages)
+else:
+    @pytest.mark.parametrize("lengths,page_size,extra_pages", _DECODE_CASES)
+    def test_decode_tables_coverage(lengths, page_size, extra_pages):
+        _check_decode_tables(lengths, page_size, extra_pages)
+
+
+def test_decode_schedule_static_bounds():
+    """max_tiles caps the walk pool-wide: live pages are exclusively
+    owned, so compute tiles can never exceed min(S*B, pages), and every
+    slot adds at most one dummy row."""
+    sched = DecodeTileSchedule(num_seqs=3, pages=5, page_size=4,
+                               max_blocks=4)
+    assert sched.max_tiles == 5 + 3
+    assert sched.max_len == 16
+    import jax.numpy as jnp
+    bt = jnp.asarray([[0, 1, 0, 0], [2, 3, 4, 0], [0, 0, 0, 0]], jnp.int32)
+    lengths = np.asarray([8, 12, 0])
+    table = np.asarray(sched.tables(bt, jnp.asarray(lengths)))
+    sched.validate_tables(table, np.asarray(bt), lengths)
+    # 2 + 3 live pages + 1 dummy for the idle slot = 6 active rows
+    active = (table[:, 3] | table[:, 4] | (table[:, 2] > 0)).sum()
+    assert active == 6 <= sched.max_tiles
+
+
+def _check_pool_ops(ops, page_size, num_pages, num_slots):
+    """Allocator conservation under an arbitrary grow/release trace: no
+    page double-owned, free list + live pages exactly partition the
+    pool, block tables cover exactly ceil(len/page) pages per slot."""
+    spec = PageSpec(num_pages=num_pages, page_size=page_size,
+                    max_blocks=num_pages)
+    pool = PagePool(spec, num_slots)
+    lengths = [0] * num_slots
+    for kind, slot, length in ops:
+        slot %= num_slots
+        if kind == "grow":
+            try:
+                pool.grow(slot, length)
+                lengths[slot] = max(lengths[slot], length)
+            except (OutOfPages, ValueError):
+                pass  # rejected (queue / unmappable) — state untouched
+        else:
+            pool.release(slot)
+            lengths[slot] = 0
+        pool.check_invariants(lengths)
+        for i in range(num_slots):
+            assert pool.slot_blocks(i) == pages_for(lengths[i], page_size)
+    assert pool.free_pages == num_pages - sum(
+        pages_for(L, page_size) for L in lengths)
+
+
+_POOL_CASES = [
+    ([("grow", 0, 9), ("grow", 1, 5), ("release", 0, 0),
+      ("grow", 2, 12), ("release", 1, 0), ("grow", 0, 3)], 4, 6, 3),
+    ([("grow", 0, 50)], 4, 2, 1),  # oversized growth only queues
+    ([("grow", 0, 8), ("grow", 0, 8), ("release", 0, 0),
+      ("release", 0, 0)], 8, 2, 1),  # idempotent re-release
+]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["grow", "release"]),
+                  st.integers(0, 5), st.integers(0, 40)),
+        min_size=1, max_size=20),
+        page_size=st.sampled_from([2, 4, 8]),
+        num_pages=st.integers(1, 12),
+        num_slots=st.integers(1, 4))
+    def test_page_pool_conservation(ops, page_size, num_pages, num_slots):
+        _check_pool_ops(ops, page_size, num_pages, num_slots)
+else:
+    @pytest.mark.parametrize("ops,page_size,num_pages,num_slots",
+                             _POOL_CASES)
+    def test_page_pool_conservation(ops, page_size, num_pages, num_slots):
+        _check_pool_ops(ops, page_size, num_pages, num_slots)
+
+
+def test_page_pool_faults():
+    """OutOfPages when the free list runs dry; ValueError when a length
+    can never be mapped; release frees exactly the victim's pages."""
+    pool = PagePool(PageSpec(num_pages=4, page_size=4, max_blocks=3), 2)
+    pool.grow(0, 12)  # 3 pages
+    assert pool.free_pages == 1
+    with pytest.raises(OutOfPages):
+        pool.grow(1, 8)  # needs 2, only 1 free
+    assert pool.free_pages == 1  # failed growth must not leak
+    with pytest.raises(ValueError):
+        pool.grow(1, 13)  # 4 pages > max_blocks
+    assert pool.release(0) == 3
+    assert pool.free_pages == 4
+    assert pool.grow(1, 8) and pool.slot_blocks(1) == 2
+    pool.check_invariants([0, 8])
+
+
+def test_pages_for():
+    assert [pages_for(L, 4) for L in (0, 1, 4, 5, 8)] == [0, 1, 1, 2, 2]
+
+
+# ---------------------------------------------------------------------------
 # Launch accounting
 # ---------------------------------------------------------------------------
 

@@ -100,7 +100,7 @@ def test_serving_generates_from_trained_model(tmp_path):
     out = train(step_fn, params, opt_state, batch_fn, loop)
     from repro.launch.serve import generate
     prompts = jnp.asarray(ds.host_batch(999)["tokens"][:4, :16])
-    tokens, _, _ = generate(cfg, out["params"], prompts, gen_steps=8)
+    tokens = generate(cfg, out["params"], prompts, gen_steps=8)["tokens"]
     succ = ds._succ
     prev = np.asarray(prompts[:, -1])
     hits = total = 0

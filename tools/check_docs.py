@@ -13,10 +13,14 @@ Four contracts across the doc surfaces:
   * every exported ``src/repro/core`` symbol (public top-level class or
     function) must carry a docstring — the engine is the system's public
     API and an undocumented export is a regression;
-  * DESIGN.md §10 + §11 (the schedule-layer and backward-passes
-    chapters) must together name every kernel family the engine
-    registers — forward families in §10, ``*_bwd`` families in §11 —
-    the family lists drift otherwise.
+  * DESIGN.md §10-§12 (the schedule-layer, backward-passes and
+    serving-runtime chapters) must together name every kernel family
+    the engine registers — forward families in §10, ``*_bwd`` families
+    in §11, the decode family in §12 — the family lists drift
+    otherwise;
+  * DESIGN.md §12 must keep naming the serving-runtime surface it
+    documents (scheduler → pages → decode schedule → single launch) —
+    the chapter drifts from the runtime otherwise.
 
 Stdlib only (``ast``-based, no imports of the package needed for the
 docstring gate); exits non-zero with one line per violation.
@@ -156,29 +160,70 @@ def engine_families() -> list:
     return re.findall(r'"(\w+)"\s*:\s*"repro\.kernels', m.group(1))
 
 
+def _design_section(design: str, num: str) -> str:
+    m = re.search(rf"^## §{num}\b.*?(?=^## §|\Z)", design, re.S | re.M)
+    return m.group(0) if m else ""
+
+
 def check_design_families() -> list:
-    """DESIGN.md §10-§11 together name every registered kernel family
+    """DESIGN.md §10-§12 together name every registered kernel family
     (forward families in the schedule-layer chapter, ``*_bwd`` families
-    in the backward-passes chapter)."""
+    in the backward-passes chapter, the decode family in the serving
+    chapter)."""
     design = (ROOT / "DESIGN.md").read_text()
     section = ""
     missing_chapters = []
-    for num in ("10", "11"):
-        m = re.search(rf"^## §{num}\b.*?(?=^## §|\Z)", design, re.S | re.M)
-        if m:
-            section += m.group(0)
+    for num in ("10", "11", "12"):
+        chapter = _design_section(design, num)
+        if chapter:
+            section += chapter
         else:
             missing_chapters.append(
                 f"DESIGN.md: no '## §{num}' section (the family matrices "
-                f"live in §10 + §11)")
+                f"live in §10-§12)")
     if missing_chapters:
         return missing_chapters
     families = engine_families()
     if not families:
         return ["tools/check_docs.py: could not parse _FAMILY_MODULES "
                 "from core/engine.py"]
-    return [f"DESIGN.md §10-§11: registered family {fam!r} missing from "
+    return [f"DESIGN.md §10-§12: registered family {fam!r} missing from "
             f"the family lists" for fam in families if fam not in section]
+
+
+# The serving-runtime surface DESIGN.md §12 documents.  Each entry is
+# (name-that-must-appear-in-§12, repo file that must still define it) —
+# both sides checked, so the gate catches the chapter rotting away from
+# the runtime AND the runtime rotting away from the chapter.
+_SERVING_SURFACE = (
+    ("ContinuousBatchingEngine", "src/repro/runtime/batching.py"),
+    ("PagePool", "src/repro/runtime/pages.py"),
+    ("DecodeTileSchedule", "src/repro/core/schedule.py"),
+    ("make_paged_serve_step", "src/repro/runtime/steps.py"),
+    ("BENCH_serve.json", "benchmarks/serve_trace.py"),
+)
+
+
+def check_design_serving() -> list:
+    """DESIGN.md §12 drift gate: the serving chapter must name each
+    layer of the runtime (scheduler, page allocator, decode schedule,
+    paged step, benchmark artifact), and each named symbol must still
+    exist in the file that owns it."""
+    design = (ROOT / "DESIGN.md").read_text()
+    chapter = _design_section(design, "12")
+    if not chapter:
+        return ["DESIGN.md: no '## §12' section (the serving-runtime "
+                "chapter)"]
+    errors = []
+    for name, rel in _SERVING_SURFACE:
+        if name not in chapter:
+            errors.append(f"DESIGN.md §12: serving surface {name!r} "
+                          f"missing from the chapter")
+        src = ROOT / rel
+        if not src.exists() or name.split(".")[0] not in src.read_text():
+            errors.append(f"{rel}: no longer defines {name!r} named by "
+                          f"DESIGN.md §12")
+    return errors
 
 
 def main() -> int:
@@ -187,7 +232,8 @@ def main() -> int:
         print("check_docs: DESIGN.md has no '## §n' sections", file=sys.stderr)
         return 1
     errors = (check_design_refs(sections) + check_readme()
-              + check_core_docstrings() + check_design_families())
+              + check_core_docstrings() + check_design_families()
+              + check_design_serving())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
@@ -195,7 +241,7 @@ def main() -> int:
                      for p in (ROOT / "src").rglob("*.py"))
         print(f"check_docs: OK ({len(sections)} DESIGN sections, "
               f"{n_refs} src citations, README verified, core docstrings "
-              f"+ §10-§11 family lists verified)")
+              f"+ §10-§12 family lists + §12 serving surface verified)")
     return 1 if errors else 0
 
 
