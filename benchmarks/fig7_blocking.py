@@ -38,6 +38,25 @@ def run():
              f"het_util={het.utilization:.3f};hom_util={hom.utilization:.3f};"
              f"hom_predicted_us={hom.predicted_seconds()*1e6:.1f}")
 
+    # Quant axis (DESIGN.md §13): the measured host int8 probe next to the
+    # model peak the planner prices narrow plans with, and the planner's
+    # predicted narrow-vs-wide delta on one sweep shape (wire-byte traffic
+    # + int8 MAC pricing both feed _predict_seconds).
+    from repro.core.descriptor import resolve_quant
+    from repro.core.machine import TPU_V5E
+    from repro.core.microbench import probe_matmul_flops
+    r = probe_matmul_flops("int8", size=256, iters=3)
+    emit("fig7/quant_probe_int8", 2 * 256**3 / (r.value * 1e9) * 1e6,
+         f"host_gops={r.value:.1f};"
+         f"target_peak_int8_gops={TPU_V5E.peak('int8')/1e9:.0f}")
+    d32 = GemmDescriptor(m=640, n=640, k=K)
+    dq = GemmDescriptor(m=640, n=640, k=K, in_dtype="int8",
+                        quant=resolve_quant("int8"))
+    p32, pq = plan_gemm(d32), plan_gemm(dq)
+    emit("fig7/quant_predicted_640", pq.predicted_seconds() * 1e6,
+         f"wide_predicted_us={p32.predicted_seconds()*1e6:.2f};"
+         f"in_bytes_int8={dq.in_bytes};in_bytes_f32={d32.in_bytes}")
+
     # Measured model-vs-autotuned delta through the engine's BUILD/RUN
     # stages (the three-tier policy's middle tier, run explicitly).
     from repro.kernels.gemm import gemm

@@ -1,0 +1,158 @@
+"""Low-precision axis benchmark (DESIGN.md §13).
+
+Two phases, one artifact:
+
+  * **GEMM sweep** — the fig 8/9 shapes (M=N, K=512) run wide (f32) and
+    quantized (int8 full and W8A16), all through the fused single-launch
+    lowering, recording GFLOP/s, the descriptor's wire-byte traffic
+    (``in_bytes`` — the planner's own accounting of what quantization
+    saves), and the traced launch counts proving the dequant epilogue
+    never costs a second launch.
+  * **W8A16 serving delta** — the serve_trace Poisson run (DESIGN.md
+    §12) with ``quantize_model`` weights + int8 KV pools
+    (``PageSpec(kv_quant="int8")``) against the wide baseline: tokens/s
+    delta plus the fraction of tokens that match the wide run.  Unlike
+    ``serve_trace.py`` there is no token-identity *assert* — quantized
+    logits may legitimately flip a token — the match fraction is
+    recorded instead.
+
+Writes ``BENCH_quant.json``; ``run(smoke=True)`` is the CI variant
+(reduced sizes/trace, same code paths), wired into
+``benchmarks/run.py --smoke``.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import GemmDescriptor, engine
+from repro.core.config import use
+from repro.core.descriptor import resolve_quant
+from repro.kernels.gemm import gemm
+
+SIZES = [16, 64, 80, 128, 250, 512]
+SMOKE_SIZES = [16, 80]
+K = 512
+QUANT_JSON = "BENCH_quant.json"
+
+TRACE_FULL = (8, 0.6, (8, 16), (4, 10), 4, 48, 8, 8)
+TRACE_SMOKE = (3, 0.5, (6, 10), (3, 5), 3, 24, 8, 6)
+
+
+def _launches(fn) -> int:
+    before = engine.stats().get("gemm", {}).get("launches", 0)
+    jax.block_until_ready(fn())
+    return engine.stats()["gemm"]["launches"] - before
+
+
+def _sweep(sizes, iters, warmup, entries):
+    rng = np.random.default_rng(0)
+    for mn in sizes:
+        a = jnp.asarray(rng.standard_normal((mn, K)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((K, mn)), jnp.float32)
+        flops = 2 * mn * mn * K
+        with use(backend="pallas"):
+            fns = {
+                "f32": jax.jit(lambda a, b: gemm(a, b, fused=True)),
+                "int8": jax.jit(lambda a, b: gemm(a, b, quant="int8",
+                                                  fused=True)),
+                "w8a16": jax.jit(lambda a, b: gemm(a, b, quant="w8a16",
+                                                   fused=True)),
+            }
+            us = {k: time_fn(f, a, b, iters=iters, warmup=warmup)
+                  for k, f in fns.items()}
+            launches = {
+                k: _launches(lambda q=q: gemm(a, b, quant=q, fused=True))
+                for k, q in [("f32", False), ("int8", "int8"),
+                             ("w8a16", "w8a16")]}
+        d32 = GemmDescriptor(m=mn, n=mn, k=K)
+        dq = GemmDescriptor(m=mn, n=mn, k=K, in_dtype="int8",
+                            quant=resolve_quant("int8"))
+        entry = {
+            "m": mn, "n": mn, "k": K,
+            "in_bytes_f32": d32.in_bytes, "in_bytes_int8": dq.in_bytes,
+            "bytes_saved": d32.in_bytes - dq.in_bytes,
+        }
+        for kind in ("f32", "int8", "w8a16"):
+            entry[f"{kind}_us"] = round(us[kind], 1)
+            entry[f"{kind}_gflops"] = round(flops / us[kind] / 1e3, 2)
+            entry[f"{kind}_launches"] = launches[kind]
+        entry["int8_speedup"] = round(us["f32"] / max(us["int8"], 1e-9), 3)
+        entries[f"gemm_{mn}"] = entry
+        emit(f"quant_gemm/{mn}x{mn}", us["int8"],
+             f"f32_us={us['f32']:.0f};w8a16_us={us['w8a16']:.0f};"
+             f"int8_gflops={entry['int8_gflops']};"
+             f"bytes_saved={entry['bytes_saved']};"
+             f"launches={launches['int8']}")
+    return entries
+
+
+def _serve_phase(cfg, params, backend, trace_args, seed, kv_quant=None):
+    from repro.models.attention import PageSpec
+    from repro.runtime.batching import ContinuousBatchingEngine, \
+        poisson_trace
+    n_req, rate, plens, mnew, slots, pages, psize, blocks = trace_args
+    reqs = poisson_trace(num_requests=n_req, rate=rate, prompt_lens=plens,
+                         max_new=mnew, vocab_size=cfg.vocab_size, seed=seed)
+    with use(backend=backend):
+        engine.reset_stats(entries=False)
+        serving = ContinuousBatchingEngine(
+            cfg, params, num_slots=slots,
+            spec=PageSpec(pages, psize, blocks, kv_quant=kv_quant))
+        result = serving.run(reqs)
+    return reqs, result
+
+
+def _serve_delta(trace_args, seed, entries):
+    from repro.configs import get_config, reduced_config
+    from repro.models import LanguageModel
+    from repro.optim.compression import quantize_model
+    cfg = reduced_config(get_config("qwen3-0.6b"))
+    params = LanguageModel.init(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_model(params, "w8a16")
+
+    reqs, wide = _serve_phase(cfg, params, "pallas", trace_args, seed)
+    _, quant = _serve_phase(cfg, qparams, "pallas", trace_args, seed,
+                            kv_quant="int8")
+    match = total = 0
+    for r in reqs:
+        w = np.asarray(wide["outputs"][r.rid])
+        q = np.asarray(quant["outputs"][r.rid])
+        match += int(np.sum(w == q))
+        total += len(w)
+    mw, mq = wide["metrics"], quant["metrics"]
+    entries["serve"] = {
+        "arch": cfg.name, "requests": mw["requests"],
+        "wide_tokens_per_s": round(mw["tokens_per_s"], 1),
+        "w8a16_tokens_per_s": round(mq["tokens_per_s"], 1),
+        "tokens_per_s_delta": round(
+            mq["tokens_per_s"] - mw["tokens_per_s"], 1),
+        "speedup": round(mq["tokens_per_s"]
+                         / max(mw["tokens_per_s"], 1e-9), 3),
+        "token_match_frac": round(match / max(total, 1), 3),
+        "kv_quant": "int8",
+    }
+    e = entries["serve"]
+    emit("quant_gemm/serve_w8a16", 0,
+         f"wide_tok_s={e['wide_tokens_per_s']};"
+         f"w8a16_tok_s={e['w8a16_tokens_per_s']};"
+         f"speedup={e['speedup']};"
+         f"token_match={e['token_match_frac']}")
+
+
+def run(smoke: bool = False, seed: int = 0):
+    sizes = SMOKE_SIZES if smoke else SIZES
+    iters, warmup = (2, 1) if smoke else (3, 1)
+    entries = {}
+    _sweep(sizes, iters, warmup, entries)
+    _serve_delta(TRACE_SMOKE if smoke else TRACE_FULL, seed, entries)
+    with open(QUANT_JSON, "w") as f:
+        json.dump({"mode": "smoke" if smoke else "full",
+                   "entries": entries}, f, indent=1, sort_keys=True)
+    emit("quant_gemm/json", 0, f"wrote={QUANT_JSON};entries={len(entries)}")
+
+
+if __name__ == "__main__":
+    run(smoke=True)

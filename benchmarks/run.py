@@ -24,15 +24,20 @@ warm — so every table is per-phase, not cumulative.
   serve   — continuous-batching Poisson trace through the paged serving
             runtime (DESIGN.md §12): tokens/s + p50/p99 per-token
             latency + the flat-launch-count proof (BENCH_serve.json)
+  quant   — the low-precision axis (DESIGN.md §13): int8/W8A16 vs f32
+            GEMM throughput + wire-byte savings on the fig89 shapes,
+            plus the W8A16 + KV-int8 serving tokens/s delta
+            (BENCH_quant.json)
 
 ``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep plus
-the grouped, flash, train and serve suites at reduced size, exercising
-the fused single-launch GEMM, the scheduled grouped-GEMM and flash
-paths, the scheduled backward walks (DESIGN.md §11) *and* the
-continuous-batching decode path (DESIGN.md §12) end-to-end on every PR,
-still emitting ``BENCH_gemm_fused.json`` + ``BENCH_grouped_fused.json``
-+ ``BENCH_flash_fused.json`` + ``BENCH_train.json`` +
-``BENCH_serve.json``.
+the grouped, flash, train, serve and quant suites at reduced size,
+exercising the fused single-launch GEMM, the scheduled grouped-GEMM and
+flash paths, the scheduled backward walks (DESIGN.md §11), the
+continuous-batching decode path (DESIGN.md §12) *and* the quantized
+execution axis (DESIGN.md §13) end-to-end on every PR, still emitting
+``BENCH_gemm_fused.json`` + ``BENCH_grouped_fused.json`` +
+``BENCH_flash_fused.json`` + ``BENCH_train.json`` + ``BENCH_serve.json``
++ ``BENCH_quant.json``.
 """
 import argparse
 import sys
@@ -48,8 +53,8 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
                             fig45_alignment, fig7_blocking, fig89_gemm_sweep,
-                            flash_fused, grouped_fused, serve_trace,
-                            train_step)
+                            flash_fused, grouped_fused, quant_gemm,
+                            serve_trace, train_step)
     suites = {
         "table1": table1_throughput.run,
         "fig1": fig1_scaling.run,
@@ -61,6 +66,7 @@ def main() -> None:
         "flash": flash_fused.run,
         "train": train_step.run,
         "serve": serve_trace.run,
+        "quant": quant_gemm.run,
     }
     if args.smoke:
         if args.only:
@@ -69,7 +75,8 @@ def main() -> None:
                   "grouped": lambda: grouped_fused.run(smoke=True),
                   "flash": lambda: flash_fused.run(smoke=True),
                   "train": lambda: train_step.run(smoke=True),
-                  "serve": lambda: serve_trace.run(smoke=True)}
+                  "serve": lambda: serve_trace.run(smoke=True),
+                  "quant": lambda: quant_gemm.run(smoke=True)}
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     from repro.core import engine

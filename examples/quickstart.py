@@ -60,3 +60,30 @@ with use(backend="pallas"):
     out_nt = matmul(a, bt, layout="nt")
 err = float(jnp.max(jnp.abs(out_nt - ref_gemm(a, bt, layout="nt"))))
 print(f"nt-layout (fused transpose) max err: {err:.2e}")
+
+# --- 6. the low-precision axis: int8 with a fused dequant epilogue -------
+# `quant="int8"` quantizes both operands to int8 wire dtype, accumulates
+# exactly in int32, and folds the dequant multiply into the epilogue —
+# still ONE pallas_call (DESIGN.md §13).  The same spec can be set
+# ambiently with `configure(quant=...)` / `use(quant=...)` or the
+# REPRO_QUANT env var; `quant=False` opts a single call back out.
+from repro.kernels.gemm import gemm
+from repro.optim.compression import quantize_operand
+
+engine.reset_stats()
+with use(backend="pallas"):
+    out_q = gemm(a, b, quant="int8")
+print(f"quantized dispatch launches: {engine.stats()['gemm']['launches']}")
+assert engine.stats()["gemm"]["launches"] == 1
+
+# parity vs the dequantize-then-matmul reference: the only error left
+# is the int8 rounding itself (int32 accumulation is exact).
+from repro.core.descriptor import resolve_quant
+spec = resolve_quant("int8")
+aq, sa = quantize_operand(a, spec, axis=0)
+bq, sb = quantize_operand(b, spec, axis=1)
+ref_q = (aq.astype(jnp.float32) * sa[:, None]) \
+    @ (bq.astype(jnp.float32) * sb[None, :])
+err = float(jnp.max(jnp.abs(out_q - ref_q)))
+print(f"int8 vs dequant reference max err: {err:.2e}")
+assert err < 1e-3

@@ -51,29 +51,50 @@ _TIME_ITERS = 3
 # Plan <-> JSON records
 # ---------------------------------------------------------------------------
 
+def _desc_dtypes(desc: KernelDescriptor) -> list:
+    """The full dtype identity of one descriptor — every dtype-ish field
+    plus the quant spec — recorded alongside cached knobs and re-checked
+    on replay.  The descriptor's ``cache_key()`` already separates these
+    (``dataclasses.astuple`` recurses into the nested ``QuantSpec``), so
+    this is a belt-and-braces guard: a record written under a different
+    keying scheme (or hand-edited) can never replay a wide plan onto a
+    quantized problem or vice versa."""
+    vals = []
+    for attr in ("in_dtype", "acc_dtype", "out_dtype", "dtype"):
+        v = getattr(desc, attr, None)
+        if v is not None:
+            vals.append(f"{attr}={v}")
+    vals.append(f"quant={getattr(desc, 'quant', None)!r}")
+    return vals
+
+
 def plan_to_record(plan: Any) -> Dict[str, Any]:
     """Serialize one plan's tiling knobs (the descriptor is the cache key,
-    so only the knobs travel)."""
+    so only the knobs travel — plus the dtype fingerprint as a replay
+    guard)."""
     if isinstance(plan, BlockingPlan):
-        return {"family": "gemm",
-                "regions": [[r.row0, r.col0, r.rows, r.cols, r.bm, r.bn]
-                            for r in plan.regions],
-                "bk": plan.bk, "heterogeneous": plan.heterogeneous,
-                "fused": plan.fused}
-    if isinstance(plan, FlashPlan):
-        return {"family": "flash_attention",
-                "block_q": plan.block_q, "block_k": plan.block_k,
-                "fused": plan.fused}
-    if isinstance(plan, GroupedGemmPlan):
-        return {"family": "grouped_gemm",
-                "bm": plan.bm, "bk": plan.bk, "bn": plan.bn,
-                "fused": plan.fused}
-    if isinstance(plan, TransposePlan):
-        return {"family": "transpose", "bt": plan.bt}
-    if isinstance(plan, SsdChunkPlan):
-        return {"family": "ssd_chunk", "fits_vmem": plan.fits_vmem,
-                "fused": plan.fused}
-    raise TypeError(f"unknown plan type: {type(plan).__name__}")
+        rec = {"family": "gemm",
+               "regions": [[r.row0, r.col0, r.rows, r.cols, r.bm, r.bn]
+                           for r in plan.regions],
+               "bk": plan.bk, "heterogeneous": plan.heterogeneous,
+               "fused": plan.fused}
+    elif isinstance(plan, FlashPlan):
+        rec = {"family": "flash_attention",
+               "block_q": plan.block_q, "block_k": plan.block_k,
+               "fused": plan.fused}
+    elif isinstance(plan, GroupedGemmPlan):
+        rec = {"family": "grouped_gemm",
+               "bm": plan.bm, "bk": plan.bk, "bn": plan.bn,
+               "fused": plan.fused}
+    elif isinstance(plan, TransposePlan):
+        rec = {"family": "transpose", "bt": plan.bt}
+    elif isinstance(plan, SsdChunkPlan):
+        rec = {"family": "ssd_chunk", "fits_vmem": plan.fits_vmem,
+               "fused": plan.fused}
+    else:
+        raise TypeError(f"unknown plan type: {type(plan).__name__}")
+    rec["dtypes"] = _desc_dtypes(plan.desc)
+    return rec
 
 
 def plan_from_record(desc: KernelDescriptor,
@@ -83,6 +104,11 @@ def plan_from_record(desc: KernelDescriptor,
     try:
         family = record["family"]
         if family != desc.family:
+            return None
+        # Dtype fingerprint guard (pre-guard records lack it: accept —
+        # their entry key was already dtype-separated via cache_key()).
+        want = record.get("dtypes")
+        if want is not None and list(want) != _desc_dtypes(desc):
             return None
         if family == "gemm":
             regions = tuple(Region(*map(int, r)) for r in record["regions"])

@@ -222,11 +222,16 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
     Both extras are calibrated against BENCH_gemm_fused.json.
     """
     k = desc.k
-    in_sz = jnp.dtype(desc.in_dtype).itemsize
+    # Wire itemsizes: under a quant spec (DESIGN.md §13) the staged
+    # operands are the narrow dtype — the planner charges the bytes that
+    # actually move, which is the whole point of the low-precision axis.
+    a_sz = desc.a_wire_itemsize
+    b_sz = desc.b_wire_itemsize
     out_sz = jnp.dtype(desc.out_dtype).itemsize
     issued = sum(r.issued_macs(k) for r in regions)
-    compute_s = 2.0 * issued / machine.peak(desc.in_dtype)
-    traffic = sum(r.input_elems(k) for r in regions) * in_sz
+    compute_s = 2.0 * issued / machine.peak(desc.compute_dtype)
+    traffic = sum(r.num_microkernels * (r.bm * a_sz + r.bn * b_sz) * k
+                  for r in regions)
     out_elems = sum(r.rows * r.cols for r in regions)
     traffic += out_elems * out_sz * (2 if desc.accumulate else 1)
     memory_s = traffic / machine.hbm_bw
@@ -243,7 +248,8 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
     elif len(regions) > 1:
         # Operand slices are copied in and region outputs copied out again
         # when stitching C — traffic the fused path never generates.
-        stitch_bytes = sum((r.rows + r.cols) * k for r in regions) * in_sz
+        stitch_bytes = sum((r.rows * a_sz + r.cols * b_sz) * k
+                           for r in regions)
         stitch_bytes += 2 * out_elems * out_sz
         stitch_s = STITCH_DISCOUNT * stitch_bytes / machine.hbm_bw
     # compute and memory overlap in the pipelined kernel: take max + overhead
@@ -260,12 +266,12 @@ def _pick_bk(desc: GemmDescriptor, bm: int, bn: int,
     panels amortize the systolic pipeline, so we take the largest aligned
     bk <= K subject to VMEM.
     """
-    in_sz = jnp.dtype(desc.in_dtype).itemsize
     acc_bytes = bm * bn * 4
     budget = machine.vmem_bytes // 2 - acc_bytes  # conservative half-VMEM
     if budget <= 0:
         return machine.lanes
-    bk_max = budget // (2 * in_sz * (bm + bn))
+    bk_max = budget // (2 * (desc.a_wire_itemsize * bm
+                             + desc.b_wire_itemsize * bn))
     sub, lane = machine.reg_tile(desc.in_dtype)
     bk = max(lane, (bk_max // lane) * lane)
     bk = min(bk, round_up(desc.k, lane), 2048)
@@ -285,9 +291,12 @@ def fused_legal(desc: GemmDescriptor,
     over them in-kernel, so it is only legal when they all fit.  Batch is a
     grid dimension — only one batch slice is resident at a time.
     """
-    in_sz = jnp.dtype(desc.in_dtype).itemsize
     out_sz = jnp.dtype(desc.out_dtype).itemsize
-    need = (desc.m * desc.k + desc.k * desc.n) * in_sz
+    need = (desc.m * desc.k * desc.a_wire_itemsize
+            + desc.k * desc.n * desc.b_wire_itemsize)
+    if desc.quant is not None:
+        # staged scale operands: sa (m, 1) + sb (1, n), f32
+        need += (desc.m + desc.n) * 4
     need += desc.m * desc.n * out_sz * (2 if desc.accumulate else 1)
     need += ACC_BUDGET_ELEMS * 4  # accumulator scratch upper bound
     return need <= machine.vmem_bytes
@@ -629,8 +638,13 @@ def grouped_fused_legal(desc: GroupedGemmDescriptor,
     panel; legal only when they all fit.
     """
     isz = jnp.dtype(desc.dtype).itemsize
-    need = (desc.t * desc.k + desc.t * desc.n) * isz
-    need += 2 * desc.k * desc.n * isz  # double-buffered expert panel
+    x_sz = getattr(desc, "x_wire_itemsize", isz)
+    w_sz = getattr(desc, "w_wire_itemsize", isz)
+    need = desc.t * desc.k * x_sz + desc.t * desc.n * isz
+    need += 2 * desc.k * desc.n * w_sz  # double-buffered expert panel
+    if getattr(desc, "quant", None) is not None:
+        # staged scale operands: sx (t, 1) whole + one sw expert row, f32
+        need += (desc.t + desc.n) * 4
     need += ACC_BUDGET_ELEMS * 4       # accumulator scratch upper bound
     return need <= machine.vmem_bytes
 
@@ -639,6 +653,11 @@ def _predict_grouped_seconds(desc: GroupedGemmDescriptor, bm: int, bk: int,
                              bn: int, machine: MachineModel,
                              fused: bool = False) -> float:
     isz = jnp.dtype(desc.dtype).itemsize
+    # Wire itemsizes / compute dtype (quant axis, DESIGN.md §13): backward
+    # descriptors carry no quant spec and fall back to the wide dtype.
+    x_sz = getattr(desc, "x_wire_itemsize", isz)
+    w_sz = getattr(desc, "w_wire_itemsize", isz)
+    compute_dt = getattr(desc, "compute_dtype", desc.dtype)
     gn = ceil_div(desc.n, bn)
     gk = ceil_div(desc.k, bk)
     if fused:
@@ -657,8 +676,9 @@ def _predict_grouped_seconds(desc: GroupedGemmDescriptor, bm: int, bk: int,
         stitch_s = stitch_bytes / machine.hbm_bw
     steps = gm * gn * gk
     issued = 2 * gm * bm * gn * bn * desc.k
-    compute_s = issued / machine.peak(desc.dtype)
-    traffic = steps * (bm * bk + bk * bn) * isz + gm * bm * desc.n * isz
+    compute_s = issued / machine.peak(compute_dt)
+    traffic = (steps * (bm * bk * x_sz + bk * bn * w_sz)
+               + gm * bm * desc.n * isz)
     memory_s = traffic / machine.hbm_bw
     return (max(compute_s, memory_s) + steps * machine.step_overhead_s
             + machine.launch_overhead_s + stitch_s)

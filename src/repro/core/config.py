@@ -23,9 +23,18 @@ serves a request (generated SME kernel vs vendor BLAS).  Ours has more:
                     single-launch fused or the multi-launch / pad-scatter
                     lowering (``engine.resolve_fused``).
 
+  * ``quant``     — ambient low-precision spec (DESIGN.md §13) applied by
+                    the GEMM-family public entry points (``gemm``,
+                    ``grouped_gemm``) when a call does not pass its own:
+                    ``None`` (wide, the default), a
+                    :class:`~repro.core.descriptor.QuantSpec`, or a
+                    shorthand string (``"int8"``/``"w8a16"``/``"fp8"``).
+                    Per call, ``quant=False`` opts out of the ambient
+                    spec.
+
 Env-var overrides seed the process default at import: ``REPRO_AUTOTUNE=1``,
 ``REPRO_TUNING_CACHE=/path/to/cache.json``, ``REPRO_AUTOTUNE_BUDGET=K``,
-``REPRO_FUSED=auto|on|off``.
+``REPRO_FUSED=auto|on|off``, ``REPRO_QUANT=int8|w8a16|fp8``.
 
 Configuration is layered: a process-wide default (``configure``) under a
 thread-local override stack (``use`` context manager), so a serving thread
@@ -42,6 +51,7 @@ import os
 import threading
 from typing import Optional
 
+from .descriptor import QuantSpec, resolve_quant
 from .machine import DEFAULT_MACHINE, MachineModel, get_machine
 
 BACKENDS = ("xla", "pallas")
@@ -65,6 +75,9 @@ class EngineConfig:
     # "auto" honors the plan's fused bit; "on"/"off" force the
     # single-launch / multi-launch (or pad-scatter) lowering.
     fused: str = "auto"
+    # Ambient quant spec for the GEMM-family entry points (DESIGN.md
+    # §13); None = wide execution unless a call passes its own.
+    quant: Optional[QuantSpec] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -76,11 +89,22 @@ class EngineConfig:
         if self.fused not in FUSED_MODES:
             raise ValueError(f"fused must be one of {FUSED_MODES}, "
                              f"got {self.fused!r}")
+        if self.quant is not None and not isinstance(self.quant, QuantSpec):
+            raise ValueError(f"quant must be None or a QuantSpec, "
+                             f"got {self.quant!r}")
 
     def replace(self, **kw) -> "EngineConfig":
         kw = {k: v for k, v in kw.items() if v is not None}
         if isinstance(kw.get("machine"), str):
             kw["machine"] = get_machine(kw["machine"])
+        if "quant" in kw:
+            # quant=False is the explicit off switch (None means "leave
+            # unchanged", matching tuning_cache="" semantics).
+            kw["quant"] = resolve_quant(kw["quant"])
+            if kw["quant"] is None:
+                return dataclasses.replace(
+                    self, **{k: v for k, v in kw.items() if k != "quant"},
+                    quant=None)
         return dataclasses.replace(self, **kw)
 
 
@@ -109,12 +133,21 @@ def _env_default() -> EngineConfig:
             warnings.warn(f"ignoring REPRO_FUSED={fused!r}: "
                           f"must be one of {FUSED_MODES}")
         fused = "auto"
+    quant = None
+    raw = os.environ.get("REPRO_QUANT", "").lower()
+    if raw and raw not in ("0", "false", "no", "off", "none"):
+        try:
+            quant = resolve_quant(raw)
+        except ValueError as e:
+            import warnings
+            warnings.warn(f"ignoring REPRO_QUANT={raw!r}: {e}")
     return EngineConfig(
         autotune=os.environ.get("REPRO_AUTOTUNE", "").lower()
         in ("1", "true", "yes", "on"),
         autotune_budget=budget,
         tuning_cache=os.environ.get("REPRO_TUNING_CACHE") or None,
         fused=fused,
+        quant=quant,
     )
 
 
@@ -140,14 +173,15 @@ def configure(*, backend: Optional[str] = None,
               machine=None, autotune: Optional[bool] = None,
               autotune_budget: Optional[int] = None,
               tuning_cache: Optional[str] = None,
-              fused: Optional[str] = None) -> EngineConfig:
+              fused: Optional[str] = None, quant=None) -> EngineConfig:
     """Mutate the process-wide default (all threads without an override)."""
     global _DEFAULT
     with _default_lock:
         _DEFAULT = _DEFAULT.replace(backend=backend, interpret=interpret,
                                     machine=machine, autotune=autotune,
                                     autotune_budget=autotune_budget,
-                                    tuning_cache=tuning_cache, fused=fused)
+                                    tuning_cache=tuning_cache, fused=fused,
+                                    quant=quant)
         return _DEFAULT
 
 
@@ -155,14 +189,15 @@ def configure(*, backend: Optional[str] = None,
 def use(*, backend: Optional[str] = None, interpret: Optional[bool] = None,
         machine=None, autotune: Optional[bool] = None,
         autotune_budget: Optional[int] = None,
-        tuning_cache: Optional[str] = None, fused: Optional[str] = None):
+        tuning_cache: Optional[str] = None, fused: Optional[str] = None,
+        quant=None):
     """Thread-local override: ``with use(backend="pallas"): ...``."""
     stack = _stack()
     stack.append(get_config().replace(backend=backend, interpret=interpret,
                                       machine=machine, autotune=autotune,
                                       autotune_budget=autotune_budget,
                                       tuning_cache=tuning_cache,
-                                      fused=fused))
+                                      fused=fused, quant=quant))
     try:
         yield stack[-1]
     finally:

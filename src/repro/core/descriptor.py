@@ -41,6 +41,80 @@ LAYOUTS = ("nn", "nt")
 EPILOGUES = (None, "bias", "gelu", "silu", "relu", "bias_gelu", "bias_silu")
 BIAS_EPILOGUES = tuple(e for e in EPILOGUES if e and e.startswith("bias"))
 
+QUANT_DTYPES = ("int8", "float8_e4m3")
+QUANT_SCHEMES = ("per_tensor", "per_channel", "per_tile")
+
+# String shorthands accepted anywhere a quant spec is (config knob,
+# REPRO_QUANT, gemm(quant=...)).
+_QUANT_ALIASES = {
+    "int8": ("int8", False),
+    "w8a16": ("int8", True),
+    "fp8": ("float8_e4m3", False),
+    "float8_e4m3": ("float8_e4m3", False),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Low-precision execution spec carried by GEMM-family descriptors
+    (DESIGN.md §13).
+
+    ``dtype`` is the *wire* dtype the quantized operand(s) are stored and
+    staged in; accumulation always happens wide (int32 for int8 inputs,
+    f32 otherwise) and dequantization fuses into the shared epilogue.
+    ``scheme`` fixes how scales partition operand channels — per-tensor
+    (scalar), per-channel (one scale per A row / B output column), or
+    per-tile (one scale per ``QUANT_TILE``-sized channel block; see
+    ``repro.core.schedule.QUANT_TILE``).  All three are row/col-separable,
+    which is what lets the dequant commute through the contraction and
+    live in the epilogue.  ``weight_only`` quantizes only the B operand
+    (W8A16): A stays in ``in_dtype``, B is dequantized in-kernel before
+    the MXU dot, and the column scales still apply in the epilogue.
+    """
+
+    dtype: str = "int8"
+    scheme: str = "per_channel"
+    weight_only: bool = False
+
+    def __post_init__(self):
+        if self.dtype not in QUANT_DTYPES:
+            raise ValueError(
+                f"quant dtype must be one of {QUANT_DTYPES}, got {self.dtype}")
+        if self.scheme not in QUANT_SCHEMES:
+            raise ValueError(
+                f"quant scheme must be one of {QUANT_SCHEMES}, "
+                f"got {self.scheme}")
+        if self.dtype == "float8_e4m3" and not hasattr(jnp, "float8_e4m3fn"):
+            raise ValueError(
+                "float8_e4m3 quantization needs a jax build with "
+                "jnp.float8_e4m3fn (gate callers on "
+                "repro.core.machine.HAS_FP8)")
+
+    @property
+    def wire_itemsize(self) -> int:
+        """Bytes per element of the quantized wire format (1 for both
+        int8 and fp8)."""
+        return 1
+
+
+def resolve_quant(quant) -> Optional[QuantSpec]:
+    """Normalize a quant argument: None/False → None, a string shorthand
+    (``"int8"``/``"w8a16"``/``"fp8"``) → the matching :class:`QuantSpec`,
+    a spec → itself."""
+    if quant is None or quant is False:
+        return None
+    if isinstance(quant, QuantSpec):
+        return quant
+    if isinstance(quant, str):
+        if quant not in _QUANT_ALIASES:
+            raise ValueError(
+                f"unknown quant shorthand {quant!r}; expected one of "
+                f"{sorted(_QUANT_ALIASES)} or a QuantSpec")
+        dtype, weight_only = _QUANT_ALIASES[quant]
+        return QuantSpec(dtype=dtype, weight_only=weight_only)
+    raise ValueError(f"quant must be None, a str or a QuantSpec, got "
+                     f"{type(quant).__name__}")
+
 
 def check_bias(epilogue, bias) -> None:
     """Shared precondition: a bias-consuming epilogue needs a bias operand."""
@@ -103,6 +177,8 @@ class GemmDescriptor(KernelDescriptor):
     edge: str = "mask"
     # batch dims (leading, shared by A/B/C); 0 => unbatched 2-D GEMM
     batch: int = 0
+    # Low-precision execution axis (DESIGN.md §13); None = wide GEMM.
+    quant: Optional[QuantSpec] = None
 
     def __post_init__(self):
         if self.layout not in LAYOUTS:
@@ -114,11 +190,23 @@ class GemmDescriptor(KernelDescriptor):
         for d in (self.m, self.n, self.k):
             if d <= 0:
                 raise ValueError(f"GEMM dims must be positive, got {self}")
+        if self.quant is not None:
+            if not isinstance(self.quant, QuantSpec):
+                raise ValueError(f"quant must be a QuantSpec, got {self.quant!r}")
+            if self.accumulate:
+                raise ValueError("quantized GEMM does not support accumulate "
+                                 "(C += A@B); dequant owns the epilogue")
+            if self.batch:
+                raise ValueError("quantized GEMM is unbatched (scale vectors "
+                                 "are per-row/per-column of one problem)")
+            if self.edge != "mask":
+                raise ValueError("quantized GEMM requires edge='mask'")
 
     # -- constructors -------------------------------------------------------
     @classmethod
     def from_operands(cls, a, b, layout="nn", accumulate=False, epilogue=None,
-                      acc_dtype="float32", out_dtype=None, edge="mask"):
+                      acc_dtype="float32", out_dtype=None, edge="mask",
+                      quant=None):
         if a.ndim != b.ndim:
             raise ValueError(f"rank mismatch: A{a.shape} vs B{b.shape}")
         batch = 0
@@ -135,14 +223,21 @@ class GemmDescriptor(KernelDescriptor):
             n, kb = b.shape[-2], b.shape[-1]
         if kb != k:
             raise ValueError(f"contraction mismatch: A{a.shape} {layout} B{b.shape}")
+        quant = resolve_quant(quant)
         in_dtype = canonical_dtype(a.dtype)
-        if canonical_dtype(b.dtype) != in_dtype:
+        if quant is not None and quant.weight_only:
+            # W8A16: B arrives in (or will be quantized to) the wire
+            # dtype while A stays wide — the equality check is the wide
+            # path's invariant, not this one's.
+            pass
+        elif canonical_dtype(b.dtype) != in_dtype:
             raise ValueError(f"A/B dtype mismatch: {a.dtype} vs {b.dtype}")
         return cls(
             m=m, n=n, k=k, layout=layout, in_dtype=in_dtype,
             acc_dtype=canonical_dtype(acc_dtype),
             out_dtype=canonical_dtype(out_dtype or acc_dtype),
             accumulate=accumulate, epilogue=epilogue, edge=edge, batch=batch,
+            quant=quant,
         )
 
     # -- properties ----------------------------------------------------------
@@ -152,10 +247,39 @@ class GemmDescriptor(KernelDescriptor):
         return 2 * nb * self.m * self.n * self.k
 
     @property
+    def a_wire_itemsize(self) -> int:
+        """Bytes per staged A element: the quant wire format for a fully
+        quantized GEMM, ``in_dtype`` otherwise (W8A16 keeps A wide)."""
+        if self.quant is not None and not self.quant.weight_only:
+            return self.quant.wire_itemsize
+        return jnp.dtype(self.in_dtype).itemsize
+
+    @property
+    def b_wire_itemsize(self) -> int:
+        """Bytes per staged B element (any quant spec narrows B)."""
+        if self.quant is not None:
+            return self.quant.wire_itemsize
+        return jnp.dtype(self.in_dtype).itemsize
+
+    @property
+    def compute_dtype(self) -> str:
+        """The dtype whose machine peak prices the MXU work: the quant
+        wire dtype for fully quantized GEMMs (int8 MACs), ``in_dtype``
+        for wide and weight-only GEMMs (W8A16 dequantizes B before the
+        dot)."""
+        if self.quant is not None and not self.quant.weight_only:
+            return self.quant.dtype
+        return self.in_dtype
+
+    @property
     def in_bytes(self) -> int:
         nb = max(1, self.batch)
-        isz = jnp.dtype(self.in_dtype).itemsize
-        return nb * (self.m * self.k + self.k * self.n) * isz
+        total = nb * (self.m * self.k * self.a_wire_itemsize
+                      + self.k * self.n * self.b_wire_itemsize)
+        if self.quant is not None:
+            # f32 dequant scale vectors staged alongside the operands.
+            total += (self.m + self.n) * 4
+        return total
 
     @property
     def out_bytes(self) -> int:
@@ -304,6 +428,8 @@ class GroupedGemmDescriptor(KernelDescriptor):
     num_experts: int
     dtype: str = "float32"
     epilogue: Optional[str] = None
+    # Low-precision execution axis (DESIGN.md §13); None = wide GEMM.
+    quant: Optional[QuantSpec] = None
 
     def __post_init__(self):
         for v in (self.t, self.k, self.n, self.num_experts):
@@ -311,15 +437,41 @@ class GroupedGemmDescriptor(KernelDescriptor):
                 raise ValueError(f"grouped-GEMM dims must be positive, got {self}")
         if self.epilogue not in EPILOGUES:
             raise ValueError(f"epilogue must be one of {EPILOGUES}")
+        if self.quant is not None and not isinstance(self.quant, QuantSpec):
+            raise ValueError(f"quant must be a QuantSpec, got {self.quant!r}")
 
     @classmethod
-    def from_operands(cls, x, w, epilogue=None):
+    def from_operands(cls, x, w, epilogue=None, quant=None):
         t, k = x.shape
         e, kw, n = w.shape
         if kw != k:
             raise ValueError(f"contraction mismatch: x{x.shape} vs w{w.shape}")
         return cls(t=t, k=k, n=n, num_experts=e,
-                   dtype=canonical_dtype(x.dtype), epilogue=epilogue)
+                   dtype=canonical_dtype(x.dtype), epilogue=epilogue,
+                   quant=resolve_quant(quant))
+
+    @property
+    def x_wire_itemsize(self) -> int:
+        """Bytes per staged activation-row element (narrow only for a
+        fully quantized grouped GEMM)."""
+        if self.quant is not None and not self.quant.weight_only:
+            return self.quant.wire_itemsize
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def w_wire_itemsize(self) -> int:
+        """Bytes per staged expert-panel element (narrow under any quant
+        spec)."""
+        if self.quant is not None:
+            return self.quant.wire_itemsize
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def compute_dtype(self) -> str:
+        """Dtype pricing the MXU work (see GemmDescriptor.compute_dtype)."""
+        if self.quant is not None and not self.quant.weight_only:
+            return self.quant.dtype
+        return self.dtype
 
     @property
     def flops(self) -> int:
@@ -328,8 +480,12 @@ class GroupedGemmDescriptor(KernelDescriptor):
 
     @property
     def in_bytes(self) -> int:
-        isz = jnp.dtype(self.dtype).itemsize
-        return (self.t * self.k + self.num_experts * self.k * self.n) * isz
+        total = (self.t * self.k * self.x_wire_itemsize
+                 + self.num_experts * self.k * self.n * self.w_wire_itemsize)
+        if self.quant is not None:
+            # per-expert column scales (+ per-row activation scales).
+            total += (self.num_experts * self.n + self.t) * 4
+        return total
 
     @property
     def out_bytes(self) -> int:
@@ -472,8 +628,15 @@ class GroupedGemmBwdDescriptor(GroupedGemmDescriptor):
     @classmethod
     def from_forward(cls, desc: GroupedGemmDescriptor
                      ) -> "GroupedGemmBwdDescriptor":
-        """Backward descriptor sharing a forward descriptor's geometry."""
-        return cls(**dataclasses.asdict(desc))
+        """Backward descriptor sharing a forward descriptor's geometry.
+
+        The quant spec is deliberately dropped: quantization is a
+        forward/inference axis (DESIGN.md §13) — backward walks run in
+        the wide dtype on the saved wide residuals.
+        """
+        fields = dataclasses.asdict(desc)
+        fields["quant"] = None  # asdict flattens QuantSpec to a dict anyway
+        return cls(**fields)
 
     @property
     def flops(self) -> int:

@@ -156,9 +156,21 @@ class MachineModel:
                                    launch_overhead_s=launch)
 
 
+# fp8 support is build-dependent: gate every fp8 path on this flag
+# instead of letting an AttributeError surface mid-dispatch (DESIGN.md
+# §13).  ``FP8_DTYPE`` is the jnp dtype when present, else None.
+HAS_FP8 = hasattr(jnp, "float8_e4m3fn")
+FP8_DTYPE = jnp.float8_e4m3fn if HAS_FP8 else None
+
+
 def canonical_dtype(dtype) -> str:
     """Canonical descriptor dtype name ("bfloat16"/"float32"/...) for any
     dtype-like — descriptors never store raw ``jnp.dtype`` objects."""
+    if isinstance(dtype, str) and dtype in ("float8_e4m3", "float8_e4m3fn"):
+        # The canonical name maps the *fn* jnp dtype; accept it even on
+        # builds without the dtype so descriptors mentioning fp8 can be
+        # keyed (execution is gated separately on HAS_FP8).
+        return "float8_e4m3"
     d = jnp.dtype(dtype)
     if d == jnp.dtype(jnp.bfloat16):
         return "bfloat16"
@@ -168,6 +180,8 @@ def canonical_dtype(dtype) -> str:
         return "float16"
     if d == jnp.dtype(jnp.int8):
         return "int8"
+    if HAS_FP8 and d == jnp.dtype(FP8_DTYPE):
+        return "float8_e4m3"
     if d == jnp.dtype(jnp.float64):
         return "float64"
     raise ValueError(f"unsupported dtype for machine model: {dtype}")
@@ -186,12 +200,14 @@ TPU_V5E = MachineModel(
         "float16": 197e12,
         "float32": 98.5e12,
         "int8": 394e12,
+        "float8_e4m3": 394e12,  # fp8 rides the int8 MAC rate
         "float64": 0.5e12,  # emulated; not a target dtype
     },
     hbm_bytes=16 * 1024**3,
     hbm_bw=819e9,
     vmem_bytes=128 * 1024**2,
-    sublanes={"float32": 8, "bfloat16": 16, "float16": 16, "int8": 32, "float64": 8},
+    sublanes={"float32": 8, "bfloat16": 16, "float16": 16, "int8": 32,
+              "float8_e4m3": 32, "float64": 8},
     lanes=128,
     ici_bw_per_link=50e9,
     ici_links=4,
@@ -204,11 +220,13 @@ CPU_HOST = MachineModel(
     name="cpu_host",
     mxu_rows=1,
     mxu_cols=1,
-    peak_flops={"bfloat16": 5e9, "float16": 5e9, "float32": 1e10, "int8": 2e10, "float64": 5e9},
+    peak_flops={"bfloat16": 5e9, "float16": 5e9, "float32": 1e10, "int8": 2e10,
+                "float8_e4m3": 2e10, "float64": 5e9},
     hbm_bytes=32 * 1024**3,
     hbm_bw=20e9,
     vmem_bytes=1 * 1024**2,
-    sublanes={"float32": 8, "bfloat16": 16, "float16": 16, "int8": 32, "float64": 8},
+    sublanes={"float32": 8, "bfloat16": 16, "float16": 16, "int8": 32,
+              "float8_e4m3": 32, "float64": 8},
     lanes=128,
     ici_bw_per_link=1e9,
     ici_links=1,

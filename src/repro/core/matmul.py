@@ -39,6 +39,13 @@ def matmul(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
     out_dtype = out_dtype or a.dtype
     check_bias(epilogue, bias)
 
+    from repro.optim.compression import QuantizedTensor  # lazy: no cycle
+    if isinstance(b, QuantizedTensor):
+        # Quantized-at-load W8A16 weights (DESIGN.md §13): inference-only
+        # direct path — no custom VJP (grads still flow to ``a`` through
+        # plain ops; the frozen int weight gets none).
+        return _w8a16_matmul(a, b, be, layout, epilogue, bias, out_dtype)
+
     if be == "xla":
         # No flattening: dot_general consumes (..., M, K) directly, so
         # sharding on the leading/sequence dims propagates through (a
@@ -67,6 +74,41 @@ def matmul(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
         out = engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
     if lead is not None:
         out = out.reshape(*lead, out.shape[-1])
+    return out
+
+
+def _w8a16_matmul(a, bq, be, layout, epilogue, bias, out_dtype):
+    """Weight-only-quantized dense layer: ``epilogue(a @ deq(bq))``.
+
+    Because every quant scheme's column scales are separable, the dequant
+    commutes through the contraction: ``a @ (q * s) == (a @ q) * s``.  On
+    the pallas backend this routes through the engine's quantized GEMM
+    family (one fused launch, dequant in the epilogue); on the XLA
+    backend it is the commuted ``dot_general`` form — either way the
+    narrow weight is what moves through memory (DESIGN.md §13).
+    """
+    from repro.optim.compression import expand_scale
+    if layout != "nn":
+        raise ValueError("QuantizedTensor weights support layout='nn' only")
+    n = bq.shape[1]
+    lead = None
+    if a.ndim > 2:
+        lead = a.shape[:-1]
+        a = a.reshape(-1, a.shape[-1])
+    if be == "pallas":
+        from repro.kernels.gemm.ops import gemm as _engine_gemm
+        out = _engine_gemm(a, bq, epilogue=epilogue, bias=bias,
+                           out_dtype=out_dtype)
+    else:
+        from repro.kernels.epilogue import apply_epilogue
+        acc = jax.lax.dot_general(a, bq.q.astype(a.dtype),
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        sb = expand_scale(bq.scale, bq.spec, n).reshape(1, n)
+        bias_blk = None if bias is None else bias.reshape(1, n)
+        out = apply_epilogue(acc, epilogue, bias_blk, sb).astype(out_dtype)
+    if lead is not None:
+        out = out.reshape(*lead, n)
     return out
 
 

@@ -46,11 +46,34 @@ def _timeit(fn, *args, iters=5, warmup=2) -> float:
 
 
 def probe_matmul_flops(dtype="float32", size=512, iters=5) -> ProbeResult:
-    """Peak-ish matmul throughput on the host (Table I analogue)."""
+    """Peak-ish matmul throughput on the host (Table I analogue).
+
+    Covers the quant axis too (DESIGN.md §13): ``dtype="int8"`` times an
+    integer contraction with an int32 accumulator — a plain ``a @ b``
+    would overflow and measure nothing — and ``"float8_e4m3"`` (gated on
+    :data:`~repro.core.machine.HAS_FP8`) an fp8 one with f32 accumulate,
+    exactly the MACs the quantized kernels issue.
+    """
     rng = np.random.default_rng(0)
-    a = jnp.asarray(rng.standard_normal((size, size)), dtype)
-    b = jnp.asarray(rng.standard_normal((size, size)), dtype)
-    f = jax.jit(lambda a, b: a @ b)
+    if dtype == "int8":
+        a = jnp.asarray(rng.integers(-127, 128, (size, size)), jnp.int8)
+        b = jnp.asarray(rng.integers(-127, 128, (size, size)), jnp.int8)
+        f = jax.jit(lambda a, b: jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32))
+    elif dtype in ("float8_e4m3", "float8_e4m3fn"):
+        from .machine import FP8_DTYPE, HAS_FP8
+        if not HAS_FP8:
+            raise ValueError("float8_e4m3 unavailable in this jax build")
+        a = jnp.asarray(rng.standard_normal((size, size)), FP8_DTYPE)
+        b = jnp.asarray(rng.standard_normal((size, size)), FP8_DTYPE)
+        f = jax.jit(lambda a, b: jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))
+    else:
+        a = jnp.asarray(rng.standard_normal((size, size)), dtype)
+        b = jnp.asarray(rng.standard_normal((size, size)), dtype)
+        f = jax.jit(lambda a, b: a @ b)
     s = _timeit(f, a, b, iters=iters)
     return ProbeResult(f"matmul_{dtype}", 2 * size**3 / s / 1e9, "GFLOP/s")
 
@@ -75,8 +98,12 @@ def probe_elementwise_latency() -> ProbeResult:
 def characterize(machine: MachineModel = TPU_V5E, *,
                  size: int = 512, mbytes: int = 64) -> Dict[str, ProbeResult]:
     """Run all probes; pair host measurements with target-model constants."""
+    from .machine import HAS_FP8
     out = {}
-    for dtype in ("float32", "bfloat16"):
+    dtypes = ["float32", "bfloat16", "int8"]
+    if HAS_FP8:
+        dtypes.append("float8_e4m3")
+    for dtype in dtypes:
         r = probe_matmul_flops(dtype, size=size)
         out[r.name] = r
         out[f"target_peak_{dtype}"] = ProbeResult(

@@ -48,6 +48,14 @@ def ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+# Channel-block width of the ``per_tile`` quantization scheme (DESIGN.md
+# §13): scale tables hold one f32 scale per QUANT_TILE-wide block of the
+# channel axis, and each tile row's ``scale_idx`` column names the block
+# its clamped window origin falls in.  Pinned to the lane count (128) so a
+# scale block never straddles a native register tile.
+QUANT_TILE = 128
+
+
 def round_up(a: int, b: int) -> int:
     """Round ``a`` up to the nearest multiple of ``b``."""
     return ceil_div(a, b) * b
@@ -70,13 +78,18 @@ class TileSchedule:
     clamped to the matrix so a clamped load window always fits the operand
     buffers); each tile row is
 
-        (row0, col0, row_end, col_end, row_start, col_start, block_id)
+        (row0, col0, row_end, col_end, row_start, col_start, block_id,
+         scale_idx)
 
     where ``[row0, row_end) x [col0, col_end)`` is the set of C elements
     the tile owns (the predicate mask) and ``(row_start, col_start)`` is
     the clamped origin of its fixed-shape load/store window — the paper's
     two-step load/store path: edge windows slide inward and the mask keeps
-    each element owned by exactly one tile.
+    each element owned by exactly one tile.  ``scale_idx`` is the quant
+    axis's scale-table coordinate (DESIGN.md §13): the ``per_tile`` scale
+    block (:data:`QUANT_TILE`-wide) the window origin's row falls in —
+    carried on every tile so quantized and wide plans share one table
+    layout; wide kernels simply never read the column.
     """
 
     m: int
@@ -85,7 +98,7 @@ class TileSchedule:
     bk: int
     k_steps: int
     blocks: Tuple[Tuple[int, int], ...]
-    tiles: Tuple[Tuple[int, int, int, int, int, int, int], ...]
+    tiles: Tuple[Tuple[int, int, int, int, int, int, int, int], ...]
 
     @property
     def num_tiles(self) -> int:
@@ -94,12 +107,13 @@ class TileSchedule:
     def validate(self):
         """Every C element owned by exactly one tile mask."""
         owned = 0
-        for row0, col0, row_end, col_end, rs, cs, bid in self.tiles:
+        for row0, col0, row_end, col_end, rs, cs, bid, sidx in self.tiles:
             bm_e, bn_e = self.blocks[bid]
             assert 0 <= rs and rs + bm_e <= self.m, (rs, bm_e, self.m)
             assert 0 <= cs and cs + bn_e <= self.n, (cs, bn_e, self.n)
             assert rs <= row0 and row_end <= rs + bm_e
             assert cs <= col0 and col_end <= cs + bn_e
+            assert sidx == rs // QUANT_TILE, (sidx, rs)
             owned += (row_end - row0) * (col_end - col0)
         assert owned == self.m * self.n, (owned, self.m * self.n)
         return True
@@ -133,9 +147,10 @@ def flatten_regions(m: int, n: int, k: int, bk: int,
             for j in range(ceil_div(r.cols, bn_e)):
                 col0 = r.col0 + j * bn_e
                 col_end = min(col0 + bn_e, r.col0 + r.cols)
+                rs = min(row0, m - bm_e)
                 tiles.append((row0, col0, row_end, col_end,
-                              min(row0, m - bm_e), min(col0, n - bn_e),
-                              bid))
+                              rs, min(col0, n - bn_e),
+                              bid, rs // QUANT_TILE))
     return TileSchedule(m=m, n=n, k=k, bk=bk, k_steps=ceil_div(k, bk),
                         blocks=tuple(blocks), tiles=tuple(tiles))
 

@@ -26,13 +26,23 @@ def needs_bias(epilogue: Optional[str]) -> bool:
     return epilogue in BIAS_EPILOGUES
 
 
-def apply_epilogue(x, epilogue: Optional[str], bias_blk=None):
+def apply_epilogue(x, epilogue: Optional[str], bias_blk=None, dequant=None):
     """Lower one epilogue onto an accumulator block.
 
     ``bias_blk`` is the (1, bn)-broadcastable bias window of the output
     block — for grouped GEMM, the dispatching kernel has already selected
     the owning expert's row.
+
+    ``dequant`` is the fused dequantization stage of the quant axis
+    (DESIGN.md §13): an f32 factor broadcastable against the accumulator
+    block — ``sa_col * sb_row`` for a fully-quantized GEMM, the weight
+    scale row alone for W8A16.  It is applied to the (int32 or f32)
+    accumulator *before* bias/activation, exactly where a separate
+    dequant launch would have run, so the fused and reference lowerings
+    of one quantized plan stay bit-identical.
     """
+    if dequant is not None:
+        x = x.astype(jnp.float32) * dequant
     if needs_bias(epilogue):
         x = x + bias_blk.astype(x.dtype)
     if epilogue in ("gelu", "bias_gelu"):

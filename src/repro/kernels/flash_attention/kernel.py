@@ -278,8 +278,8 @@ def build_fused_flash_kernel(*, schedule: FlashTileSchedule,
 # pulled from the pool by a table-driven BlockSpec index map
 # ---------------------------------------------------------------------------
 
-def _decode_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, page_size, rep, scale):
+def _decode_flash_kernel(tbl_ref, *refs, page_size, rep, scale,
+                         kv_quant=False):
     """One grid step of the paged decode walk.
 
     ``tbl_ref`` rows are ``(seq, page, k_len, first, last)``
@@ -288,7 +288,27 @@ def _decode_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
     into VMEM, so the body only masks the page tail (``k_len``), runs the
     per-head online-softmax update, and drains the carry into the owned
     output row at ``last`` — the same m/l/acc discipline as the fused
-    flash walk, batched over heads instead of query rows."""
+    flash walk, batched over heads instead of query rows.
+
+    ``kv_quant`` (DESIGN.md §13): the pools are int8 with per-token f32
+    scale rows riding as two extra ``(1, P)`` operands on the same
+    table-driven index map.  The scales are *separable by page position*,
+    so dequant never touches the (P, hkv, hd) tiles: the K scales
+    multiply the score columns (``q . (k*s) == (q . k) * s``) and the V
+    scales fold into P before the PV contraction
+    (``sum_p p . (v*s) == sum_p (p*s) . v``) — both lane-dim row
+    broadcasts, no 3-D elementwise dequant."""
+    idx = 0
+    q_ref = refs[idx]; idx += 1
+    k_ref = refs[idx]; idx += 1
+    v_ref = refs[idx]; idx += 1
+    ks_ref = vs_ref = None
+    if kv_quant:
+        ks_ref = refs[idx]; idx += 1
+        vs_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    m_ref, l_ref, acc_ref = refs[idx], refs[idx + 1], refs[idx + 2]
+
     t = pl.program_id(0)
     k_len = tbl_ref[t, 2]
 
@@ -297,8 +317,8 @@ def _decode_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
         _carry_init(m_ref, l_ref, acc_ref)
 
     q = q_ref[0]                       # (h, hd)
-    k = k_ref[0].astype(q.dtype)       # (page_size, hkv, hd)
-    v = v_ref[0].astype(q.dtype)
+    k = k_ref[0].astype(q.dtype)       # (page_size, hkv, hd) — int8 wire
+    v = v_ref[0].astype(q.dtype)       # values are exact in the wide dtype
     if rep > 1:
         k = jnp.repeat(k, rep, axis=1)  # GQA: -> (page_size, h, hd)
         v = jnp.repeat(v, rep, axis=1)
@@ -310,6 +330,8 @@ def _decode_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
     # scores (h, page_size): heads are the batch dim of both tile GEMMs.
     s = jax.lax.dot_general(q, k, (((1,), (2,)), ((0,), (1,))),
                             preferred_element_type=jnp.float32) * scale
+    if kv_quant:
+        s = s * ks_ref[...].astype(jnp.float32)  # (1, P) over (h, P)
     cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(cols < k_len, s, NEG_INF)
 
@@ -320,8 +342,11 @@ def _decode_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
     p = jnp.exp(s - m_new)
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = p
+    if kv_quant:
+        pv = p * vs_ref[...].astype(jnp.float32)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((0,), (1,))),
+        pv.astype(v.dtype), v, (((1,), (0,)), ((0,), (1,))),
         preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
@@ -333,7 +358,8 @@ def _decode_flash_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
 def build_decode_flash_kernel(*, schedule: DecodeTileSchedule,
                               num_heads: int, num_kv_heads: int,
                               head_dim: int, dtype=jnp.bfloat16,
-                              kv_dtype=None, interpret: bool = True):
+                              kv_dtype=None, kv_quant: bool = False,
+                              interpret: bool = True):
     """Generate ONE pallas_call executing a whole paged decode step.
 
     Returns ``f(table, q:(S,h,hd), k_pool:(pages,P,hkv,hd), v_pool) ->
@@ -349,18 +375,27 @@ def build_decode_flash_kernel(*, schedule: DecodeTileSchedule,
     h, hkv, hd = num_heads, num_kv_heads, head_dim
     kv_dtype = kv_dtype or dtype
     body = functools.partial(_decode_flash_kernel, page_size=P,
-                             rep=h // hkv, scale=hd ** -0.5)
+                             rep=h // hkv, scale=hd ** -0.5,
+                             kv_quant=kv_quant)
+
+    in_specs = [
+        pl.BlockSpec((1, h, hd), lambda t, tbl: (tbl[t, 0], 0, 0)),
+        pl.BlockSpec((1, P, hkv, hd),
+                     lambda t, tbl: (tbl[t, 1], 0, 0, 0)),
+        pl.BlockSpec((1, P, hkv, hd),
+                     lambda t, tbl: (tbl[t, 1], 0, 0, 0)),
+    ]
+    if kv_quant:
+        # per-token dequant scale rows of the walked page (DESIGN.md §13)
+        in_specs += [
+            pl.BlockSpec((1, P), lambda t, tbl: (tbl[t, 1], 0)),
+            pl.BlockSpec((1, P), lambda t, tbl: (tbl[t, 1], 0)),
+        ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # the runtime tile table
         grid=(schedule.max_tiles,),
-        in_specs=[
-            pl.BlockSpec((1, h, hd), lambda t, tbl: (tbl[t, 0], 0, 0)),
-            pl.BlockSpec((1, P, hkv, hd),
-                         lambda t, tbl: (tbl[t, 1], 0, 0, 0)),
-            pl.BlockSpec((1, P, hkv, hd),
-                         lambda t, tbl: (tbl[t, 1], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, h, hd), lambda t, tbl: (tbl[t, 0], 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((h, 1), jnp.float32),   # running max

@@ -105,23 +105,31 @@ engine.register_family("flash_attention_bwd", planner=plan_flash_bwd,
 
 def execute_decode(desc: FlashDecodeDescriptor, plan: FlashDecodePlan,
                    q, k_pool, v_pool, block_tables, lengths, *,
-                   interpret: bool = False):
+                   k_scale=None, v_scale=None, interpret: bool = False):
     """Engine executor: run one planned paged decode-attention step.
 
     The kernel is cached on the static pool geometry alone; the batch
     composition (block tables + lengths) becomes the runtime tile table,
     built with jnp ops at trace time and shipped as a scalar-prefetch
     operand — so a churning batch re-enters the same compiled launch.
+    KV-int8 pools (DESIGN.md §13) ride the same launch: per-token scale
+    rows ``(pages, page_size)`` join as two extra table-indexed operands.
     """
     engine.count_launches("flash_decode", 1)
+    kv_quant = k_scale is not None
     schedule = plan.tile_schedule()
     key = desc.cache_key() + ("decode", canonical_dtype(k_pool.dtype),
-                              interpret)
+                              kv_quant, interpret)
     kernel = engine.build_cached(key, lambda: build_decode_flash_kernel(
         schedule=schedule, num_heads=desc.num_heads,
         num_kv_heads=desc.num_kv_heads, head_dim=desc.head_dim,
-        dtype=q.dtype, kv_dtype=k_pool.dtype, interpret=interpret))
+        dtype=q.dtype, kv_dtype=k_pool.dtype, kv_quant=kv_quant,
+        interpret=interpret))
     table = schedule.tables(block_tables, lengths)
+    if kv_quant:
+        return kernel(table, q, k_pool, v_pool,
+                      k_scale.astype(jnp.float32),
+                      v_scale.astype(jnp.float32))
     return kernel(table, q, k_pool, v_pool)
 
 
@@ -129,17 +137,22 @@ engine.register_family("flash_decode", planner=plan_flash_decode,
                        execute=execute_decode)
 
 
-def paged_decode_attention(q, k_pool, v_pool, block_tables,
-                           lengths) -> jax.Array:
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                           k_scale=None, v_scale=None) -> jax.Array:
     """One decode step against a paged KV pool (DESIGN.md §12).
 
     q: (S, h, hd) — one query row per decode slot; k_pool/v_pool:
     (pages, page_size, hkv, hd); block_tables: (S, max_blocks) int32 page
     ids; lengths: (S,) live KV length per slot (0 = inactive, output row
     is zeros).  Returns (S, h, hd).
+
+    With int8 pools, ``k_scale``/``v_scale`` are the per-token dequant
+    rows ``(pages, page_size)`` f32 (DESIGN.md §13) — same launch count,
+    the scales fold into the score/PV algebra in-kernel.
     """
     desc = FlashDecodeDescriptor.from_operands(q, k_pool, block_tables)
-    return engine.dispatch(desc, q, k_pool, v_pool, block_tables, lengths)
+    return engine.dispatch(desc, q, k_pool, v_pool, block_tables, lengths,
+                           k_scale=k_scale, v_scale=v_scale)
 
 
 def _flat_desc(causal, qf, kf) -> FlashDescriptor:

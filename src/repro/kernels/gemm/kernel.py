@@ -152,19 +152,38 @@ def build_gemm_kernel(*, m: int, n: int, k: int, bm: int, bn: int, bk: int,
 # ---------------------------------------------------------------------------
 
 def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
-                       epilogue, accumulate, out_dtype):
+                       epilogue, accumulate, out_dtype, quant=None):
     """Walk the flattened tile schedule: one grid step = one (tile, K-panel).
 
-    refs: a, b, [bias], [c_in], out, acc_scratch — each a full per-batch
-    operand block.  The tile table rides in scalar-prefetch SMEM; per-tile
-    geometry is selected by ``lax.switch`` over the distinct effective
-    block shapes, and every load/store is the paper's two-step path: a
-    fixed-shape window at a clamped origin plus an ownership mask (the
-    predication helpers of ``repro.core.schedule``, DESIGN.md §9).
+    refs: a, b, [sa], [sb], [bias], [c_in], out, acc_scratch — each a full
+    per-batch operand block.  The tile table rides in scalar-prefetch
+    SMEM; per-tile geometry is selected by ``lax.switch`` over the
+    distinct effective block shapes, and every load/store is the paper's
+    two-step path: a fixed-shape window at a clamped origin plus an
+    ownership mask (the predication helpers of ``repro.core.schedule``,
+    DESIGN.md §9).
+
+    Under a ``quant`` spec (DESIGN.md §13) the operands arrive in the
+    wire dtype, accumulation is exact-wide (int32 for int8, f32 for fp8
+    / weight-only), and ``sa``/``sb`` are the expanded f32 dequant
+    vectors — column scales ``(1, n)`` and, for fully quantized runs, row
+    scales ``(m, 1)`` — windowed by the same clamped tile origins as the
+    operands and applied in :func:`apply_epilogue` before bias/act, so a
+    quantized output never round-trips through a separate dequant launch.
     """
+    weight_only = quant is not None and quant.weight_only
+    full_quant = quant is not None and not quant.weight_only
+    int_acc = full_quant and quant.dtype == "int8"
+    acc_dt = jnp.int32 if int_acc else jnp.float32
+
     idx = 0
     a_ref = refs[idx]; idx += 1
     b_ref = refs[idx]; idx += 1
+    sa_ref = sb_ref = None
+    if full_quant:
+        sa_ref = refs[idx]; idx += 1
+    if quant is not None:
+        sb_ref = refs[idx]; idx += 1
     bias_ref = None
     if needs_bias(epilogue):
         bias_ref = refs[idx]; idx += 1
@@ -191,7 +210,7 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
                     acc_ref[0:bm_e, 0:bn_e] = cw.astype(jnp.float32)
                 else:
                     acc_ref[0:bm_e, 0:bn_e] = jnp.zeros((bm_e, bn_e),
-                                                        jnp.float32)
+                                                        acc_dt)
 
             a = a_ref[0, pl.ds(rs, bm_e), pl.ds(kstart, bk)]
             if layout == "nn":
@@ -202,6 +221,10 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
                 b = b_ref[0, pl.ds(cs, bn_e), pl.ds(kstart, bk)]
                 dn = (((1,), (1,)), ((), ()))
                 b_k_dim = 1
+            if weight_only:
+                # W8A16: int8 weight values are exactly representable in
+                # the wide dtype; the column scales stay in the epilogue.
+                b = b.astype(a.dtype)
             if k % bk:
                 # K-tail predication: the clamped window overlaps the
                 # previous panel; keep only lanes at/after the nominal
@@ -209,15 +232,20 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
                 a = k_tail_mask(a, 1, k0, kstart)
                 b = k_tail_mask(b, b_k_dim, k0, kstart)
             acc_ref[0:bm_e, 0:bn_e] += jax.lax.dot_general(
-                a, b, dn, preferred_element_type=jnp.float32)
+                a, b, dn, preferred_element_type=acc_dt)
 
             @pl.when(ks == k_steps - 1)
             def _store():
                 out = acc_ref[0:bm_e, 0:bn_e]
+                dequant = None
+                if sb_ref is not None:
+                    dequant = sb_ref[0:1, pl.ds(cs, bn_e)]
+                    if sa_ref is not None:
+                        dequant = sa_ref[pl.ds(rs, bm_e), 0:1] * dequant
                 bias_blk = None
                 if bias_ref is not None:
                     bias_blk = bias_ref[0:1, pl.ds(cs, bn_e)]
-                out = apply_epilogue(out, epilogue, bias_blk)
+                out = apply_epilogue(out, epilogue, bias_blk, dequant)
                 out = out.astype(out_dtype)
                 # Predicated two-step store: write only the elements this
                 # tile owns, preserving neighbours under the clamped
@@ -238,34 +266,49 @@ def _fused_kernel_body(tbl_ref, *refs, blocks, layout, k, bk, k_steps,
 def build_fused_gemm_kernel(*, schedule, batch: int = 0, layout: str = "nn",
                             epilogue: Optional[str] = None,
                             accumulate: bool = False, in_dtype=jnp.float32,
-                            out_dtype=jnp.float32, interpret: bool = True):
+                            out_dtype=jnp.float32, interpret: bool = True,
+                            quant=None):
     """Generate ONE pallas_call executing a whole blocking plan + batch.
 
     ``schedule`` is a :class:`repro.core.blocking.TileSchedule`.  Returns
-    ``f(a, b, [bias], [c_in]) -> out`` over rank-3 operands
+    ``f(a, b, [bias], [c_in], [sa], [sb]) -> out`` over rank-3 operands
     ``a:(nb,m,k)``, ``b:(nb,k,n)|(nb,n,k)``, ``out:(nb,m,n)`` with
     ``nb = max(1, batch)`` — the batch is a leading grid dimension, not a
     ``vmap``.  The supergrid is ``(batch, tiles, k_steps)``; the tile
     table travels as a scalar-prefetch operand (DESIGN.md §8).
+
+    With a :class:`~repro.core.descriptor.QuantSpec` ``quant``, the
+    operand dtypes are the wire format, the accumulator scratch is int32
+    (int8) or f32 (fp8 / weight-only), and the expanded dequant vectors
+    ride as extra operands — ``sa: (m, 1)`` row scales (fully-quantized
+    runs only) and ``sb: (1, n)`` column scales — fused into the epilogue
+    (DESIGN.md §13).
     """
     m, n, k = schedule.m, schedule.n, schedule.k
     bk, k_steps = schedule.bk, schedule.k_steps
     nb = max(1, batch)
     has_bias = needs_bias(epilogue)
+    has_sa = quant is not None and not quant.weight_only
+    has_sb = quant is not None
+    int_acc = has_sa and quant.dtype == "int8"
     bm_max = max(b[0] for b in schedule.blocks)
     bn_max = max(b[1] for b in schedule.blocks)
-    table = pack_table(schedule.tiles)  # (tiles, 7) int32, trace-time
+    table = pack_table(schedule.tiles)  # (tiles, 8) int32, trace-time
 
     body = functools.partial(
         _fused_kernel_body, blocks=schedule.blocks, layout=layout, k=k,
         bk=bk, k_steps=k_steps, epilogue=epilogue, accumulate=accumulate,
-        out_dtype=jnp.dtype(out_dtype))
+        out_dtype=jnp.dtype(out_dtype), quant=quant)
 
     in_specs = [
         pl.BlockSpec((1, m, k), lambda b, t, ks, tbl: (b, 0, 0)),
         pl.BlockSpec((1, k, n) if layout == "nn" else (1, n, k),
                      lambda b, t, ks, tbl: (b, 0, 0)),
     ]
+    if has_sa:
+        in_specs.append(pl.BlockSpec((m, 1), lambda b, t, ks, tbl: (0, 0)))
+    if has_sb:
+        in_specs.append(pl.BlockSpec((1, n), lambda b, t, ks, tbl: (0, 0)))
     if has_bias:
         in_specs.append(pl.BlockSpec((1, n), lambda b, t, ks, tbl: (0, 0)))
     if accumulate:
@@ -277,7 +320,8 @@ def build_fused_gemm_kernel(*, schedule, batch: int = 0, layout: str = "nn",
         grid=(nb, schedule.num_tiles, k_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m, n), lambda b, t, ks, tbl: (b, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((bm_max, bn_max), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm_max, bn_max),
+                                   jnp.int32 if int_acc else jnp.float32)],
     )
 
     kernel = pl.pallas_call(
@@ -287,8 +331,14 @@ def build_fused_gemm_kernel(*, schedule, batch: int = 0, layout: str = "nn",
         interpret=interpret,
     )
 
-    def run(a, b, bias=None, c_in=None):
+    def run(a, b, bias=None, c_in=None, sa=None, sb=None):
         args = [table, a, b]
+        if has_sa:
+            assert sa is not None
+            args.append(sa.reshape(m, 1).astype(jnp.float32))
+        if has_sb:
+            assert sb is not None
+            args.append(sb.reshape(1, n).astype(jnp.float32))
         if has_bias:
             assert bias is not None
             args.append(bias.reshape(1, n))

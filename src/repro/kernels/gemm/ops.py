@@ -151,15 +151,60 @@ def _fused_executor(desc: GemmDescriptor, plan: BlockingPlan,
             schedule=plan.tile_schedule(), batch=desc.batch,
             layout=desc.layout, epilogue=desc.epilogue,
             accumulate=desc.accumulate, in_dtype=jnp.dtype(desc.in_dtype),
-            out_dtype=jnp.dtype(desc.out_dtype), interpret=interpret)
+            out_dtype=jnp.dtype(desc.out_dtype), interpret=interpret,
+            quant=desc.quant)
 
     return engine.build_cached(key, builder)
 
 
+def _xla_quant_gemm(desc: GemmDescriptor, a, b, bias, sa, sb):
+    """The pre-quant fallback lowering: one XLA dot in the exact-wide
+    accumulator dtype, dequant + epilogue as jnp ops (DESIGN.md §13).
+
+    This is what "a separate dequant launch" looks like — the path the
+    fused kernel exists to beat — kept as the non-fused lowering and
+    autotune candidate.  int32 accumulation is exact, and the dequant /
+    bias / activation ops match :func:`apply_epilogue` term for term, so
+    for int8 this is bit-identical to the fused kernel.
+    """
+    from repro.kernels.epilogue import apply_epilogue
+    q = desc.quant
+    dn = (((1,), (0,)), ((), ())) if desc.layout == "nn" \
+        else (((1,), (1,)), ((), ()))
+    if q.weight_only:
+        acc = jax.lax.dot_general(a, b.astype(a.dtype), dn,
+                                  preferred_element_type=jnp.float32)
+        factor = sb.reshape(1, desc.n).astype(jnp.float32)
+    else:
+        pref = jnp.int32 if q.dtype == "int8" else jnp.float32
+        acc = jax.lax.dot_general(a, b, dn, preferred_element_type=pref)
+        factor = (sa.reshape(desc.m, 1).astype(jnp.float32)
+                  * sb.reshape(1, desc.n).astype(jnp.float32))
+    bias_blk = None if bias is None else bias.reshape(1, desc.n)
+    out = apply_epilogue(acc, desc.epilogue, bias_blk, factor)
+    return out.astype(jnp.dtype(desc.out_dtype))
+
+
 def execute(desc: GemmDescriptor, plan: BlockingPlan, a, b, *,
-            bias=None, c=None, interpret: bool = False) -> jax.Array:
-    """Engine executor: run one planned (possibly batched) GEMM."""
+            bias=None, c=None, sa=None, sb=None,
+            interpret: bool = False) -> jax.Array:
+    """Engine executor: run one planned (possibly batched) GEMM.
+
+    ``sa``/``sb`` are the expanded f32 dequant vectors of a quantized
+    descriptor (``(m,)`` row scales for fully-quantized runs, ``(n,)``
+    column scales for any quant spec) — the public entry point quantized
+    the operands and expanded the scheme-shaped scales before dispatch.
+    """
     check_bias(desc.epilogue, bias)
+    if desc.quant is not None:
+        if engine.resolve_fused(plan):
+            engine.count_launches("gemm", plan_launches(plan, fused=True))
+            run = _fused_executor(desc, plan, interpret)
+            return run(a[None], b[None], bias, None, sa=sa, sb=sb)[0]
+        # The pre-quant path: no pallas_call at all — quantized operands,
+        # one XLA dot, dequant+epilogue as separate jnp ops.
+        engine.count_launches("gemm", 0)
+        return _xla_quant_gemm(desc, a, b, bias, sa, sb)
     if engine.resolve_fused(plan):
         engine.count_launches("gemm", plan_launches(plan, fused=True))
         run = _fused_executor(desc, plan, interpret)
@@ -185,8 +230,8 @@ engine.register_family("gemm", planner=plan_gemm, execute=execute)
 def gemm(a, b, c: Optional[jax.Array] = None, *, layout: str = "nn",
          epilogue: Optional[str] = None, bias: Optional[jax.Array] = None,
          out_dtype=None, edge: str = "mask", plan: Optional[BlockingPlan] = None,
-         heterogeneous: bool = True,
-         fused: Optional[bool] = None) -> jax.Array:
+         heterogeneous: bool = True, fused: Optional[bool] = None,
+         quant=None) -> jax.Array:
     """Planned, shape-specialized (batched) GEMM via the engine.
 
     ``a``: (..., M, K); ``b``: (..., K, N) for layout "nn" or (..., N, K)
@@ -194,16 +239,54 @@ def gemm(a, b, c: Optional[jax.Array] = None, *, layout: str = "nn",
     policy comes from :mod:`repro.core.config`; ``fused=True/False`` pins
     the single-launch vs multi-launch lowering for this call (default:
     follow config + plan, DESIGN.md §8).
+
+    ``quant`` selects the low-precision axis (DESIGN.md §13): a
+    :class:`~repro.core.descriptor.QuantSpec`, a shorthand string
+    (``"int8"``/``"w8a16"``/``"fp8"``), ``False`` to opt out of an
+    ambient ``config.quant``, or ``None`` to follow the config.  Wide
+    operands are quantized here at dispatch; alternatively ``b`` may be a
+    pre-quantized :class:`~repro.optim.compression.QuantizedTensor`
+    (the quantize-once-at-load W8A16 path), whose spec then wins.
     """
+    from repro.optim.compression import (QuantizedTensor, expand_scale,
+                                         quantize_operand)
+    sa = sb = None
+    spec = None
+    if isinstance(b, QuantizedTensor):
+        # Quantized-at-load weights: always weight-only — A stays wide.
+        spec = dataclasses.replace(b.spec, weight_only=True)
+        n_axis = 1 if layout == "nn" else 0
+        if b.axis % b.ndim != n_axis:
+            raise ValueError(
+                f"QuantizedTensor b is quantized along axis {b.axis}, but "
+                f"layout {layout!r} needs output-column (axis {n_axis}) "
+                f"scales for the dequant to commute through the GEMM")
+        sb = expand_scale(b.scale, b.spec, b.shape[n_axis])
+        b = b.q
+    else:
+        from repro.core.config import get_config
+        from repro.core.descriptor import resolve_quant
+        spec = resolve_quant(get_config().quant if quant is None else quant)
+        if spec is not None:
+            if a.ndim != 2:
+                raise ValueError("quantized GEMM is unbatched; flatten "
+                                 "leading dims first")
+            out_dtype = out_dtype or a.dtype
+            b, sb = quantize_operand(b, spec,
+                                     axis=1 if layout == "nn" else 0)
+            if not spec.weight_only:
+                a, sa = quantize_operand(a, spec, axis=0)
     desc = GemmDescriptor.from_operands(
         a, b, layout=layout, accumulate=c is not None, epilogue=epilogue,
-        out_dtype=out_dtype or a.dtype, edge=edge)
+        out_dtype=out_dtype or a.dtype, edge=edge, quant=spec)
     if plan is None and not heterogeneous:
         # Non-default planner knob: plan directly, bypassing the plan cache
         # (the cache serves only the canonical planner configuration).
         plan = plan_gemm(desc, heterogeneous=False)
     if fused is None:
-        return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
+        return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c,
+                               sa=sa, sb=sb)
     from repro.core.config import use
     with use(fused="on" if fused else "off"):
-        return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c)
+        return engine.dispatch(desc, a, b, plan=plan, bias=bias, c=c,
+                               sa=sa, sb=sb)

@@ -48,14 +48,31 @@ from repro.kernels.epilogue import apply_epilogue, needs_bias
 # ---------------------------------------------------------------------------
 
 def _fused_grouped_kernel(tbl_ref, *refs, kdim, n, bm, bk, bn, k_steps,
-                          epilogue, out_dtype):
+                          epilogue, out_dtype, quant=None):
     """Walk the ragged tile table: one grid step = one (row-block, N-block,
-    K-panel).  refs: x, w, [bias], out, acc_scratch — x/out staged whole
-    (clamped row windows need element-granular origins), w/bias pulled
-    per-expert by the table-driven index maps."""
+    K-panel).  refs: x, w, [sx], [sw], [bias], out, acc_scratch — x/out
+    staged whole (clamped row windows need element-granular origins),
+    w/bias pulled per-expert by the table-driven index maps.
+
+    Under a ``quant`` spec (DESIGN.md §13) the staged operands are the
+    wire dtype, accumulation is exact-wide (int32 for int8, f32 for fp8
+    / weight-only), and the dequant vectors ride alongside: ``sx`` the
+    per-row activation scales ``(T, 1)`` (fully-quantized only), ``sw``
+    the per-expert column scales ``(E, N)`` whose owning row the same
+    table-driven index map selects — dequant fuses into the epilogue."""
+    weight_only = quant is not None and quant.weight_only
+    full_quant = quant is not None and not quant.weight_only
+    acc_dt = jnp.int32 if (full_quant and quant.dtype == "int8") \
+        else jnp.float32
+
     idx = 0
     x_ref = refs[idx]; idx += 1
     w_ref = refs[idx]; idx += 1
+    sx_ref = sw_ref = None
+    if full_quant:
+        sx_ref = refs[idx]; idx += 1
+    if quant is not None:
+        sw_ref = refs[idx]; idx += 1
     bias_ref = None
     if needs_bias(epilogue):
         bias_ref = refs[idx]; idx += 1
@@ -77,24 +94,33 @@ def _fused_grouped_kernel(tbl_ref, *refs, kdim, n, bm, bk, bn, k_steps,
     def _compute():
         @pl.when(ks == 0)
         def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
+            acc_ref[...] = jnp.zeros((bm, bn), acc_dt)
 
         a = x_ref[pl.ds(rs, bm), pl.ds(kstart, bk)]
         b = w_ref[0, pl.ds(kstart, bk), pl.ds(cs, bn)]
+        if weight_only:
+            # int8 weight values are exact in the wide dtype; the column
+            # scales stay in the epilogue.
+            b = b.astype(a.dtype)
         if kdim % bk:  # K-tail predication on the clamped-window overlap
             a = k_tail_mask(a, 1, k0, kstart)
             b = k_tail_mask(b, 0, k0, kstart)
         acc_ref[...] += jax.lax.dot_general(
             a, b, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+            preferred_element_type=acc_dt)
 
         @pl.when(ks == k_steps - 1)
         def _store():
             out = acc_ref[...]
+            dequant = None
+            if sw_ref is not None:
+                dequant = sw_ref[0:1, pl.ds(cs, bn)]
+                if sx_ref is not None:
+                    dequant = sx_ref[pl.ds(rs, bm), 0:1] * dequant
             bias_blk = None
             if bias_ref is not None:
                 bias_blk = bias_ref[0:1, pl.ds(cs, bn)]
-            out = apply_epilogue(out, epilogue, bias_blk)
+            out = apply_epilogue(out, epilogue, bias_blk, dequant)
             own = ownership_mask((bm, bn), rs, cs,
                                  row0, row_end, col0, col_end)
             predicated_store(o_ref, (pl.ds(rs, bm), pl.ds(cs, bn)),
@@ -112,29 +138,47 @@ def _fused_grouped_kernel(tbl_ref, *refs, kdim, n, bm, bk, bn, k_steps,
 def build_fused_grouped_kernel(*, schedule: GroupedTileSchedule,
                                epilogue: Optional[str] = None,
                                in_dtype=jnp.float32, out_dtype=jnp.float32,
-                               interpret: bool = True):
+                               interpret: bool = True, quant=None):
     """Generate ONE pallas_call executing a whole ragged grouped dispatch.
 
-    Returns ``f(table, x, w, [bias]) -> (T, N)`` where ``table`` is the
-    runtime ``(max_tiles, 5)`` int32 tile table
+    Returns ``f(table, x, w, [bias], sx=None, sw=None) -> (T, N)`` where
+    ``table`` is the runtime ``(max_tiles, 5)`` int32 tile table
     (:meth:`GroupedTileSchedule.tables`), ``x: (T, K)`` rows sorted by
     group, ``w: (E, K, N)``, ``bias: (E, N)``.  The supergrid is
     ``(max_tiles, n_steps, k_steps)``.
+
+    With a :class:`~repro.core.descriptor.QuantSpec` the operands arrive
+    in the wire dtype and the dequant scales are extra operands: ``sx``
+    per-row ``(T,)`` (fully-quantized only) staged whole as ``(T, 1)``,
+    ``sw`` per-expert dense columns ``(E, N)`` whose owning row the tile
+    table's expert column selects — same index map as the weight panel.
     """
     t, kdim, n = schedule.t, schedule.k, schedule.n
     bm, bk, bn = schedule.bm, schedule.bk, schedule.bn
     has_bias = needs_bias(epilogue)
+    has_sx = quant is not None and not quant.weight_only
+    has_sw = quant is not None
+    int_acc = has_sx and quant.dtype == "int8"
 
     body = functools.partial(
         _fused_grouped_kernel, kdim=kdim, n=n, bm=bm, bk=bk, bn=bn,
         k_steps=schedule.k_steps, epilogue=epilogue,
-        out_dtype=jnp.dtype(out_dtype))
+        out_dtype=jnp.dtype(out_dtype), quant=quant)
 
     in_specs = [
         pl.BlockSpec((t, kdim), lambda g, j, ks, tbl: (0, 0)),
         # the whole weight panel of the expert owning row-block g
         pl.BlockSpec((1, kdim, n), lambda g, j, ks, tbl: (tbl[g, 3], 0, 0)),
     ]
+    if has_sx:
+        # per-row activation scales, whole-staged like x (clamped row
+        # windows need element-granular origins)
+        in_specs.append(
+            pl.BlockSpec((t, 1), lambda g, j, ks, tbl: (0, 0)))
+    if has_sw:
+        # the scale row of the expert owning row-block g
+        in_specs.append(
+            pl.BlockSpec((1, n), lambda g, j, ks, tbl: (tbl[g, 3], 0)))
     if has_bias:
         in_specs.append(
             pl.BlockSpec((1, n), lambda g, j, ks, tbl: (tbl[g, 3], 0)))
@@ -144,7 +188,8 @@ def build_fused_grouped_kernel(*, schedule: GroupedTileSchedule,
         grid=(schedule.max_tiles, schedule.n_steps, schedule.k_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((t, n), lambda g, j, ks, tbl: (0, 0)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32 if int_acc else jnp.float32)],
     )
 
     kernel = pl.pallas_call(
@@ -154,8 +199,14 @@ def build_fused_grouped_kernel(*, schedule: GroupedTileSchedule,
         interpret=interpret,
     )
 
-    def run(table, x, w, bias=None):
+    def run(table, x, w, bias=None, sx=None, sw=None):
         args = [table, x, w]
+        if has_sx:
+            assert sx is not None
+            args.append(sx.reshape(t, 1).astype(jnp.float32))
+        if has_sw:
+            assert sw is not None
+            args.append(sw.astype(jnp.float32))
         if has_bias:
             assert bias is not None
             args.append(bias)

@@ -74,16 +74,18 @@ def scatter_rows(x_sorted_by_group, group_sizes, offsets, bm, t_padded):
 
 
 def _execute_fused(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
-                   group_sizes, bias, interpret: bool) -> jax.Array:
+                   group_sizes, bias, interpret: bool,
+                   sx=None, sw=None) -> jax.Array:
     """Single scheduled launch: runtime tables, direct ragged stores."""
     sched = plan.tile_schedule()
     table = sched.tables(group_sizes)
     key = desc.cache_key() + ("fused", sched.bm, sched.bk, sched.bn,
                               interpret)
     kernel = engine.build_cached(key, lambda: build_fused_grouped_kernel(
-        schedule=sched, epilogue=desc.epilogue,
-        in_dtype=x.dtype, out_dtype=x.dtype, interpret=interpret))
-    return kernel(table, x, w, bias)
+        schedule=sched, epilogue=desc.epilogue, in_dtype=x.dtype,
+        out_dtype=jnp.dtype(desc.dtype), interpret=interpret,
+        quant=desc.quant))
+    return kernel(table, x, w, bias, sx=sx, sw=sw)
 
 
 def _execute_padded(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
@@ -109,9 +111,55 @@ def _execute_padded(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
     return jnp.where(valid, out_padded[dest], 0).astype(x.dtype)
 
 
+def _xla_quant_grouped(desc: GroupedGemmDescriptor, x, w, group_sizes,
+                       bias, sx, sw) -> jax.Array:
+    """Non-fused quant lowering: the XLA formulation.
+
+    Quantized operands -> one exact-wide-accumulation contraction ->
+    dequant + epilogue through the SAME :func:`apply_epilogue` the fused
+    kernel calls, term for term — bit-identical for int8 (integer
+    accumulation is exact under any tiling) and the parity oracle for
+    tests.  No ``pallas_call``: counts zero launches.  The pad/scatter
+    kernel stays wide-only (DESIGN.md §13).
+    """
+    q = desc.quant
+    t = x.shape[0]
+    sizes = group_sizes.astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)])
+    row = jnp.arange(t, dtype=jnp.int32)
+    grp = jnp.clip(jnp.searchsorted(offsets, row, side="right") - 1,
+                   0, group_sizes.shape[0] - 1)
+    if q.weight_only:
+        acc = jnp.einsum("tk,tkn->tn", x, w[grp].astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+        factor = sw[grp].astype(jnp.float32)
+    else:
+        pref = jnp.int32 if q.dtype == "int8" else jnp.float32
+        acc = jnp.einsum("tk,tkn->tn", x, w[grp],
+                         preferred_element_type=pref)
+        factor = (sx.reshape(t, 1).astype(jnp.float32)
+                  * sw[grp].astype(jnp.float32))
+    out = apply_epilogue(acc, desc.epilogue,
+                         None if bias is None else bias[grp], factor)
+    valid = (row < offsets[-1])[:, None]
+    return jnp.where(valid, out, 0).astype(jnp.dtype(desc.dtype))
+
+
 def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
-            group_sizes, *, bias=None, interpret: bool = False) -> jax.Array:
+            group_sizes, *, bias=None, sx=None, sw=None,
+            interpret: bool = False) -> jax.Array:
     check_bias(desc.epilogue, bias)
+    if desc.quant is not None:
+        # Quantized axis (DESIGN.md §13): fused -> the scheduled walk in
+        # the wire dtype with dequant in the epilogue; otherwise the XLA
+        # formulation (zero engine launches).
+        if engine.resolve_fused(plan):
+            engine.count_launches("grouped_gemm",
+                                  plan_launches(plan, fused=True))
+            return _execute_fused(desc, plan, x, w, group_sizes, bias,
+                                  interpret, sx=sx, sw=sw)
+        engine.count_launches("grouped_gemm", 0)
+        return _xla_quant_grouped(desc, x, w, group_sizes, bias, sx, sw)
     fused = engine.resolve_fused(plan)
     engine.count_launches("grouped_gemm", plan_launches(plan, fused=fused))
     if fused:
@@ -250,12 +298,27 @@ def _grouped_vjp_bwd(epilogue, res, g):
 _grouped_vjp.defvjp(_grouped_vjp_fwd, _grouped_vjp_bwd)
 
 
+def _quantize_grouped_w(w, spec):
+    """Per-expert quantization of the (E, K, N) bank along output columns.
+
+    Every expert panel gets its own scales (the schemes resolve per
+    expert: per_tensor -> one scalar each, per_channel -> per output
+    column, per_tile -> per 128-column block), expanded dense so the
+    kernel stages one ``(E, N)`` f32 scale table indexed by the tile
+    table's expert column.
+    """
+    from repro.optim.compression import quantize_operand
+    wq, sw = jax.vmap(lambda wi: quantize_operand(wi, spec, axis=1))(w)
+    return wq, sw
+
+
 def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
                  epilogue: Optional[str] = None,
                  bias: Optional[jax.Array] = None,
                  bm: Optional[int] = None, bk: Optional[int] = None,
                  bn: Optional[int] = None,
-                 fused: Optional[bool] = None) -> jax.Array:
+                 fused: Optional[bool] = None,
+                 quant=None) -> jax.Array:
     """Ragged grouped GEMM via the engine.
 
     x: (T, K) rows sorted by group; w: (E, K, N); group_sizes: (E,)
@@ -264,14 +327,45 @@ def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
     GEMM tail (``bias`` is per-expert, shape (E, N)); ``fused=True/False``
     pins the scheduled single-launch vs pad/scatter lowering for this
     call (default: follow config + plan, DESIGN.md §9).
+
+    ``quant`` selects the low-precision axis (DESIGN.md §13): a spec /
+    alias ("int8", "w8a16", "fp8") quantizes at dispatch — the expert
+    bank per expert along output columns, the activations per row for
+    fully-quantized specs — with dequant fused into the epilogue.
+    ``quant=False`` opts this call out of an ambient ``config.quant``.
+    The quant path is inference-only (no custom VJP; the wide path keeps
+    the scheduled backward).
     """
-    desc = GroupedGemmDescriptor.from_operands(x, w, epilogue=epilogue)
+    from repro.core.descriptor import resolve_quant
+    spec = resolve_quant(get_config().quant if quant is None else quant)
+    sx = sw = None
+    if spec is not None:
+        # Descriptor from the *wide* operands: desc.dtype stays the
+        # logical compute/output dtype, the spec implies wire dtypes.
+        desc = GroupedGemmDescriptor.from_operands(x, w, epilogue=epilogue,
+                                                   quant=spec)
+        from repro.optim.compression import quantize_operand
+        w, sw = _quantize_grouped_w(w, spec)
+        if not spec.weight_only:
+            x, sx = quantize_operand(x, spec, axis=0)
+    else:
+        desc = GroupedGemmDescriptor.from_operands(x, w, epilogue=epilogue)
     plan = None
     if bm is not None or bk is not None or bn is not None:
         # Fill unpinned knobs from the (cached) engine plan.
         auto = engine.plan_for(desc)
         plan = GroupedGemmPlan(desc, bm or auto.bm, bk or auto.bk,
                                bn or auto.bn, fused=auto.fused)
+    if spec is not None:
+        # Inference-direct dispatch (no VJP wrapper on the quant axis).
+        check_bias(epilogue, bias)
+        if fused is None:
+            return engine.dispatch(desc, x, w, group_sizes, plan=plan,
+                                   bias=bias, sx=sx, sw=sw)
+        from repro.core.config import use
+        with use(fused="on" if fused else "off"):
+            return engine.dispatch(desc, x, w, group_sizes, plan=plan,
+                                   bias=bias, sx=sx, sw=sw)
     if plan is None and fused is None:
         # Default path: differentiable — training flows through the
         # custom VJP onto the scheduled backward walk (DESIGN.md §11).

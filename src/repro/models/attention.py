@@ -52,10 +52,14 @@ class PageSpec(NamedTuple):
     Threaded through ``block_cache``/``stack_cache``/``init_cache``: when
     present, "attn" blocks get a :class:`PagedKVCache` pool instead of a
     dense per-slot ring (DESIGN.md §12).  ``max_blocks * page_size`` caps
-    the per-sequence context length the block tables can map."""
+    the per-sequence context length the block tables can map.
+    ``kv_quant="int8"`` stores the pools in int8 with per-token f32
+    dequant scales (DESIGN.md §13) — half the KV bytes per token, scales
+    folded into the decode kernel's score/PV algebra."""
     num_pages: int
     page_size: int
     max_blocks: int
+    kv_quant: Optional[str] = None
 
 
 class PagedKVCache(NamedTuple):
@@ -66,18 +70,31 @@ class PagedKVCache(NamedTuple):
     (``repro.runtime.pages.PagePool``) and mapped by ``tables`` — so a
     slot's KV footprint tracks its actual length, and admitting/evicting
     a sequence moves page *indices*, never KV bytes.  Position ``p`` of
-    slot ``i`` lives at ``(tables[i, p // P], p % P)``."""
+    slot ``i`` lives at ``(tables[i, p // P], p % P)``.
+
+    ``k_scale``/``v_scale`` (int8 pools only, else None): per-token f32
+    dequant scales, same page layout as the pools with the head/feature
+    dims reduced away — ``(num_pages, page_size)``."""
     k: jax.Array       # (num_pages, page_size, h_kv, hd)
     v: jax.Array       # (num_pages, page_size, h_kv, hd)
     tables: jax.Array  # (num_slots, max_blocks) int32 page ids
+    k_scale: Optional[jax.Array] = None  # (num_pages, page_size) f32
+    v_scale: Optional[jax.Array] = None
 
 
 def init_paged_kv_cache(num_slots, spec: PageSpec, n_kv, head_dim,
                         dtype=jnp.bfloat16) -> PagedKVCache:
+    kv_quant = getattr(spec, "kv_quant", None)
+    pool_dtype = jnp.int8 if kv_quant == "int8" else dtype
+    scale = (jnp.zeros((spec.num_pages, spec.page_size), jnp.float32)
+             if kv_quant == "int8" else None)
     return PagedKVCache(
-        k=jnp.zeros((spec.num_pages, spec.page_size, n_kv, head_dim), dtype),
-        v=jnp.zeros((spec.num_pages, spec.page_size, n_kv, head_dim), dtype),
+        k=jnp.zeros((spec.num_pages, spec.page_size, n_kv, head_dim),
+                    pool_dtype),
+        v=jnp.zeros((spec.num_pages, spec.page_size, n_kv, head_dim),
+                    pool_dtype),
         tables=jnp.zeros((num_slots, spec.max_blocks), jnp.int32),
+        k_scale=scale, v_scale=scale,
     )
 
 
@@ -257,24 +274,47 @@ def _paged_decode(cfg, cache: PagedKVCache, q, k, v, pos2d, dt, g):
     # mode="drop" discards (NOT -1 — negative indices wrap in jnp).
     pid = jnp.where(active, blk, pages)
     off = safe % P
-    k_new = cache.k.at[pid, off].set(k[:, 0].astype(cache.k.dtype),
-                                     mode="drop")
-    v_new = cache.v.at[pid, off].set(v[:, 0].astype(cache.v.dtype),
-                                     mode="drop")
-    new_cache = PagedKVCache(k_new, v_new, cache.tables)
+    ks_new = vs_new = None
+    if cache.k_scale is not None:
+        # int8 pools (DESIGN.md §13): symmetric per-token quantization at
+        # write time — one f32 scale per (page, offset) row, the row's
+        # absmax over heads x features divided by the int8 range.
+        def _qrow(row):  # (S, hkv, hd) wide -> int8 values + (S,) scales
+            r32 = row.astype(jnp.float32)
+            s = jnp.max(jnp.abs(r32), axis=(1, 2)) / 127.0 + 1e-12
+            qv = jnp.clip(jnp.round(r32 / s[:, None, None]), -127, 127)
+            return qv.astype(jnp.int8), s.astype(jnp.float32)
+        kq, ks = _qrow(k[:, 0])
+        vq, vs = _qrow(v[:, 0])
+        k_new = cache.k.at[pid, off].set(kq, mode="drop")
+        v_new = cache.v.at[pid, off].set(vq, mode="drop")
+        ks_new = cache.k_scale.at[pid, off].set(ks, mode="drop")
+        vs_new = cache.v_scale.at[pid, off].set(vs, mode="drop")
+    else:
+        k_new = cache.k.at[pid, off].set(k[:, 0].astype(cache.k.dtype),
+                                         mode="drop")
+        v_new = cache.v.at[pid, off].set(v[:, 0].astype(cache.v.dtype),
+                                         mode="drop")
+    new_cache = PagedKVCache(k_new, v_new, cache.tables, ks_new, vs_new)
     lengths = jnp.where(active, pos + 1, 0)
 
     if get_config().backend == "pallas" and not cfg.attn_logit_softcap:
         from repro.kernels.flash_attention import paged_decode_attention
         out = paged_decode_attention(q[:, 0], k_new, v_new, cache.tables,
-                                     lengths)[:, None]
+                                     lengths, k_scale=ks_new,
+                                     v_scale=vs_new)[:, None]
         return new_cache, out
     # XLA fallback: gather the block-table pages into a contiguous view
     # (gathered column j holds absolute position j) and mask j >= length
     # — identical math to ref_paged_decode_attention, expressed through
     # the shared _attend so float ops match the dense decode path.
-    gk = k_new[jnp.clip(cache.tables, 0, pages - 1)]  # (S, B, P, hkv, hd)
-    gv = v_new[jnp.clip(cache.tables, 0, pages - 1)]
+    gidx = jnp.clip(cache.tables, 0, pages - 1)
+    gk = k_new[gidx]  # (S, B, P, hkv, hd)
+    gv = v_new[gidx]
+    if ks_new is not None:
+        # dequant in f32 before entering the shared attention math
+        gk = gk.astype(jnp.float32) * ks_new[gidx][..., None, None]
+        gv = gv.astype(jnp.float32) * vs_new[gidx][..., None, None]
     gk = _repeat_kv(gk.reshape(S, B * P, hkv, hd).astype(dt), g)
     gv = _repeat_kv(gv.reshape(S, B * P, hkv, hd).astype(dt), g)
     live = jnp.arange(B * P)[None, :] < lengths[:, None]  # (S, B*P)

@@ -32,13 +32,21 @@ def split_rngs(rng, n):
 # ---------------------------------------------------------------------------
 
 def cast_param(p, dtype):
+    from repro.optim.compression import QuantizedTensor
+    if isinstance(p, QuantizedTensor):
+        # W8A16 weights (DESIGN.md §13): the wire format and its f32
+        # scales are the storage policy — never cast through here (the
+        # kernel dequantizes in its epilogue at the logical dtype).
+        return p
     if p.dtype == jnp.dtype(dtype) or not jnp.issubdtype(p.dtype, jnp.floating):
         return p
     return p.astype(dtype)
 
 
 def tree_cast(params, dtype):
-    return jax.tree.map(lambda p: cast_param(p, dtype), params)
+    from repro.optim.compression import QuantizedTensor
+    return jax.tree.map(lambda p: cast_param(p, dtype), params,
+                        is_leaf=lambda p: isinstance(p, QuantizedTensor))
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,16 @@
-"""Gradient compression for cross-pod (DCN) reduction.
+"""Quantization: weight-only storage formats and gradient compression.
 
-Two pieces:
+Three pieces (DESIGN.md §13):
+
+  * The **quant-axis codec** — :func:`quantize` / :func:`dequantize` /
+    :class:`QuantizedTensor` implement the scale schemes of
+    :class:`repro.core.descriptor.QuantSpec` (per_tensor / per_channel /
+    per_tile) plus the dispatch-time helpers (:func:`expand_scale`,
+    :func:`quantize_operand`) the GEMM entry points use to build the
+    kernel-facing f32 scale vectors.  :func:`quantize_model` is the
+    quantize-once-at-load path for W8A16 serving: every 2-D ``"w"``
+    projection leaf becomes a :class:`QuantizedTensor`; embeddings
+    (``"table"``), norm vectors and 3-D grouped MoE banks stay wide.
 
   * :func:`error_feedback_compress` — int8 block-quantization with error
     feedback (the residual of each quantization step is carried into the
@@ -16,13 +26,215 @@ Two pieces:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.descriptor import QuantSpec, resolve_quant
+from repro.core.machine import FP8_DTYPE, HAS_FP8
+from repro.core.schedule import QUANT_TILE
+
 _BLOCK = 256
+
+# Largest representable magnitude per wire dtype: symmetric int8 uses the
+# [-127, 127] range (keeping -128 unused preserves negation symmetry);
+# fp8-e4m3 saturates at 448.
+_QMAX = {"int8": 127.0, "float8_e4m3": 448.0}
+
+
+def _wire_dtype(spec: QuantSpec):
+    if spec.dtype == "int8":
+        return jnp.int8
+    if not HAS_FP8:  # pragma: no cover - build-dependent
+        raise ValueError("float8_e4m3 is unavailable in this jax build "
+                         "(repro.core.machine.HAS_FP8 is False)")
+    return FP8_DTYPE
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedTensor:
+    """A quantized array plus the scale metadata to reconstruct it.
+
+    The storage format of the weight-only path (DESIGN.md §13): ``q``
+    holds the narrow wire values, ``scale`` the f32 scale(s) whose shape
+    depends on ``spec.scheme`` (scalar / per-channel vector / per-tile
+    vector along ``axis``).  Registered as a pytree whose *children* are
+    the arrays and whose aux data is the (hashable) spec — so a
+    quantized param tree jits, donates, and shards like a wide one.
+    ``dtype`` reports the *logical* (pre-quantization) dtype so shape/
+    dtype-inspecting model code keeps working.
+    """
+
+    def __init__(self, q, scale, spec: QuantSpec, axis: int = -1,
+                 orig_dtype=jnp.float32):
+        self.q = q
+        self.scale = scale
+        self.spec = spec
+        self.axis = axis
+        self.orig_dtype = jnp.dtype(orig_dtype)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.orig_dtype
+
+    def dequantize(self, dtype=None):
+        return dequantize(self, dtype=dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.spec, self.axis, self.orig_dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q, scale, aux[0], axis=aux[1], orig_dtype=aux[2])
+
+    def __repr__(self):
+        return (f"QuantizedTensor(shape={tuple(self.q.shape)}, "
+                f"spec={self.spec!r}, axis={self.axis})")
+
+
+def _scale_for(x32, spec: QuantSpec, axis: int):
+    """f32 scale array for ``x32`` under ``spec.scheme`` along ``axis``.
+
+    per_tensor -> (); per_channel -> (x.shape[axis],); per_tile ->
+    (ceil(x.shape[axis] / QUANT_TILE),) — fixed 128-wide blocks along the
+    channel axis, trailing tail block allowed to be short.
+    """
+    qmax = _QMAX[spec.dtype]
+    if spec.scheme == "per_tensor":
+        amax = jnp.max(jnp.abs(x32)) if x32.size else jnp.zeros((), jnp.float32)
+        return amax / qmax + 1e-12
+    axis = axis % max(x32.ndim, 1)
+    reduce_axes = tuple(i for i in range(x32.ndim) if i != axis)
+    if spec.scheme == "per_channel":
+        amax = jnp.max(jnp.abs(x32), axis=reduce_axes) if x32.size else \
+            jnp.zeros((x32.shape[axis],), jnp.float32)
+        return amax / qmax + 1e-12
+    # per_tile: pad the channel axis to a QUANT_TILE multiple, reduce per
+    # block.  The pad is zeros, which never win the max.
+    n = x32.shape[axis]
+    tiles = max(-(-n // QUANT_TILE), 1) if n else 0
+    if n == 0:
+        return jnp.zeros((0,), jnp.float32)
+    moved = jnp.moveaxis(x32, axis, -1).reshape(-1, n)
+    pad = tiles * QUANT_TILE - n
+    moved = jnp.pad(moved, ((0, 0), (0, pad)))
+    amax = jnp.max(jnp.abs(moved.reshape(moved.shape[0], tiles, QUANT_TILE)),
+                   axis=(0, 2))
+    return amax / qmax + 1e-12
+
+
+def expand_scale(scale, spec: QuantSpec, length: int):
+    """Expand a scheme-shaped scale to a dense (length,) f32 vector.
+
+    This is the dispatch-time form the kernels consume: per_tensor
+    broadcasts the scalar, per_channel is already dense, per_tile repeats
+    each block scale QUANT_TILE times and truncates the tail.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    if spec.scheme == "per_tensor":
+        return jnp.full((length,), scale, jnp.float32)
+    if spec.scheme == "per_channel":
+        return scale.reshape(length)
+    return jnp.repeat(scale, QUANT_TILE)[:length]
+
+
+def quantize(x, spec, *, axis: int = -1) -> QuantizedTensor:
+    """Quantize ``x`` to ``spec``'s wire dtype along channel ``axis``.
+
+    Symmetric scaling: ``q = round(x / scale)`` clipped to the wire
+    range, ``scale = amax / qmax`` per channel group.  ``axis`` is the
+    channel axis for per_channel / per_tile (the output-feature axis of
+    a weight, the row axis of an activation).
+    """
+    spec = resolve_quant(spec)
+    x = jnp.asarray(x)
+    x32 = x.astype(jnp.float32)
+    scale = _scale_for(x32, spec, axis)
+    if spec.scheme == "per_tensor":
+        dense = scale
+    else:
+        dense = expand_scale(scale, spec, x.shape[axis % max(x.ndim, 1)]) \
+            if x.size else scale
+        if x.size:
+            shape = [1] * x.ndim
+            shape[axis % x.ndim] = x.shape[axis % x.ndim]
+            dense = dense.reshape(shape)
+    scaled = x32 / dense if x.size else x32
+    if spec.dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(scaled, -_QMAX["float8_e4m3"],
+                     _QMAX["float8_e4m3"]).astype(_wire_dtype(spec))
+    return QuantizedTensor(q, scale, spec, axis=axis, orig_dtype=x.dtype)
+
+
+def dequantize(qt: QuantizedTensor, dtype=None):
+    """Reconstruct the wide tensor: ``q.astype(f32) * scale`` per group."""
+    dtype = qt.orig_dtype if dtype is None else dtype
+    x32 = qt.q.astype(jnp.float32)
+    if qt.spec.scheme == "per_tensor" or x32.size == 0:
+        return (x32 * qt.scale).astype(dtype)
+    axis = qt.axis % x32.ndim
+    dense = expand_scale(qt.scale, qt.spec, x32.shape[axis])
+    shape = [1] * x32.ndim
+    shape[axis] = x32.shape[axis]
+    return (x32 * dense.reshape(shape)).astype(dtype)
+
+
+def quantize_operand(x, spec: QuantSpec, *, axis: int):
+    """Quantize a GEMM operand at dispatch, returning kernel-ready parts.
+
+    Returns ``(q, dense_scale)`` where ``dense_scale`` is the full
+    (x.shape[axis],) f32 dequant vector the fused epilogue consumes
+    (DESIGN.md §13) — per_tensor/per_tile already expanded.
+    """
+    qt = quantize(x, spec, axis=axis)
+    n = x.shape[axis % max(x.ndim, 1)]
+    return qt.q, expand_scale(qt.scale, spec, n)
+
+
+def quantize_model(params, spec="w8a16", *, min_size: int = 0):
+    """Quantize-once-at-load for W8A16 serving (DESIGN.md §13).
+
+    Walks the param tree and replaces every 2-D ``"w"`` projection leaf
+    with a :class:`QuantizedTensor` (per-output-channel by default,
+    ``axis=-1``).  Embedding tables (``"table"``), norm vectors, biases
+    and the 3-D grouped-MoE weight banks are left wide — those either
+    feed gathers (no GEMM to fuse into) or the grouped path, which
+    quantizes activations at dispatch instead.  ``min_size`` skips
+    leaves smaller than the threshold (tiny projections gain nothing).
+    """
+    spec = resolve_quant(spec)
+    if spec is None:
+        return params
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if (k == "w" and hasattr(v, "ndim") and v.ndim == 2
+                        and not isinstance(v, QuantizedTensor)
+                        and v.size >= min_size):
+                    out[k] = quantize(v, spec, axis=-1)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
 
 
 def _quantize_int8(x32: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -173,14 +173,31 @@ def _write_one(sv, dv, *, slot: int, length: int, page_ids, page_size: int):
         pad = n * page_size - length
         ids = jnp.asarray(np.asarray(page_ids, np.int32))
 
-        def scatter(pool, dense):
+        def pages_of(dense):
             rows = jnp.pad(dense[0, :length],
                            ((0, pad),) + ((0, 0),) * (dense.ndim - 2))
-            rows = rows.reshape(n, page_size, *dense.shape[2:])
-            return pool.at[ids].set(rows.astype(pool.dtype))
+            return rows.reshape(n, page_size, *dense.shape[2:])
+
+        def scatter(pool, dense):
+            return pool.at[ids].set(pages_of(dense).astype(pool.dtype))
+
+        if sv.k_scale is not None:
+            # int8 pool (DESIGN.md §13): quantize the prefilled rows with
+            # the same symmetric per-token scaling the decode write uses.
+            def qscatter(pool, spool, dense):
+                rows = pages_of(dense).astype(jnp.float32)  # (n, P, hkv, hd)
+                s = jnp.max(jnp.abs(rows), axis=(2, 3)) / 127.0 + 1e-12
+                qv = jnp.clip(jnp.round(rows / s[..., None, None]),
+                              -127, 127).astype(jnp.int8)
+                return (pool.at[ids].set(qv),
+                        spool.at[ids].set(s.astype(jnp.float32)))
+
+            k_new, ks_new = qscatter(sv.k, sv.k_scale, dv.k)
+            v_new, vs_new = qscatter(sv.v, sv.v_scale, dv.v)
+            return PagedKVCache(k_new, v_new, sv.tables, ks_new, vs_new)
 
         return PagedKVCache(scatter(sv.k, dv.k), scatter(sv.v, dv.v),
-                            sv.tables)
+                            sv.tables, sv.k_scale, sv.v_scale)
     if isinstance(sv, KVCache):
         # Local ring: the dense prefill ring (cap_d = min(L, window)) and
         # the serving ring (cap_s = min(capacity, window)) may disagree
@@ -239,7 +256,7 @@ def refresh_tables(cache, tables):
         if isinstance(x, PagedKVCache):
             t = tables if x.tables.ndim == 2 \
                 else jnp.broadcast_to(tables, x.tables.shape)
-            return PagedKVCache(x.k, x.v, t)
+            return x._replace(tables=t)
         return x
 
     return jax.tree.map(f, cache,

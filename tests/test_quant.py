@@ -1,0 +1,414 @@
+"""Low-precision axis (DESIGN.md §13): quantization codec round-trips,
+fused-dequant-epilogue parity, single-launch accounting, tuned-cache
+dtype keying, W8A16 model plumbing, and KV-int8 decode consistency."""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GemmDescriptor, engine, plan_gemm, use
+from repro.core.descriptor import QuantSpec, resolve_quant
+from repro.core.machine import HAS_FP8
+from repro.core.schedule import QUANT_TILE
+from repro.kernels.gemm import gemm
+from repro.kernels.gemm.ops import _xla_quant_gemm
+from repro.kernels.grouped_gemm import grouped_gemm
+from repro.optim.compression import (QuantizedTensor, dequantize,
+                                     expand_scale, quantize,
+                                     quantize_model, quantize_operand)
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def rel_err(got, want):
+    denom = float(jnp.max(jnp.abs(want))) or 1.0
+    return float(jnp.max(jnp.abs(got - want))) / denom
+
+
+# ---------------------------------------------------------------------------
+# Codec round-trips (optim/compression.py)
+# ---------------------------------------------------------------------------
+
+SCHEMES = ["per_tensor", "per_channel", "per_tile"]
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_roundtrip_error_bound(scheme):
+    """Symmetric int8: round-trip error <= scale/2 per element, i.e.
+    <= amax/254 of the quantization group's absmax."""
+    x = rand((200, 96))
+    qt = quantize(x, QuantSpec("int8", scheme), axis=-1)
+    back = dequantize(qt)
+    scale = expand_scale(qt.scale, qt.spec, x.shape[-1])
+    # per-element bound: half a quantization step of the group's scale
+    bound = jnp.broadcast_to(scale * 0.5 + 1e-7, x.shape)
+    assert bool(jnp.all(jnp.abs(back - x) <= bound))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_roundtrip_tail_not_multiple_of_tile(scheme):
+    """Lengths not divisible by QUANT_TILE still round-trip (ragged
+    last tile)."""
+    n = QUANT_TILE + 37
+    x = rand((5, n))
+    qt = quantize(x, QuantSpec("int8", scheme), axis=-1)
+    back = dequantize(qt)
+    assert back.shape == x.shape
+    assert rel_err(back, x) < 1e-2
+
+
+def test_roundtrip_zero_size():
+    x = jnp.zeros((0, 64), jnp.float32)
+    qt = quantize(x, "int8", axis=-1)
+    assert dequantize(qt).shape == (0, 64)
+    # all-zero input must not divide by zero and must decode to zeros
+    z = jnp.zeros((8, 64), jnp.float32)
+    back = dequantize(quantize(z, "int8", axis=-1))
+    assert bool(jnp.all(back == 0))
+
+
+def test_expand_scale_shapes():
+    spec_t = QuantSpec("int8", "per_tensor")
+    spec_c = QuantSpec("int8", "per_channel")
+    spec_b = QuantSpec("int8", "per_tile")
+    n = QUANT_TILE * 2 + 9
+    assert expand_scale(jnp.ones(()), spec_t, n).shape == (n,)
+    assert expand_scale(jnp.ones((n,)), spec_c, n).shape == (n,)
+    assert expand_scale(jnp.ones((3,)), spec_b, n).shape == (n,)
+
+
+def test_quantized_tensor_is_pytree():
+    qt = quantize(rand((16, 32)), "w8a16", axis=-1)
+    leaves, treedef = jax.tree.flatten(qt)
+    assert len(leaves) == 2  # q + scale; spec/axis/orig_dtype are aux
+    qt2 = jax.tree.unflatten(treedef, leaves)
+    assert qt2.spec == qt.spec and qt2.axis == qt.axis
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution + descriptor constraints
+# ---------------------------------------------------------------------------
+
+def test_resolve_quant_aliases():
+    assert resolve_quant(None) is None
+    assert resolve_quant(False) is None
+    assert resolve_quant("int8") == QuantSpec("int8", "per_channel")
+    assert resolve_quant("w8a16").weight_only
+    spec = QuantSpec("int8", "per_channel")
+    assert resolve_quant(spec) is spec
+
+
+def test_quant_descriptor_constraints():
+    with pytest.raises(ValueError):
+        GemmDescriptor(m=8, n=8, k=8, accumulate=True,
+                       quant=resolve_quant("int8"))
+    if not HAS_FP8:
+        with pytest.raises(ValueError):
+            QuantSpec("float8_e4m3")
+
+
+def test_cache_key_separates_quant():
+    d0 = GemmDescriptor(m=64, n=64, k=64)
+    d1 = GemmDescriptor(m=64, n=64, k=64, quant=resolve_quant("int8"))
+    d2 = GemmDescriptor(m=64, n=64, k=64, quant=resolve_quant("w8a16"))
+    assert len({d0.cache_key(), d1.cache_key(), d2.cache_key()}) == 3
+
+
+# ---------------------------------------------------------------------------
+# Quantized GEMM: parity vs dequant reference + launch accounting
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [(80, 96, 160), (128, 128, 128), (33, 70, 100)]
+
+
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+@pytest.mark.parametrize("mode", ["int8", "w8a16"])
+def test_quant_gemm_parity(m, k, n, mode):
+    """Quantized GEMM vs pure-jnp dequantize-then-matmul reference: the
+    only error is the quantization itself, so comparing against the
+    dequantized operands must be tight."""
+    a, b = rand((m, k)), rand((k, n))
+    spec = resolve_quant(mode)
+    bq, sb = quantize_operand(b, spec, axis=1)
+    bd = bq.astype(jnp.float32) * sb[None, :]
+    if spec.weight_only:
+        ref = a @ bd
+    else:
+        aq, sa = quantize_operand(a, spec, axis=0)
+        ref = (aq.astype(jnp.float32) * sa[:, None]) @ bd
+    with use(backend="pallas"):
+        out = gemm(a, b, quant=mode)
+    assert rel_err(out, ref) < 1e-5
+    # and the end-to-end error vs the wide product is the quant error only
+    assert rel_err(out, a @ b) < 5e-2
+
+
+def test_quant_gemm_single_launch():
+    a, b = rand((80, 96)), rand((96, 160))
+    with use(backend="pallas"):
+        engine.reset_stats()
+        gemm(a, b, quant="int8")
+        s = engine.stats()["gemm"]
+    assert s["launches"] == 1
+    assert s["plan_source_model"] + s["plan_source_autotuned"] \
+        + s["plan_source_tuned_cache"] == 1
+
+
+@pytest.mark.parametrize("epilogue,bias,exact", [
+    (None, False, True), ("relu", False, True),
+    ("bias", True, False), ("bias_gelu", True, False),
+    ("silu", False, False),
+])
+def test_fused_dequant_epilogue_parity(epilogue, bias, exact):
+    """Fused single-launch lowering vs the XLA dequant-then-epilogue
+    formulation sharing apply_epilogue: bit-identical when the epilogue
+    is multiply-only (int32 accumulation is exact under any tiling and
+    the dequant products round identically).  ``bias`` adds after the
+    dequant multiply, which XLA may contract into an FMA in one context
+    but not the other, and the transcendental activations differ by
+    ULPs across fusion contexts — those get a tight float tolerance."""
+    a, b = rand((80, 96)), rand((96, 160))
+    spec = resolve_quant("int8")
+    aq, sa = quantize_operand(a, spec, axis=0)
+    bq, sb = quantize_operand(b, spec, axis=1)
+    bv = rand((160,)) if bias else None
+    desc = GemmDescriptor.from_operands(aq, bq, epilogue=epilogue,
+                                        quant=spec)
+    ref = _xla_quant_gemm(desc, aq, bq, bv, sa, sb)
+    with use(backend="pallas"):
+        out = gemm(a, b, quant="int8", epilogue=epilogue, bias=bv,
+                   fused=True)
+    if exact:
+        assert bool(jnp.all(out == ref)), \
+            f"fused {epilogue} not bit-identical to dequant reference"
+    else:
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_quant_fused_vs_unfused():
+    """fused=False routes through the XLA formulation (0 launches);
+    for int8 it matches the fused kernel bit for bit."""
+    a, b = rand((70, 90)), rand((90, 110))
+    with use(backend="pallas"):
+        engine.reset_stats()
+        fused = gemm(a, b, quant="int8", fused=True)
+        assert engine.stats()["gemm"]["launches"] == 1
+        engine.reset_stats()
+        unfused = gemm(a, b, quant="int8", fused=False)
+        assert engine.stats()["gemm"]["launches"] == 0
+    assert bool(jnp.all(fused == unfused))
+
+
+def test_quant_per_schemes_gemm():
+    a, b = rand((64, QUANT_TILE + 32)), rand((QUANT_TILE + 32, 96))
+    for scheme in SCHEMES:
+        spec = QuantSpec("int8", scheme)
+        with use(backend="pallas"):
+            out = gemm(a, b, quant=spec)
+        assert rel_err(out, a @ b) < 5e-2, scheme
+
+
+def test_ambient_config_quant_and_opt_out():
+    a, b = rand((48, 64)), rand((64, 80))
+    wide = gemm(a, b)
+    with use(backend="pallas", quant="int8"):
+        q = gemm(a, b)          # picks up ambient spec
+        opt_out = gemm(a, b, quant=False)
+    assert rel_err(q, wide) > 1e-6      # actually quantized
+    np.testing.assert_allclose(opt_out, wide, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["int8", "w8a16"])
+def test_quant_grouped_parity(mode):
+    E, T, K, N = 4, 96, 64, 128
+    x = rand((T, K))
+    w = rand((E, K, N))
+    gs = jnp.asarray([40, 0, 30, 26], jnp.int32)
+    grp = jnp.repeat(jnp.arange(E), np.asarray(gs))
+    spec = resolve_quant(mode)
+    wq, sw = jax.vmap(
+        lambda wi: quantize_operand(wi, spec, axis=1))(w)
+    wd = wq.astype(jnp.float32) * sw[:, None, :]
+    if spec.weight_only:
+        ref = jnp.einsum("tk,tkn->tn", x, wd[grp])
+    else:
+        xq, sx = quantize_operand(x, spec, axis=0)
+        ref = jnp.einsum("tk,tkn->tn",
+                         xq.astype(jnp.float32) * sx[:, None], wd[grp])
+    with use(backend="pallas"):
+        engine.reset_stats()
+        out = grouped_gemm(x, w, gs, quant=mode)
+        assert engine.stats()["grouped_gemm"]["launches"] == 1
+    assert rel_err(out, ref) < 1e-4
+    assert rel_err(out, jnp.einsum("tk,tkn->tn", x, w[grp])) < 5e-2
+
+
+def test_quant_grouped_epilogue():
+    E, T, K, N = 3, 64, 48, 96
+    x, w = rand((T, K)), rand((E, K, N))
+    bias = rand((E, N))
+    gs = jnp.asarray([20, 24, 20], jnp.int32)
+    grp = jnp.repeat(jnp.arange(E), np.asarray(gs))
+    ref = jax.nn.silu(jnp.einsum("tk,tkn->tn", x, w[grp]) + bias[grp])
+    with use(backend="pallas"):
+        out = grouped_gemm(x, w, gs, quant="int8", epilogue="bias_silu",
+                           bias=bias)
+    assert rel_err(out, ref) < 5e-2
+
+
+def test_quant_grouped_fused_vs_unfused():
+    E, T, K, N = 3, 48, 32, 64
+    x, w = rand((T, K)), rand((E, K, N))
+    gs = jnp.asarray([16, 16, 16], jnp.int32)
+    with use(backend="pallas"):
+        engine.reset_stats()
+        fused = grouped_gemm(x, w, gs, quant="int8", fused=True)
+        assert engine.stats()["grouped_gemm"]["launches"] == 1
+        engine.reset_stats()
+        unfused = grouped_gemm(x, w, gs, quant="int8", fused=False)
+        assert engine.stats()["grouped_gemm"]["launches"] == 0
+    assert bool(jnp.all(fused == unfused))
+
+
+# ---------------------------------------------------------------------------
+# Tuned-cache keying (satellite: full-dtype record fingerprints)
+# ---------------------------------------------------------------------------
+
+def test_tuning_record_carries_dtypes():
+    from repro.core.autotune import (_desc_dtypes, plan_from_record,
+                                     plan_to_record)
+    d_wide = GemmDescriptor(m=80, n=80, k=128)
+    d_q = GemmDescriptor(m=80, n=80, k=128, quant=resolve_quant("int8"))
+    rec = plan_to_record(plan_gemm(d_wide))
+    assert rec["dtypes"] == _desc_dtypes(d_wide)
+    # a wide record must never replay onto the quantized descriptor
+    assert plan_from_record(d_q, rec) is None
+    assert plan_from_record(d_wide, rec) is not None
+    rec_q = plan_to_record(plan_gemm(d_q))
+    assert rec_q["dtypes"] != rec["dtypes"]
+    assert plan_from_record(d_q, rec_q) is not None
+
+
+# ---------------------------------------------------------------------------
+# Model plumbing: quantize_model / linear / tree_cast
+# ---------------------------------------------------------------------------
+
+def test_quantize_model_and_linear():
+    from repro.models.common import linear, tree_cast
+    w = rand((64, 48))
+    params = {"w": w, "b": jnp.zeros((48,), jnp.float32)}
+    qp = quantize_model(params, "w8a16")
+    assert isinstance(qp["w"], QuantizedTensor)
+    assert not isinstance(qp["b"], QuantizedTensor)
+    x = rand((16, 64))
+    ref = x @ dequantize(qp["w"])
+    for backend in ("xla", "pallas"):
+        with use(backend=backend):
+            out = linear(qp, x)
+        assert rel_err(out, ref) < 1e-5, backend
+    # tree_cast must pass quantized leaves through untouched
+    qp16 = tree_cast(qp, jnp.bfloat16)
+    assert isinstance(qp16["w"], QuantizedTensor)
+    assert qp16["b"].dtype == jnp.bfloat16
+
+
+def test_quantize_model_min_size():
+    params = {"a": {"w": rand((8, 8))}, "b": {"w": rand((64, 64))}}
+    qp = quantize_model(params, "w8a16", min_size=1024)
+    assert not isinstance(qp["a"]["w"], QuantizedTensor)
+    assert isinstance(qp["b"]["w"], QuantizedTensor)
+
+
+# ---------------------------------------------------------------------------
+# KV-int8 paged decode
+# ---------------------------------------------------------------------------
+
+def test_kv_int8_decode_consistency():
+    """int8 KV pools vs wide pools over a multi-step decode: the pallas
+    and XLA quantized paths must agree with each other to float noise,
+    and with the wide path to within int8 quantization error."""
+    from repro.models.attention import (PageSpec, _paged_decode,
+                                        init_paged_kv_cache)
+    B, H, HKV, HD, P = 3, 4, 2, 64, 16
+    cfg = types.SimpleNamespace(attn_logit_softcap=0.0)
+    spec_w = PageSpec(num_pages=8, page_size=P, max_blocks=2)
+    spec_q = PageSpec(num_pages=8, page_size=P, max_blocks=2,
+                      kv_quant="int8")
+
+    def run(spec, backend):
+        rng = np.random.default_rng(7)
+        cache = init_paged_kv_cache(B, spec, HKV, HD, jnp.float32)
+        assert (cache.k.dtype == jnp.int8) == (spec.kv_quant == "int8")
+        cache = cache._replace(
+            tables=jnp.asarray([[0, 1], [2, 3], [4, 5]], jnp.int32))
+        base = jnp.asarray([0, 3, 1], jnp.int32)
+        out = None
+        with use(backend=backend):
+            for step in range(10):
+                qkv = [jnp.asarray(rng.standard_normal((B, 1, h, HD)),
+                                   jnp.float32) * 0.3
+                       for h in (H, HKV, HKV)]
+                cache, out = _paged_decode(cfg, cache, *qkv,
+                                           (base + step)[:, None],
+                                           jnp.float32, H // HKV)
+        return out
+
+    wide = run(spec_w, "xla")
+    q_xla = run(spec_q, "xla")
+    q_pl = run(spec_q, "pallas")
+    assert rel_err(q_pl, q_xla) < 1e-5      # same quantized math
+    assert rel_err(q_xla, wide) < 5e-2      # only int8 error vs wide
+    assert rel_err(q_pl, wide) < 5e-2
+
+
+def test_kv_int8_write_prefill_roundtrip():
+    """runtime/pages.write_prefill quantizes into int8 pools and
+    refresh_tables keeps the scale fields."""
+    from repro.models.attention import KVCache, PagedKVCache, PageSpec
+    from repro.models.attention import init_paged_kv_cache
+    from repro.runtime.pages import refresh_tables, _write_one
+    P, HKV, HD, L = 16, 2, 32, 21
+    spec = PageSpec(num_pages=6, page_size=P, max_blocks=3,
+                    kv_quant="int8")
+    sv = init_paged_kv_cache(2, spec, HKV, HD, jnp.float32)
+    dense = KVCache(k=rand((1, L, HKV, HD)), v=rand((1, L, HKV, HD)),
+                    pos=jnp.arange(L, dtype=jnp.int32)[None])
+    out = _write_one(sv, dense, slot=0, length=L, page_ids=[4, 2],
+                     page_size=P)
+    assert out.k.dtype == jnp.int8 and out.k_scale is not None
+    # dequantized page rows must match the dense prefill rows
+    deq = (out.k[4].astype(jnp.float32)
+           * out.k_scale[4][:, None, None])
+    np.testing.assert_allclose(deq, dense.k[0, :P], atol=2e-2, rtol=2e-2)
+    out2 = refresh_tables(out, np.ones((2, 3), np.int32))
+    assert out2.k_scale is not None and bool(jnp.all(out2.tables == 1))
+
+
+# ---------------------------------------------------------------------------
+# fp8 (gated on backend support)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not HAS_FP8, reason="no float8_e4m3 in this jax")
+def test_fp8_gemm_parity():
+    a, b = rand((64, 96), scale=0.5), rand((96, 64), scale=0.5)
+    spec = resolve_quant("fp8")
+    bq, sb = quantize_operand(b, spec, axis=1)
+    aq, sa = quantize_operand(a, spec, axis=0)
+    ref = ((aq.astype(jnp.float32) * sa[:, None])
+           @ (bq.astype(jnp.float32) * sb[None, :]))
+    with use(backend="pallas"):
+        out = gemm(a, b, quant="fp8")
+    # fp8 accumulates in f32: looser than int8's exact int32 path
+    assert rel_err(out, ref) < 1e-3
+    assert rel_err(out, a @ b) < 1e-1

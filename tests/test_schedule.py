@@ -12,8 +12,8 @@ except ImportError:
 
 from repro.core import (GemmDescriptor, GroupedGemmDescriptor,
                         GroupedTileSchedule, plan_gemm, plan_grouped)
-from repro.core.schedule import (TILE_COMPUTE, TILE_SKIP, TILE_ZERO,
-                                 ceil_div, flash_tile_schedule,
+from repro.core.schedule import (QUANT_TILE, TILE_COMPUTE, TILE_SKIP,
+                                 TILE_ZERO, ceil_div, flash_tile_schedule,
                                  flatten_regions, pack_table,
                                  plan_launches)
 
@@ -31,11 +31,12 @@ def _check_gemm_schedule(m, n, k):
     assert sched.bk <= k and sched.k_steps == ceil_div(k, sched.bk)
     # cell-exact ownership (validate() checks areas; this checks cells)
     owned = np.zeros((m, n), dtype=np.int64)
-    for row0, col0, row_end, col_end, rs, cs, bid in sched.tiles:
+    for row0, col0, row_end, col_end, rs, cs, bid, sidx in sched.tiles:
         owned[row0:row_end, col0:col_end] += 1
+        assert sidx == rs // QUANT_TILE
     assert (owned == 1).all()
     table = pack_table(sched.tiles)
-    assert table.dtype == np.int32 and table.shape == (sched.num_tiles, 7)
+    assert table.dtype == np.int32 and table.shape == (sched.num_tiles, 8)
 
 
 _GEMM_CASES = [(1, 1, 1), (7, 33, 100), (128, 128, 128), (300, 500, 128),

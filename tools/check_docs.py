@@ -20,7 +20,11 @@ Four contracts across the doc surfaces:
     otherwise;
   * DESIGN.md §12 must keep naming the serving-runtime surface it
     documents (scheduler → pages → decode schedule → single launch) —
-    the chapter drifts from the runtime otherwise.
+    the chapter drifts from the runtime otherwise;
+  * DESIGN.md §13 must keep naming the low-precision surface (quant
+    spec → scale tables → fused dequant epilogue → W8A16 codec →
+    KV-int8 pools → quant benchmark), with the same two-sided
+    existence check.
 
 Stdlib only (``ast``-based, no imports of the package needed for the
 docstring gate); exits non-zero with one line per violation.
@@ -226,6 +230,42 @@ def check_design_serving() -> list:
     return errors
 
 
+# The low-precision surface DESIGN.md §13 documents.  Same contract as
+# _SERVING_SURFACE: the chapter must name each layer of the quant axis,
+# and each named symbol must still exist in the file that owns it.
+_QUANT_SURFACE = (
+    ("QuantSpec", "src/repro/core/descriptor.py"),
+    ("QUANT_TILE", "src/repro/core/schedule.py"),
+    ("apply_epilogue", "src/repro/kernels/epilogue.py"),
+    ("QuantizedTensor", "src/repro/optim/compression.py"),
+    ("quantize_model", "src/repro/optim/compression.py"),
+    ("kv_quant", "src/repro/models/attention.py"),
+    ("BENCH_quant.json", "benchmarks/quant_gemm.py"),
+)
+
+
+def check_design_quant() -> list:
+    """DESIGN.md §13 drift gate: the quant chapter must name each layer
+    of the low-precision axis (spec, scale tables, fused epilogue,
+    weight-only codec, KV-int8 pools, benchmark artifact), and each
+    named symbol must still exist in the file that owns it."""
+    design = (ROOT / "DESIGN.md").read_text()
+    chapter = _design_section(design, "13")
+    if not chapter:
+        return ["DESIGN.md: no '## §13' section (the low-precision "
+                "chapter)"]
+    errors = []
+    for name, rel in _QUANT_SURFACE:
+        if name not in chapter:
+            errors.append(f"DESIGN.md §13: quant surface {name!r} "
+                          f"missing from the chapter")
+        src = ROOT / rel
+        if not src.exists() or name.split(".")[0] not in src.read_text():
+            errors.append(f"{rel}: no longer defines {name!r} named by "
+                          f"DESIGN.md §13")
+    return errors
+
+
 def main() -> int:
     sections = design_sections()
     if not sections:
@@ -233,7 +273,7 @@ def main() -> int:
         return 1
     errors = (check_design_refs(sections) + check_readme()
               + check_core_docstrings() + check_design_families()
-              + check_design_serving())
+              + check_design_serving() + check_design_quant())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
@@ -241,7 +281,8 @@ def main() -> int:
                      for p in (ROOT / "src").rglob("*.py"))
         print(f"check_docs: OK ({len(sections)} DESIGN sections, "
               f"{n_refs} src citations, README verified, core docstrings "
-              f"+ §10-§12 family lists + §12 serving surface verified)")
+              f"+ §10-§12 family lists + §12 serving + §13 quant "
+              f"surfaces verified)")
     return 1 if errors else 0
 
 
