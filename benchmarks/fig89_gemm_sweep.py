@@ -58,6 +58,10 @@ def _fused_vs_multi(label, plan, a, b, layout, iters, warmup, entries):
         "speedup": round(us_m / us_f, 3) if us_f else None,
         "launches_fused": lf, "launches_multi": lm,
         "regions": len(plan.regions),
+        # The analytical planner's lowering choice for this shape — the
+        # --smoke regression gate fails entries where the planner chose
+        # fused but the measurement says multi wins by > 10%.
+        "chosen_fused": bool(plan.fused),
     }
     emit(f"fig89_fused/{label}", us_f,
          f"multi_launch_us={us_m:.0f};delta_us={us_m - us_f:.0f};"

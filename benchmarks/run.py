@@ -28,18 +28,28 @@ warm — so every table is per-phase, not cumulative.
             GEMM throughput + wire-byte savings on the fig89 shapes,
             plus the W8A16 + KV-int8 serving tokens/s delta
             (BENCH_quant.json)
+  mesh    — mesh-aware expert dispatch (DESIGN.md §14): gathered vs
+            distributed (all_to_all) grouped-GEMM step time, comm bytes
+            and launches-per-shard on a host-count-forced 8-device mesh
+            (BENCH_mesh.json; runs in a subprocess so the forced device
+            count never leaks into this process)
 
 ``--smoke`` is the CI job (interpret mode): it runs the fig89 sweep plus
-the grouped, flash, train, serve and quant suites at reduced size,
+the grouped, flash, train, serve, quant and mesh suites at reduced size,
 exercising the fused single-launch GEMM, the scheduled grouped-GEMM and
 flash paths, the scheduled backward walks (DESIGN.md §11), the
-continuous-batching decode path (DESIGN.md §12) *and* the quantized
-execution axis (DESIGN.md §13) end-to-end on every PR, still emitting
+continuous-batching decode path (DESIGN.md §12), the quantized
+execution axis (DESIGN.md §13) *and* the mesh-aware expert dispatch
+(DESIGN.md §14) end-to-end on every PR, still emitting
 ``BENCH_gemm_fused.json`` + ``BENCH_grouped_fused.json`` +
 ``BENCH_flash_fused.json`` + ``BENCH_train.json`` + ``BENCH_serve.json``
-+ ``BENCH_quant.json``.
++ ``BENCH_quant.json`` + ``BENCH_mesh.json``.  After the suites it runs
+the fused-ranking regression gate over ``BENCH_gemm_fused.json``:
+any entry where the planner chose fused but the measured fused/multi
+speedup is < 0.9 fails the job.
 """
 import argparse
+import json
 import sys
 
 
@@ -53,8 +63,8 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (table1_throughput, fig1_scaling, fig23_bandwidth,
                             fig45_alignment, fig7_blocking, fig89_gemm_sweep,
-                            flash_fused, grouped_fused, quant_gemm,
-                            serve_trace, train_step)
+                            flash_fused, grouped_fused, mesh_overlap,
+                            quant_gemm, serve_trace, train_step)
     suites = {
         "table1": table1_throughput.run,
         "fig1": fig1_scaling.run,
@@ -67,6 +77,7 @@ def main() -> None:
         "train": train_step.run,
         "serve": serve_trace.run,
         "quant": quant_gemm.run,
+        "mesh": mesh_overlap.run,
     }
     if args.smoke:
         if args.only:
@@ -76,7 +87,8 @@ def main() -> None:
                   "flash": lambda: flash_fused.run(smoke=True),
                   "train": lambda: train_step.run(smoke=True),
                   "serve": lambda: serve_trace.run(smoke=True),
-                  "quant": lambda: quant_gemm.run(smoke=True)}
+                  "quant": lambda: quant_gemm.run(smoke=True),
+                  "mesh": lambda: mesh_overlap.run(smoke=True)}
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     from repro.core import engine
@@ -88,6 +100,26 @@ def main() -> None:
         engine.reset_stats(entries=False)
         suites[name]()
         _emit_engine_stats(name, engine)
+    if args.smoke:
+        _check_fused_ranking()
+
+
+def _check_fused_ranking() -> None:
+    """Regression gate (DESIGN.md §8): fail the smoke run when the
+    planner *chose* fused on an entry whose measured fused/multi speedup
+    is < 0.9 — a misranked lowering, not just a slow one."""
+    with open("BENCH_gemm_fused.json") as f:
+        entries = json.load(f)["entries"]
+    bad = {label: e["speedup"] for label, e in sorted(entries.items())
+           if e.get("chosen_fused") and e.get("speedup") is not None
+           and e["speedup"] < 0.9}
+    if bad:
+        for label, speedup in bad.items():
+            print(f"FUSED-RANKING REGRESSION: {label}: planner chose fused "
+                  f"but measured fused/multi speedup = {speedup}",
+                  file=sys.stderr)
+        sys.exit(1)
+    print(f"fused_ranking_gate,0,entries={len(entries)};violations=0")
 
 
 def _emit_engine_stats(phase: str, engine) -> None:
@@ -104,7 +136,9 @@ def _emit_engine_stats(phase: str, engine) -> None:
               f"plan_src_model={c['plan_source_model']};"
               f"plan_src_autotuned={c['plan_source_autotuned']};"
               f"plan_src_tuned_cache={c['plan_source_tuned_cache']};"
-              f"autotune_timings={c['autotune_timings']}")
+              f"autotune_timings={c['autotune_timings']};"
+              f"comm_bytes={c['comm_bytes']};"
+              f"collective_launches={c['collective_launches']}")
 
 
 if __name__ == '__main__':

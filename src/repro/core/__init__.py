@@ -16,12 +16,14 @@ to every kernel family in the system (DESIGN.md).
 from repro.core.descriptor import (  # noqa: F401
     FlashBwdDescriptor, FlashDescriptor, GemmDescriptor,
     GroupedGemmBwdDescriptor, GroupedGemmDescriptor, KernelDescriptor,
-    SsdChunkBwdDescriptor, SsdChunkDescriptor, TransposeDescriptor)
+    MeshSpec, SsdChunkBwdDescriptor, SsdChunkDescriptor,
+    TransposeDescriptor)
 from repro.core.blocking import (  # noqa: F401
-    BlockingPlan, FlashPlan, GroupedGemmPlan, Region, SsdChunkPlan,
-    TransposePlan, candidate_plans, flash_bwd_fused_legal,
+    BlockingPlan, FlashPlan, GroupedGemmPlan, MESH_STRATEGIES, Region,
+    SsdChunkPlan, TransposePlan, candidate_plans, flash_bwd_fused_legal,
     flash_fused_legal, fused_legal, grouped_bwd_fused_legal,
-    grouped_fused_legal, palette, plan_flash, plan_flash_bwd, plan_gemm,
+    grouped_fused_legal, mesh_comm_events, mesh_comm_seconds,
+    mesh_local_desc, palette, plan_flash, plan_flash_bwd, plan_gemm,
     plan_grouped, plan_grouped_bwd, plan_ssd, plan_ssd_bwd, plan_transpose,
     ssd_bwd_fused_legal, ssd_fused_legal)
 from repro.core.schedule import (  # noqa: F401

@@ -78,6 +78,8 @@ def plan_to_record(plan: Any) -> Dict[str, Any]:
                            for r in plan.regions],
                "bk": plan.bk, "heterogeneous": plan.heterogeneous,
                "fused": plan.fused}
+        if plan.comm is not None:
+            rec["comm"] = plan.comm  # mesh strategy (DESIGN.md §14)
     elif isinstance(plan, FlashPlan):
         rec = {"family": "flash_attention",
                "block_q": plan.block_q, "block_k": plan.block_k,
@@ -86,6 +88,8 @@ def plan_to_record(plan: Any) -> Dict[str, Any]:
         rec = {"family": "grouped_gemm",
                "bm": plan.bm, "bk": plan.bk, "bn": plan.bn,
                "fused": plan.fused}
+        if plan.comm is not None:
+            rec["comm"] = plan.comm  # mesh strategy (DESIGN.md §14)
     elif isinstance(plan, TransposePlan):
         rec = {"family": "transpose", "bt": plan.bt}
     elif isinstance(plan, SsdChunkPlan):
@@ -117,7 +121,8 @@ def plan_from_record(desc: KernelDescriptor,
             return BlockingPlan(desc, regions, int(record["bk"]),
                                 bool(record["heterogeneous"]),
                                 fused=bool(record.get("fused", False)),
-                                plan_source="autotuned")
+                                plan_source="autotuned",
+                                comm=record.get("comm"))
         if family == "flash_attention":
             # Pre-schedule cache entries lack "fused": replay them on the
             # dense-grid path they were actually timed on.
@@ -131,7 +136,8 @@ def plan_from_record(desc: KernelDescriptor,
             return GroupedGemmPlan(desc, int(record["bm"]), int(record["bk"]),
                                    int(record["bn"]),
                                    fused=bool(record.get("fused", False)),
-                                   plan_source="autotuned")
+                                   plan_source="autotuned",
+                                   comm=record.get("comm"))
         if family == "transpose":
             return TransposePlan(desc, int(record["bt"]),
                                  plan_source="autotuned")
@@ -156,8 +162,11 @@ def _entry_key(machine_name: str, desc: KernelDescriptor,
     # stable and human-greppable in the JSON file.  The execution mode is
     # part of the key: a winner timed under interpret-mode emulation says
     # nothing about compiled execution and must never be replayed there.
-    # Deliberately keyed by machine *name*, not constants-fingerprint —
-    # measured winners should survive run-to-run probe drift on one host.
+    # Deliberately keyed by ``machine.tuning_key`` (name + network-
+    # calibration provenance), not constants-fingerprint — measured
+    # winners should survive run-to-run probe drift on one host, but a
+    # network-calibrated host's mesh winners must never serve an
+    # uncalibrated one (DESIGN.md §14).
     return f"{machine_name}|{_mode(interpret)}|{desc.cache_key()!r}"
 
 
@@ -211,6 +220,9 @@ class TuningCache:
               measured_us: float, *, interpret: bool):
         record = plan_to_record(plan)
         record["us"] = round(float(measured_us), 3)
+        # Wall-clock stamp: the fleet-merge CLI (tools/tune.py) unions
+        # caches with newest-timing-wins, arbitrated by this field.
+        record["ts"] = round(time.time(), 3)
         with self._lock:
             self._entries[_entry_key(machine_name, desc, interpret)] = record
             self._flush_locked()
@@ -332,6 +344,9 @@ def search(execute, desc: KernelDescriptor, machine: MachineModel,
         return None, timed
     best_plan = dataclasses.replace(best_plan, plan_source="autotuned")
     if tuning_cache is not None:
-        tuning_cache.store(machine.name, desc, best_plan, best_t * 1e6,
+        # Keyed by ``tuning_key`` (name + network-calibration provenance,
+        # DESIGN.md §14): records from network-calibrated and uncalibrated
+        # hosts never serve each other even when they share a name.
+        tuning_cache.store(machine.tuning_key, desc, best_plan, best_t * 1e6,
                            interpret=interpret)
     return best_plan, timed

@@ -143,6 +143,12 @@ class BlockingPlan:
     # Provenance: "model" (analytical planner) or "autotuned" (empirically
     # timed winner, fresh or replayed from the tuning cache — DESIGN.md §7).
     plan_source: str = "model"
+    # Mesh strategy (DESIGN.md §14), set only when desc.mesh is: "gathered"
+    # (all-gather the sharded weights, compute the whole problem locally)
+    # or "distributed" (keep weight shards, move activations/outputs).
+    # The regions/bk knobs then describe the per-shard local sub-problem
+    # (``mesh_local_desc``), not the global descriptor.
+    comm: Optional[str] = None
 
     # ---- aggregate stats (paper Fig 7 metrics) -------------------------
     @property
@@ -161,13 +167,21 @@ class BlockingPlan:
         return sum(r.input_elems(self.desc.k) for r in self.regions)
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
-        return _predict_seconds(self.regions, self.desc, self.bk, machine,
-                                fused=self.fused)
+        local, comm_s = self.desc, 0.0
+        if self.desc.mesh is not None and self.comm is not None:
+            local = mesh_local_desc(self.desc, self.comm)
+            comm_s = mesh_comm_seconds(self.desc, machine, self.comm)
+        return _predict_seconds(self.regions, local, self.bk, machine,
+                                fused=self.fused) + comm_s
 
     def tile_schedule(self) -> TileSchedule:
         """Flatten the region cover into the fused kernel's tile tables
-        (delegates to the schedule layer, DESIGN.md §9)."""
+        (delegates to the schedule layer, DESIGN.md §9).  For a mesh plan
+        the schedule covers the per-shard local sub-problem — execution
+        happens per shard (DESIGN.md §14)."""
         desc = self.desc
+        if desc.mesh is not None and self.comm is not None:
+            desc = mesh_local_desc(desc, self.comm)
         return flatten_regions(desc.m, desc.n, desc.k, self.bk, self.regions)
 
     def validate(self):
@@ -279,6 +293,82 @@ def _pick_bk(desc: GemmDescriptor, bm: int, bn: int,
 
 
 # ---------------------------------------------------------------------------
+# Mesh-aware communication model (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+# A mesh descriptor (``desc.mesh is not None``) describes the GLOBAL
+# problem with the weight operand sharded over ``mesh.axis``.  Each
+# execution strategy reduces it to a per-shard local sub-problem plus a
+# set of collectives; the planner charges both — compute/launch/stitch
+# on the local descriptor via the family cost model, communication via
+# ``machine.collective_seconds`` — so gathered-vs-distributed is ranked
+# by the same napkin-math discipline as every tiling knob.
+
+MESH_STRATEGIES = ("gathered", "distributed")
+
+
+def mesh_local_desc(desc, comm: str):
+    """The per-shard local sub-problem one strategy actually executes.
+
+    grouped_gemm — activations token-sharded over the axis:
+      * gathered: all-gather the expert weights, run the full expert set
+        over the local token shard (t/s tokens, all E experts);
+      * distributed: keep weight shards, all_to_all tokens to their
+        expert's owner (t/s tokens, E/s local experts — capacity-uniform
+        routing moves exactly the local rows).
+    gemm — B column-sharded over the axis:
+      * gathered: all-gather B, compute the full (m, n) locally;
+      * distributed: keep the B shard, compute (m, n/s), all-gather the
+        output columns.
+    """
+    if desc.mesh is None:
+        return desc
+    if comm not in MESH_STRATEGIES:
+        raise ValueError(f"unknown mesh strategy {comm!r}")
+    s = desc.mesh.size
+    if isinstance(desc, GroupedGemmDescriptor):
+        if comm == "gathered":
+            return dataclasses.replace(desc, t=desc.t // s, mesh=None)
+        return dataclasses.replace(desc, t=desc.t // s,
+                                   num_experts=desc.num_experts // s,
+                                   mesh=None)
+    if comm == "gathered":
+        return dataclasses.replace(desc, mesh=None)
+    return dataclasses.replace(desc, n=desc.n // s, mesh=None)
+
+
+def mesh_comm_events(desc, comm: str) -> Tuple[Tuple[str, int], ...]:
+    """``((collective, per-device payload bytes), ...)`` one strategy
+    issues around the local kernel.  Payloads follow the probe accounting
+    in ``core.microbench``: bytes each device sends/receives, with the
+    ring (s-1)/s factor folded in."""
+    if desc.mesh is None or desc.mesh.size == 1:
+        return ()
+    s = desc.mesh.size
+    frac = (s - 1) / s
+    if isinstance(desc, GroupedGemmDescriptor):
+        isz = jnp.dtype(desc.dtype).itemsize
+        if comm == "gathered":
+            w_sz = getattr(desc, "w_wire_itemsize", isz)
+            return (("all_gather",
+                     int(frac * desc.num_experts * desc.k * desc.n * w_sz)),)
+        t_loc = desc.t // s
+        return (("all_to_all", int(frac * t_loc * desc.k * isz)),
+                ("all_to_all", int(frac * t_loc * desc.n * isz)))
+    out_sz = jnp.dtype(desc.out_dtype).itemsize
+    if comm == "gathered":
+        return (("all_gather", int(frac * desc.k * desc.n
+                                   * desc.b_wire_itemsize)),)
+    return (("all_gather", int(frac * desc.m * desc.n * out_sz)),)
+
+
+def mesh_comm_seconds(desc, machine: MachineModel, comm: str) -> float:
+    """Total modeled communication time of one strategy under ``machine``
+    (honest when network-calibrated, link-spec napkin math otherwise)."""
+    return sum(machine.collective_seconds(nbytes, collective=c)
+               for c, nbytes in mesh_comm_events(desc, comm))
+
+
+# ---------------------------------------------------------------------------
 # Planner
 # ---------------------------------------------------------------------------
 
@@ -315,7 +405,21 @@ def plan_gemm(desc: GemmDescriptor,
     planner takes the paper's stance on dispatch: one kernel per GEMM —
     plans come out ``fused`` whenever the operands fit VMEM
     (:func:`fused_legal`); the autotuner refines that choice empirically.
+
+    A mesh descriptor is planned per strategy (DESIGN.md §14): the local
+    sub-problem of each strategy gets its own blocking, and the cheaper
+    compute + communication total wins, recorded in ``plan.comm``.
     """
+    if desc.mesh is not None:
+        best = None
+        for comm in MESH_STRATEGIES:
+            p = plan_gemm(mesh_local_desc(desc, comm), machine, budget,
+                          heterogeneous, force_block)
+            p = dataclasses.replace(p, desc=desc, comm=comm)
+            if best is None or (p.predicted_seconds(machine)
+                                < best.predicted_seconds(machine)):
+                best = p
+        return best
     m, n = desc.m, desc.n
     shapes = palette(budget, machine, desc.in_dtype)
     fused = fused_legal(desc, machine)
@@ -341,7 +445,16 @@ def plan_gemm(desc: GemmDescriptor,
     homo = BlockingPlan(desc, (Region(0, 0, m, n, *primary),), bk, False,
                         fused=fused)
     if homo.predicted_seconds(machine) < plan.predicted_seconds(machine):
-        return homo
+        plan = homo
+    # Multi-region covers pay the fused walk's per-step tile decode on
+    # every region's tiles; BENCH_gemm_fused.json measured hetero shapes
+    # where the stitched multi-launch path wins (hetero_640 at 0.848x).
+    # The paper's one-kernel stance holds for single-region plans only —
+    # for multi-region winners, compare both lowerings under the model.
+    if plan.fused and len(plan.regions) > 1:
+        multi = dataclasses.replace(plan, fused=False)
+        if multi.predicted_seconds(machine) < plan.predicted_seconds(machine):
+            plan = multi
     return plan
 
 
@@ -608,24 +721,41 @@ class GroupedGemmPlan:
     # gather-back lowering.  Mirrors BlockingPlan.fused.
     fused: bool = False
     plan_source: str = "model"  # see BlockingPlan.plan_source
+    comm: Optional[str] = None  # mesh strategy — see BlockingPlan.comm
+
+    @property
+    def local_desc(self) -> GroupedGemmDescriptor:
+        """The per-shard sub-problem this plan's knobs describe: the
+        descriptor itself off-mesh, ``mesh_local_desc`` under a mesh
+        strategy (DESIGN.md §14)."""
+        if self.desc.mesh is not None and self.comm is not None:
+            return mesh_local_desc(self.desc, self.comm)
+        return self.desc
 
     @property
     def t_padded(self) -> int:
         """Static row bound of the pad/scatter lowering: T rounded up plus
         per-group padding room."""
-        return round_up(self.desc.t, self.bm) + self.desc.num_experts * self.bm
+        d = self.local_desc
+        return round_up(d.t, self.bm) + d.num_experts * self.bm
 
     def tile_schedule(self) -> GroupedTileSchedule:
         """The static geometry of the fused lowering (DESIGN.md §9); the
-        tables themselves are runtime data built from ``group_sizes``."""
-        d = self.desc
+        tables themselves are runtime data built from ``group_sizes``.
+        For a mesh plan this is the per-shard schedule — the fused
+        single-launch property holds per shard (DESIGN.md §14)."""
+        d = self.local_desc
         return GroupedTileSchedule(
             t=d.t, k=d.k, n=d.n, num_experts=d.num_experts,
             bm=min(self.bm, d.t), bk=min(self.bk, d.k), bn=min(self.bn, d.n))
 
     def predicted_seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
-        return _predict_grouped_seconds(self.desc, self.bm, self.bk, self.bn,
-                                        machine, fused=self.fused)
+        comm_s = 0.0
+        if self.desc.mesh is not None and self.comm is not None:
+            comm_s = mesh_comm_seconds(self.desc, machine, self.comm)
+        return _predict_grouped_seconds(self.local_desc, self.bm, self.bk,
+                                        self.bn, machine,
+                                        fused=self.fused) + comm_s
 
 
 def grouped_fused_legal(desc: GroupedGemmDescriptor,
@@ -710,7 +840,18 @@ def plan_grouped(desc: GroupedGemmDescriptor,
     dispatch: plans come out ``fused`` (single scheduled launch, no
     pad/scatter) whenever the staged operands fit VMEM
     (:func:`grouped_fused_legal`); the autotuner refines empirically.
+
+    A mesh descriptor is planned per strategy (DESIGN.md §14): gathered
+    (all-gather expert weights, full expert set over the local token
+    shard) vs distributed (all_to_all tokens, local expert shard); the
+    cheaper compute + communication total wins, recorded in ``comm``.
     """
+    if desc.mesh is not None:
+        cands = [dataclasses.replace(
+                     plan_grouped(mesh_local_desc(desc, comm), machine),
+                     desc=desc, comm=comm)
+                 for comm in MESH_STRATEGIES]
+        return min(cands, key=lambda p: p.predicted_seconds(machine))
     fused = grouped_fused_legal(desc, machine)
     best = min(_grouped_legal(desc, machine),
                key=lambda s: _predict_grouped_seconds(desc, *s,
@@ -952,7 +1093,18 @@ def candidate_plans(desc, machine: MachineModel = DEFAULT_MACHINE,
             seen.add(knob_key)
             cands.append(plan)
 
-    if fam == "gemm":
+    if fam in ("gemm", "grouped_gemm") and desc.mesh is not None:
+        # Mesh descriptor (DESIGN.md §14): the search space is the two
+        # execution strategies, each carrying its own locally-planned
+        # knobs — the autotuner times gathered vs distributed end to end
+        # and the tuned cache records which won.
+        planner = plan_gemm if fam == "gemm" else plan_grouped
+        for comm in MESH_STRATEGIES:
+            p = dataclasses.replace(planner(mesh_local_desc(desc, comm),
+                                            machine),
+                                    desc=desc, comm=comm)
+            add(p, (comm,))
+    elif fam == "gemm":
         # Fused (single-launch) and multi-launch lowerings of one region
         # cover are distinct candidates: the autotuner times both and the
         # tuned cache records which won (DESIGN.md §8).

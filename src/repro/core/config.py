@@ -16,6 +16,9 @@ serves a request (generated SME kernel vs vendor BLAS).  Ours has more:
                     (DESIGN.md §7); ``autotune_budget`` caps K;
   * ``tuning_cache`` — path of the on-disk JSON tuning cache that makes
                     autotuned winners survive process restarts;
+  * ``tuning_cache_preload`` — read-only fleet-merged tuning cache
+                    (tools/tune.py) consulted after ``tuning_cache``
+                    misses — the warm-start path (DESIGN.md §14);
   * ``fused``     — plan-execution policy for families with a fused
                     single-launch lowering (GEMM, grouped GEMM —
                     DESIGN.md §8/§9): "auto" follows the plan's ``fused``
@@ -33,8 +36,10 @@ serves a request (generated SME kernel vs vendor BLAS).  Ours has more:
                     spec.
 
 Env-var overrides seed the process default at import: ``REPRO_AUTOTUNE=1``,
-``REPRO_TUNING_CACHE=/path/to/cache.json``, ``REPRO_AUTOTUNE_BUDGET=K``,
-``REPRO_FUSED=auto|on|off``, ``REPRO_QUANT=int8|w8a16|fp8``.
+``REPRO_TUNING_CACHE=/path/to/cache.json``,
+``REPRO_TUNING_CACHE_PRELOAD=/path/to/fleet.json``,
+``REPRO_AUTOTUNE_BUDGET=K``, ``REPRO_FUSED=auto|on|off``,
+``REPRO_QUANT=int8|w8a16|fp8``.
 
 Configuration is layered: a process-wide default (``configure``) under a
 thread-local override stack (``use`` context manager), so a serving thread
@@ -71,6 +76,11 @@ class EngineConfig:
     autotune: bool = False
     autotune_budget: int = 8
     tuning_cache: Optional[str] = None
+    # Read-only warm-start cache (DESIGN.md §14): a fleet-merged tuning
+    # file (tools/tune.py merge) consulted after ``tuning_cache`` misses.
+    # Never written — serving processes start with zero autotune stalls
+    # without contending on the shared file.
+    tuning_cache_preload: Optional[str] = None
     # Plan-execution policy for fused-capable families (DESIGN.md §8/§9):
     # "auto" honors the plan's fused bit; "on"/"off" force the
     # single-launch / multi-launch (or pad-scatter) lowering.
@@ -146,6 +156,8 @@ def _env_default() -> EngineConfig:
         in ("1", "true", "yes", "on"),
         autotune_budget=budget,
         tuning_cache=os.environ.get("REPRO_TUNING_CACHE") or None,
+        tuning_cache_preload=os.environ.get("REPRO_TUNING_CACHE_PRELOAD")
+        or None,
         fused=fused,
         quant=quant,
     )
@@ -173,6 +185,7 @@ def configure(*, backend: Optional[str] = None,
               machine=None, autotune: Optional[bool] = None,
               autotune_budget: Optional[int] = None,
               tuning_cache: Optional[str] = None,
+              tuning_cache_preload: Optional[str] = None,
               fused: Optional[str] = None, quant=None) -> EngineConfig:
     """Mutate the process-wide default (all threads without an override)."""
     global _DEFAULT
@@ -180,8 +193,9 @@ def configure(*, backend: Optional[str] = None,
         _DEFAULT = _DEFAULT.replace(backend=backend, interpret=interpret,
                                     machine=machine, autotune=autotune,
                                     autotune_budget=autotune_budget,
-                                    tuning_cache=tuning_cache, fused=fused,
-                                    quant=quant)
+                                    tuning_cache=tuning_cache,
+                                    tuning_cache_preload=tuning_cache_preload,
+                                    fused=fused, quant=quant)
         return _DEFAULT
 
 
@@ -189,14 +203,16 @@ def configure(*, backend: Optional[str] = None,
 def use(*, backend: Optional[str] = None, interpret: Optional[bool] = None,
         machine=None, autotune: Optional[bool] = None,
         autotune_budget: Optional[int] = None,
-        tuning_cache: Optional[str] = None, fused: Optional[str] = None,
-        quant=None):
+        tuning_cache: Optional[str] = None,
+        tuning_cache_preload: Optional[str] = None,
+        fused: Optional[str] = None, quant=None):
     """Thread-local override: ``with use(backend="pallas"): ...``."""
     stack = _stack()
     stack.append(get_config().replace(backend=backend, interpret=interpret,
                                       machine=machine, autotune=autotune,
                                       autotune_budget=autotune_budget,
                                       tuning_cache=tuning_cache,
+                                      tuning_cache_preload=tuning_cache_preload,
                                       fused=fused, quant=quant))
     try:
         yield stack[-1]

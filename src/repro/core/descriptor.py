@@ -124,6 +124,30 @@ def check_bias(epilogue, bias) -> None:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Mesh placement carried by GEMM-family descriptors (DESIGN.md §14).
+
+    ``axis`` names the mesh axis the weight operand is sharded over
+    (expert dim for grouped GEMM, output-column dim for dense GEMM) and
+    ``size`` is that axis's extent.  ``None`` mesh on a descriptor means
+    the single-chip problem the planner always handled; a ``MeshSpec``
+    makes the *global* problem the descriptor's subject, and the planner
+    charges communication (all-gather vs. all_to_all) to pick between a
+    *gathered* and a *distributed* execution.  Frozen + hashable, so it
+    participates in every cache key via ``KernelDescriptor.cache_key``.
+    """
+
+    axis: str = "model"
+    size: int = 1
+
+    def __post_init__(self):
+        if not self.axis:
+            raise ValueError("mesh axis name must be non-empty")
+        if self.size < 1:
+            raise ValueError(f"mesh size must be >= 1, got {self.size}")
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelDescriptor:
     """Base of every per-family descriptor.
 
@@ -179,8 +203,17 @@ class GemmDescriptor(KernelDescriptor):
     batch: int = 0
     # Low-precision execution axis (DESIGN.md §13); None = wide GEMM.
     quant: Optional[QuantSpec] = None
+    # Mesh placement (DESIGN.md §14): B's output-column (n) dim sharded
+    # over mesh.axis; None = the single-chip problem.
+    mesh: Optional[MeshSpec] = None
 
     def __post_init__(self):
+        if self.mesh is not None:
+            if not isinstance(self.mesh, MeshSpec):
+                raise ValueError(f"mesh must be a MeshSpec, got {self.mesh!r}")
+            if self.n % self.mesh.size:
+                raise ValueError(f"mesh size {self.mesh.size} must divide "
+                                 f"n={self.n}")
         if self.layout not in LAYOUTS:
             raise ValueError(f"layout must be one of {LAYOUTS}, got {self.layout}")
         if self.epilogue not in EPILOGUES:
@@ -430,6 +463,10 @@ class GroupedGemmDescriptor(KernelDescriptor):
     epilogue: Optional[str] = None
     # Low-precision execution axis (DESIGN.md §13); None = wide GEMM.
     quant: Optional[QuantSpec] = None
+    # Mesh placement (DESIGN.md §14): the expert dim sharded over
+    # mesh.axis; ``t``/``num_experts`` describe the GLOBAL problem and
+    # the planner derives the per-shard sub-problems it costs.
+    mesh: Optional[MeshSpec] = None
 
     def __post_init__(self):
         for v in (self.t, self.k, self.n, self.num_experts):
@@ -439,16 +476,23 @@ class GroupedGemmDescriptor(KernelDescriptor):
             raise ValueError(f"epilogue must be one of {EPILOGUES}")
         if self.quant is not None and not isinstance(self.quant, QuantSpec):
             raise ValueError(f"quant must be a QuantSpec, got {self.quant!r}")
+        if self.mesh is not None:
+            if not isinstance(self.mesh, MeshSpec):
+                raise ValueError(f"mesh must be a MeshSpec, got {self.mesh!r}")
+            if self.num_experts % self.mesh.size or self.t % self.mesh.size:
+                raise ValueError(
+                    f"mesh size {self.mesh.size} must divide both "
+                    f"num_experts={self.num_experts} and t={self.t}")
 
     @classmethod
-    def from_operands(cls, x, w, epilogue=None, quant=None):
+    def from_operands(cls, x, w, epilogue=None, quant=None, mesh=None):
         t, k = x.shape
         e, kw, n = w.shape
         if kw != k:
             raise ValueError(f"contraction mismatch: x{x.shape} vs w{w.shape}")
         return cls(t=t, k=k, n=n, num_experts=e,
                    dtype=canonical_dtype(x.dtype), epilogue=epilogue,
-                   quant=resolve_quant(quant))
+                   quant=resolve_quant(quant), mesh=mesh)
 
     @property
     def x_wire_itemsize(self) -> int:
@@ -632,10 +676,15 @@ class GroupedGemmBwdDescriptor(GroupedGemmDescriptor):
 
         The quant spec is deliberately dropped: quantization is a
         forward/inference axis (DESIGN.md §13) — backward walks run in
-        the wide dtype on the saved wide residuals.
+        the wide dtype on the saved wide residuals.  The mesh spec is
+        dropped too: the distributed path runs the *local* grouped GEMM
+        (whose VJP this descriptor keys) under ``shard_map``, so the
+        backward geometry is always the meshless per-shard problem
+        (DESIGN.md §14).
         """
         fields = dataclasses.asdict(desc)
         fields["quant"] = None  # asdict flattens QuantSpec to a dict anyway
+        fields["mesh"] = None   # same for MeshSpec
         return cls(**fields)
 
     @property

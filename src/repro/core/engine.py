@@ -98,6 +98,15 @@ _autotune_timings: Dict[str, int] = {}
 # repeat call (which never re-enters Python) does not re-count.
 _launches: Dict[str, int] = {}
 
+# Explicit collectives issued per family (DESIGN.md §14): the distributed
+# mesh strategies report the payload bytes and collective launches they
+# emit around the per-shard kernel; the gathered strategy issues none
+# (any weight resharding is XLA-implicit), so non-zero counters here mean
+# a distributed execution really happened.  Trace-time counts, like
+# ``_launches``.
+_comm_bytes: Dict[str, int] = {}
+_collective_launches: Dict[str, int] = {}
+
 
 def _note_source(family: str, source: str):
     with _plan_calls_lock:
@@ -116,6 +125,16 @@ def count_launches(family: str, n: int = 1):
     kernel launches they are about to emit (``stats()["…"]["launches"]``)."""
     with _plan_calls_lock:
         _launches[family] = _launches.get(family, 0) + n
+
+
+def count_comm(family: str, nbytes: int, launches: int = 1):
+    """Mesh executors call this with the per-device payload bytes and
+    number of explicit collectives one execute() emits
+    (``stats()["…"]["comm_bytes"]`` / ``["collective_launches"]``)."""
+    with _plan_calls_lock:
+        _comm_bytes[family] = _comm_bytes.get(family, 0) + int(nbytes)
+        _collective_launches[family] = (
+            _collective_launches.get(family, 0) + launches)
 
 
 def register_family(name: str, planner, execute) -> Family:
@@ -168,19 +187,29 @@ def _resolve_plan(desc: KernelDescriptor, cfg, *,
     autotunable = (cfg.autotune and operands is not None
                    and _autotune.can_autotune(operands, kw))
     tier = "autotune" if autotunable else \
-        ("tuned" if cfg.tuning_cache else "model")
+        ("tuned" if (cfg.tuning_cache or cfg.tuning_cache_preload)
+         else "model")
     # The key names the machine by name AND constants-fingerprint (two
     # calibrations of one host share a name but not plans) and the
     # resolution policy (so e.g. a model-tier plan cached during jit
     # tracing never masks a later concrete-operand autotune).
     key = desc.cache_key() + ("plan", machine.name, machine.fingerprint,
-                              tier, cfg.tuning_cache or "")
+                              tier, cfg.tuning_cache or "",
+                              cfg.tuning_cache_preload or "")
 
     def build_plan():
         # Tier 1: persistent tuned cache — a warm file re-times nothing.
-        if cfg.tuning_cache:
-            cache = _autotune.get_tuning_cache(cfg.tuning_cache)
-            record = cache.lookup(machine.name, desc, interpret=interpret)
+        # Lookups key by ``machine.tuning_key`` (name + network-calibration
+        # provenance, DESIGN.md §14) so records from network-calibrated
+        # and uncalibrated hosts never serve each other.  The read-only
+        # preload file (``configure(tuning_cache_preload=)``, fleet-merged
+        # by tools/tune.py) is the fallback behind the writable cache.
+        for path in (cfg.tuning_cache, cfg.tuning_cache_preload):
+            if not path:
+                continue
+            cache = _autotune.get_tuning_cache(path)
+            record = cache.lookup(machine.tuning_key, desc,
+                                  interpret=interpret)
             if record is not None:
                 plan = _autotune.plan_from_record(desc, record)
                 if plan is not None:
@@ -205,7 +234,9 @@ def _resolve_plan(desc: KernelDescriptor, cfg, *,
                     PLAN_CACHE.put(
                         desc.cache_key() + ("plan", machine.name,
                                             machine.fingerprint, "tuned",
-                                            cfg.tuning_cache), plan)
+                                            cfg.tuning_cache or "",
+                                            cfg.tuning_cache_preload or ""),
+                        plan)
                 return plan
         # Tier 3: analytical machine-model planner.
         with _plan_calls_lock:
@@ -281,6 +312,7 @@ def stats() -> Dict[str, Dict[str, int]]:
     {family: {plan_hits, plan_misses, plan_evictions, planner_calls,
               plan_source_tuned_cache, plan_source_autotuned,
               plan_source_model, autotune_timings, launches,
+              comm_bytes, collective_launches,
               kernel_hits, kernel_misses, kernel_evictions}}
 
     Backward families (``<family>_bwd`` descriptors, DESIGN.md §11) fold
@@ -297,6 +329,7 @@ def stats() -> Dict[str, Dict[str, int]]:
                 "planner_calls",
                 *(f"plan_source_{s}" for s in PLAN_SOURCES),
                 "autotune_timings", "launches",
+                "comm_bytes", "collective_launches",
                 "kernel_hits", "kernel_misses", "kernel_evictions")},
         })
 
@@ -326,6 +359,12 @@ def stats() -> Dict[str, Dict[str, int]]:
         for fam, n in _launches.items():
             b, sfx = slot(fam)
             b["launches" + sfx] = n
+        for fam, n in _comm_bytes.items():
+            b, sfx = slot(fam)
+            b["comm_bytes" + sfx] = n
+        for fam, n in _collective_launches.items():
+            b, sfx = slot(fam)
+            b["collective_launches" + sfx] = n
     for fam, c in GLOBAL_KERNEL_CACHE.family_stats().items():
         b, sfx = slot(fam)
         b["kernel_hits" + sfx] = c["hits"]
@@ -356,3 +395,5 @@ def reset_stats(*, entries: bool = True):
         _plan_sources.clear()
         _autotune_timings.clear()
         _launches.clear()
+        _comm_bytes.clear()
+        _collective_launches.clear()

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Iterable, Mapping, Union
+from typing import Dict, Iterable, Mapping, Optional, Union
 
 import jax.numpy as jnp
 
@@ -70,8 +70,24 @@ class MachineModel:
     # per-pallas_call dispatch overhead (the cost the fused single-launch
     # path pays once and the multi-launch path pays per region)
     launch_overhead_s: float = DEFAULT_LAUNCH_OVERHEAD_S
+    # --- calibrated network (DESIGN.md §14) --------------------------------
+    # ``None`` means *not network-calibrated*: the interconnect probes did
+    # not run (1-device host, or a pinned Table-I model).  The planner then
+    # falls back to the pinned per-link aggregate and ``fingerprint`` /
+    # ``tuning_key`` carry the provenance so tuned-cache records never mix
+    # calibrated and uncalibrated machines.
+    ici_bandwidth_gbps: Optional[float] = None  # measured all_gather GB/s
+    collective_launch_s: Optional[float] = None  # per-collective launch cost
+    # per-collective bandwidth efficiency relative to the all_gather probe,
+    # e.g. {"all_gather": 1.0, "all_to_all": 0.7, "psum": 0.5}
+    collective_efficiency: Optional[Dict[str, float]] = None
 
     # ---------------------------------------------------------------------
+    @property
+    def network_calibrated(self) -> bool:
+        """True when the interconnect probes parameterized this model."""
+        return self.ici_bandwidth_gbps is not None
+
     @property
     def fingerprint(self) -> str:
         """Short digest of every model constant.
@@ -79,10 +95,23 @@ class MachineModel:
         Cache keys that would otherwise trust ``name`` alone include this:
         two calibrations of the same host share a name but can carry
         different measured constants, and analytical plans derived from
-        one must not be served for the other.
+        one must not be served for the other.  Network-calibrated models
+        carry a ``+net`` provenance suffix so the digest alone makes the
+        calibration state legible in cache records and logs.
         """
         blob = repr(dataclasses.astuple(self)).encode()
-        return hashlib.md5(blob).hexdigest()[:8]
+        digest = hashlib.md5(blob).hexdigest()[:8]
+        return digest + ("+net" if self.network_calibrated else "")
+
+    @property
+    def tuning_key(self) -> str:
+        """Name used to key :class:`~repro.core.autotune.TuningCache`
+        records.  Uncalibrated machines keep their plain ``name`` (existing
+        on-disk records stay valid); network-calibrated machines get a
+        ``+net`` suffix so their records never mix with uncalibrated ones
+        — the two cost models rank mesh candidates differently.
+        """
+        return self.name + ("+net" if self.network_calibrated else "")
 
     def peak(self, dtype) -> float:
         return self.peak_flops[canonical_dtype(dtype)]
@@ -106,9 +135,27 @@ class MachineModel:
     def memory_seconds(self, nbytes: float, chips: int = 1) -> float:
         return nbytes / (self.hbm_bw * chips)
 
-    def collective_seconds(self, nbytes: float, chips: int = 1) -> float:
+    def collective_seconds(self, nbytes: float, chips: int = 1,
+                           collective: str = "all_gather") -> float:
+        """Seconds to move ``nbytes`` through one ``collective``.
+
+        Calibrated path: measured all_gather bandwidth scaled by the
+        per-collective efficiency ratio, plus the measured launch cost —
+        the §III-style "honest" model the mesh planner charges
+        (DESIGN.md §14).  Uncalibrated path: the pinned per-link
+        aggregate, launch cost folded in from ``launch_overhead_s`` so
+        gathered/distributed candidates still rank.
+        """
+        if self.network_calibrated:
+            eff = 1.0
+            if self.collective_efficiency:
+                eff = self.collective_efficiency.get(collective, 1.0)
+            bw = self.ici_bandwidth_gbps * 1e9 * max(eff, 1e-6)
+            launch = self.collective_launch_s or 0.0
+            return launch + nbytes / (bw * chips)
         # Aggregate ICI model: each chip drives ici_links links.
-        return nbytes / (self.ici_bw_per_link * chips)
+        return (self.launch_overhead_s
+                + nbytes / (self.ici_bw_per_link * chips))
 
     # Calibration -----------------------------------------------------------
     @classmethod
@@ -124,10 +171,17 @@ class MachineModel:
           * ``matmul_<dtype>``  [GFLOP/s] -> ``peak_flops[dtype]``
           * ``copy_bw``         [GB/s]    -> ``hbm_bw``
           * ``dispatch_latency``[us]      -> ``step_overhead_s``
+          * ``all_gather_bw``   [GB/s]    -> ``ici_bandwidth_gbps``
+          * ``all_to_all_bw`` / ``psum_bw`` [GB/s]
+                                -> ``collective_efficiency`` ratios
+          * ``collective_latency`` [us]   -> ``collective_launch_s``
 
         Unrecognized probes (e.g. the ``target_*`` echo entries) are
         ignored; missing probes leave the base constant in place — a
         partial probe run still yields a usable model (DESIGN.md §7).
+        The interconnect probes are all-or-nothing per DESIGN.md §14: on a
+        1-device host they report value 0 and the network fields stay the
+        explicit ``None`` ("not network-calibrated"), never a fake number.
         """
         base = base if base is not None else CPU_HOST
         if isinstance(probes, Mapping):
@@ -136,6 +190,7 @@ class MachineModel:
         hbm_bw = base.hbm_bw
         overhead = base.step_overhead_s
         launch = base.launch_overhead_s
+        net = {}
         for p in probes:
             pname, value = p.name, p.value
             if pname.startswith("matmul_"):
@@ -151,9 +206,24 @@ class MachineModel:
                 # amortizes (DESIGN.md §8).
                 overhead = value * 1e-6
                 launch = value * 1e-6
-        return dataclasses.replace(base, name=name, peak_flops=peak,
-                                   hbm_bw=hbm_bw, step_overhead_s=overhead,
-                                   launch_overhead_s=launch)
+            elif pname in ("all_gather_bw", "all_to_all_bw", "psum_bw",
+                           "collective_latency") and value > 0:
+                net[pname] = value
+        kwargs = dict(name=name, peak_flops=peak, hbm_bw=hbm_bw,
+                      step_overhead_s=overhead, launch_overhead_s=launch)
+        if "all_gather_bw" in net:
+            ag = net["all_gather_bw"]
+            eff = {"all_gather": 1.0}
+            if "all_to_all_bw" in net:
+                eff["all_to_all"] = net["all_to_all_bw"] / ag
+            if "psum_bw" in net:
+                eff["psum"] = net["psum_bw"] / ag
+            kwargs["ici_bandwidth_gbps"] = ag
+            kwargs["collective_efficiency"] = eff
+            kwargs["collective_launch_s"] = (
+                net["collective_latency"] * 1e-6
+                if "collective_latency" in net else launch)
+        return dataclasses.replace(base, **kwargs)
 
 
 # fp8 support is build-dependent: gate every fp8 path on this flag

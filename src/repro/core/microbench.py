@@ -95,6 +95,101 @@ def probe_elementwise_latency() -> ProbeResult:
     return ProbeResult("dispatch_latency", s * 1e6, "us")
 
 
+# --- interconnect probes (DESIGN.md §14) ---------------------------------
+# Each measures one collective over a 1-D mesh spanning every visible
+# device (a real TPU slice, or a host-count-forced CPU mesh under
+# ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Below 2
+# devices there is no interconnect to measure: the probes return an
+# explicit 0.0 "(uncalibrated)" result — never silently skipped — and
+# ``MachineModel.from_probes`` maps that to ``None`` network fields, so
+# the machine fingerprint / tuning key carry the uncalibrated provenance.
+
+_LANES = 128
+
+
+def _probe_mesh():
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    from jax.sharding import Mesh
+    return Mesh(np.array(devs), ("probe",))
+
+
+def _shmap_collective(mesh, body, out_spec):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P("probe"),
+                             out_specs=out_spec, check_rep=False))
+
+
+def probe_all_gather(mbytes: int = 4, iters: int = 5) -> ProbeResult:
+    """Per-device ``all_gather`` receive bandwidth over the device mesh."""
+    mesh = _probe_mesh()
+    if mesh is None:
+        return ProbeResult("all_gather_bw", 0.0, "GB/s (uncalibrated)")
+    from jax.sharding import PartitionSpec as P
+    s = mesh.devices.size
+    rows = max(s, mbytes * 2**20 // (4 * _LANES * s)) * s
+    x = jnp.zeros((rows, _LANES), jnp.float32)
+    f = _shmap_collective(
+        mesh, lambda x: jax.lax.all_gather(x, "probe", tiled=True), P(None))
+    t = _timeit(f, x, iters=iters)
+    recv = (s - 1) * (rows // s) * _LANES * 4  # bytes received per device
+    return ProbeResult("all_gather_bw", recv / t / 1e9, "GB/s")
+
+
+def probe_all_to_all(mbytes: int = 4, iters: int = 5) -> ProbeResult:
+    """Per-device ``all_to_all`` exchange bandwidth over the device mesh."""
+    mesh = _probe_mesh()
+    if mesh is None:
+        return ProbeResult("all_to_all_bw", 0.0, "GB/s (uncalibrated)")
+    from jax.sharding import PartitionSpec as P
+    s = mesh.devices.size
+    rows = max(s, mbytes * 2**20 // (4 * _LANES * s)) * s * s
+    x = jnp.zeros((rows, _LANES), jnp.float32)
+    f = _shmap_collective(
+        mesh,
+        lambda x: jax.lax.all_to_all(
+            x.reshape(s, rows // s // s, _LANES), "probe",
+            split_axis=0, concat_axis=0).reshape(rows // s, _LANES),
+        P("probe"))
+    t = _timeit(f, x, iters=iters)
+    moved = (s - 1) * (rows // s // s) * _LANES * 4  # bytes sent per device
+    return ProbeResult("all_to_all_bw", moved / t / 1e9, "GB/s")
+
+
+def probe_psum(mbytes: int = 4, iters: int = 5) -> ProbeResult:
+    """Per-device ``psum`` (all-reduce) bandwidth over the device mesh."""
+    mesh = _probe_mesh()
+    if mesh is None:
+        return ProbeResult("psum_bw", 0.0, "GB/s (uncalibrated)")
+    from jax.sharding import PartitionSpec as P
+    s = mesh.devices.size
+    rows = max(s, mbytes * 2**20 // (4 * _LANES * s)) * s
+    x = jnp.zeros((rows, _LANES), jnp.float32)
+    f = _shmap_collective(
+        mesh, lambda x: jax.lax.psum(x, "probe"), P(None))
+    t = _timeit(f, x, iters=iters)
+    # ring all-reduce moves ~2*(s-1)/s of the per-device payload
+    moved = 2 * (s - 1) * (rows // s) * _LANES * 4 / s
+    return ProbeResult("psum_bw", moved / t / 1e9, "GB/s")
+
+
+def probe_collective_latency(iters: int = 20) -> ProbeResult:
+    """Launch latency of a tiny collective (the per-collective fixed cost
+    the mesh cost model charges on top of bandwidth)."""
+    mesh = _probe_mesh()
+    if mesh is None:
+        return ProbeResult("collective_latency", 0.0, "us (uncalibrated)")
+    from jax.sharding import PartitionSpec as P
+    s = mesh.devices.size
+    x = jnp.zeros((8 * s,), jnp.float32)
+    f = _shmap_collective(
+        mesh, lambda x: jax.lax.psum(x, "probe"), P(None))
+    t = _timeit(f, x, iters=iters, warmup=5)
+    return ProbeResult("collective_latency", t * 1e6, "us")
+
+
 def characterize(machine: MachineModel = TPU_V5E, *,
                  size: int = 512, mbytes: int = 64) -> Dict[str, ProbeResult]:
     """Run all probes; pair host measurements with target-model constants."""
@@ -113,6 +208,14 @@ def characterize(machine: MachineModel = TPU_V5E, *,
     out["target_hbm_bw"] = ProbeResult("target_hbm_bw",
                                        machine.hbm_bw / 1e9, "GB/s")
     out[probe_elementwise_latency().name] = probe_elementwise_latency()
+    # Interconnect probes (DESIGN.md §14) — always present, value 0.0
+    # "(uncalibrated)" on 1-device hosts rather than silently absent.
+    net_mb = min(mbytes, 4)
+    for r in (probe_all_gather(mbytes=net_mb), probe_all_to_all(mbytes=net_mb),
+              probe_psum(mbytes=net_mb), probe_collective_latency()):
+        out[r.name] = r
+    out["target_ici_bw"] = ProbeResult(
+        "target_ici_bw", machine.ici_bw_per_link / 1e9, "GB/s")
     return out
 
 

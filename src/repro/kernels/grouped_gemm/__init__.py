@@ -1,2 +1,3 @@
-from repro.kernels.grouped_gemm.ops import grouped_gemm  # noqa: F401
+from repro.kernels.grouped_gemm.ops import (  # noqa: F401
+    expert_parallel_grouped_gemm, grouped_gemm)
 from repro.kernels.grouped_gemm.ref import ref_grouped_gemm  # noqa: F401

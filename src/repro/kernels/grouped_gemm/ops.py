@@ -30,10 +30,12 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core.blocking import (GroupedGemmPlan, grouped_bwd_fused_legal,
-                                 plan_grouped, plan_grouped_bwd)
+                                 mesh_comm_events, plan_grouped,
+                                 plan_grouped_bwd)
 from repro.core.config import get_config
 from repro.core.descriptor import (GroupedGemmBwdDescriptor,
-                                   GroupedGemmDescriptor, check_bias)
+                                   GroupedGemmDescriptor, MeshSpec,
+                                   check_bias)
 from repro.core.schedule import plan_launches
 from repro.kernels.epilogue import apply_epilogue, needs_bias
 from repro.kernels.grouped_gemm.kernel import (build_fused_grouped_bwd_kernel,
@@ -145,9 +147,93 @@ def _xla_quant_grouped(desc: GroupedGemmDescriptor, x, w, group_sizes,
     return jnp.where(valid, out, 0).astype(jnp.dtype(desc.dtype))
 
 
+def _execute_mesh(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x4, w,
+                  group_sizes, bias, interpret: bool) -> jax.Array:
+    """Mesh execution (DESIGN.md §14): run the plan's strategy under
+    ``shard_map`` over the descriptor's mesh axis.
+
+    ``x4`` is the capacity-slot layout ``(n, e, cap, k)`` with the token
+    group dim ``n`` sharded over the axis and ``w`` the ``(e, k, f)``
+    expert bank sharded (or gathered) over its expert dim.  Both
+    strategies reduce to the SAME per-shard local grouped call
+    (``plan.local_desc`` with the plan's tiling knobs), so the fused
+    single-launch property holds per shard:
+
+      * **gathered** — ``w`` enters replicated (``P(None)``): any weight
+        movement is XLA-implicit outside the engine, and the engine comm
+        counters stay zero;
+      * **distributed** — ``w`` stays expert-sharded and two explicit
+        ``lax.all_to_all`` calls move the capacity slots to their
+        expert's owner and back (the olmax ``all2all`` idiom), counted
+        via ``engine.count_comm`` at trace time.
+    """
+    if desc.quant is not None:
+        raise NotImplementedError("mesh grouped GEMM is wide-only")
+    if bias is not None:
+        raise NotImplementedError("mesh grouped GEMM has no bias path")
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.shardlib import current_mesh
+    mesh = current_mesh()
+    axis, s = desc.mesh.axis, desc.mesh.size
+    if mesh is None or mesh.shape.get(axis, 0) != s:
+        raise ValueError(f"descriptor mesh {desc.mesh} does not match the "
+                         f"active device mesh {mesh}")
+    comm = plan.comm or "gathered"
+    local = plan.local_desc
+    lplan = GroupedGemmPlan(local, plan.bm, plan.bk, plan.bn,
+                            fused=plan.fused, plan_source=plan.plan_source)
+    nt, e, cap, k = x4.shape
+    f = desc.n
+    e_loc = e // s
+
+    def run_local(rows, w_loc, n_groups):
+        sizes = jnp.full((n_groups,), rows.shape[0] // n_groups, jnp.int32)
+        return execute(local, lplan, rows, w_loc, sizes, bias=None,
+                       interpret=interpret)
+
+    if comm == "gathered":
+        def body(xl, w_full):
+            nl = xl.shape[0]
+            rows = xl.transpose(1, 0, 2, 3).reshape(e * nl * cap, k)
+            y = run_local(rows, w_full, e)
+            return y.reshape(e, nl, cap, f).transpose(1, 0, 2, 3)
+
+        fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(None)),
+                       out_specs=P(axis), check_rep=False)
+        return fn(x4, w)
+
+    events = mesh_comm_events(desc, "distributed")
+    engine.count_comm("grouped_gemm", sum(b for _, b in events),
+                      launches=len(events))
+
+    def body(xl, w_loc):
+        nl = xl.shape[0]
+        # Slot tokens by owner shard: (s, nl, e_loc, cap, k), dim0 = the
+        # destination; all_to_all turns dim0 into the SOURCE shard index.
+        h = xl.reshape(nl, s, e_loc, cap, k).transpose(1, 0, 2, 3, 4)
+        h = jax.lax.all_to_all(h, axis, split_axis=0, concat_axis=0)
+        # Rows sorted by local expert, uniform s*nl*cap rows each.
+        rows = h.transpose(2, 0, 1, 3, 4).reshape(e_loc * s * nl * cap, k)
+        y = run_local(rows, w_loc, e_loc)
+        # Inverse shuffle: back to (nl, e, cap, f) token-major layout.
+        y = y.reshape(e_loc, s, nl, cap, f).transpose(1, 2, 0, 3, 4)
+        y = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0)
+        return y.transpose(1, 0, 2, 3, 4).reshape(nl, e, cap, f)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P(axis), check_rep=False)
+    return fn(x4, w)
+
+
 def execute(desc: GroupedGemmDescriptor, plan: GroupedGemmPlan, x, w,
             group_sizes, *, bias=None, sx=None, sw=None,
             interpret: bool = False) -> jax.Array:
+    if desc.mesh is not None:
+        # Mesh descriptor (DESIGN.md §14): gathered / distributed
+        # execution under shard_map; the operand layout is the 4-D
+        # capacity-slot form (see expert_parallel_grouped_gemm).
+        return _execute_mesh(desc, plan, x, w, group_sizes, bias, interpret)
     check_bias(desc.epilogue, bias)
     if desc.quant is not None:
         # Quantized axis (DESIGN.md §13): fused -> the scheduled walk in
@@ -376,3 +462,82 @@ def grouped_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
     from repro.core.config import use
     with use(fused="on" if fused else "off"):
         return engine.dispatch(desc, x, w, group_sizes, plan=plan, bias=bias)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel entry point (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def _ref_ep(epilogue, x4, w):
+    """Differentiable XLA oracle of the capacity-slot expert GEMM — the
+    custom VJP's backward formulation (partitions under SPMD) and the
+    numerical baseline in tests."""
+    out = jnp.einsum("neck,ekf->necf", x4.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    out = apply_epilogue(out, epilogue, None)
+    return out.astype(x4.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ep_vjp(axis, epilogue, x4, w):
+    """Forward = the engine's mesh dispatch; backward = autodiff of the
+    XLA oracle (the olmax all2all custom-gradient idiom: the collective
+    shuffle is engine-owned on the forward pass, while gradients flow
+    through a formulation XLA partitions on its own)."""
+    return _ep_dispatch(axis, epilogue, x4, w)
+
+
+def _ep_dispatch(axis, epilogue, x4, w):
+    from repro.core.descriptor import canonical_dtype
+    from repro.runtime.shardlib import current_mesh
+    mesh = current_mesh()
+    s = mesh.shape.get(axis, 1) if mesh is not None else 1
+    nt, e, cap, k = x4.shape
+    desc = GroupedGemmDescriptor(
+        t=nt * e * cap, k=k, n=int(w.shape[-1]), num_experts=e,
+        dtype=canonical_dtype(x4.dtype), epilogue=epilogue,
+        mesh=MeshSpec(axis, s))
+    return engine.dispatch(desc, x4, w, None).reshape(nt, e, cap, -1)
+
+
+def _ep_vjp_fwd(axis, epilogue, x4, w):
+    return _ep_dispatch(axis, epilogue, x4, w), (x4, w)
+
+
+def _ep_vjp_bwd(axis, epilogue, res, g):
+    x4, w = res
+    _, vjp = jax.vjp(lambda a, b: _ref_ep(epilogue, a, b), x4, w)
+    dx, dw = vjp(g.astype(x4.dtype))
+    return dx.astype(x4.dtype), dw.astype(w.dtype)
+
+
+_ep_vjp.defvjp(_ep_vjp_fwd, _ep_vjp_bwd)
+
+
+def expert_parallel_grouped_gemm(x4: jax.Array, w: jax.Array, *,
+                                 axis: str = "model",
+                                 epilogue: Optional[str] = None) -> jax.Array:
+    """Expert-parallel capacity-slot grouped GEMM (DESIGN.md §14).
+
+    ``x4``: ``(n, e, cap, k)`` dispatch slots (MoE layout — ``n`` token
+    groups, ``e`` experts, ``cap`` capacity); ``w``: ``(e, k, f)`` expert
+    bank.  Returns ``(n, e, cap, f)``.
+
+    Under an active mesh whose ``axis`` divides both ``n`` and ``e``, the
+    call enters the engine as a MESH descriptor: the comm-charged planner
+    arbitrates *gathered* (all-gather weights, compute locally) vs
+    *distributed* (keep weight shards, ``all_to_all`` the slots) and the
+    chosen strategy runs under ``shard_map`` with the fused single-launch
+    property per shard.  Off-mesh (or on indivisible shapes) it degrades
+    to the ordinary differentiable :func:`grouped_gemm` path.
+    """
+    nt, e, cap, k = x4.shape
+    from repro.runtime.shardlib import current_mesh
+    mesh = current_mesh()
+    s = mesh.shape.get(axis, 1) if mesh is not None else 1
+    if s <= 1 or e % s or nt % s:
+        xt = x4.transpose(1, 0, 2, 3).reshape(e * nt * cap, k)
+        sizes = jnp.full((e,), nt * cap, jnp.int32)
+        out = grouped_gemm(xt, w, sizes, epilogue=epilogue)
+        return out.reshape(e, nt, cap, -1).transpose(1, 0, 2, 3)
+    return _ep_vjp(axis, epilogue, x4, w)

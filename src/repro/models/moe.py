@@ -121,11 +121,23 @@ def moe_apply(params, cfg, x):
     #   * TP-f fallback (grok-1: E=8 < 16): tokens stay data-sharded, the
     #     expert FFN dim f is model-sharded (Megatron inside each expert).
     bd = ("pod", "data")
+    # Mesh-aware engine dispatch (DESIGN.md §14): under the pallas
+    # backend, EP expert compute enters the engine as a MESH descriptor
+    # — the comm-charged planner arbitrates gathered vs distributed
+    # (all_to_all) dispatch per shape, keeping the fused single-launch
+    # property per shard.  Needs the token-group dim divisible too.
+    ep_mesh = ep and get_config().backend == "pallas" and n % msize == 0
     if ep:
         dispatch = shard_activation(dispatch, (bd, None, "model", None))
         combine = shard_activation(combine, (bd, None, "model", None))
-        xin_spec = (bd, "model", None, None)
-        h_spec = (bd, "model", None, None)
+        if ep_mesh:
+            # shard_map shards the token-group dim over "model"; matching
+            # constraints avoid reshard ping-pong between the three GEMMs.
+            xin_spec = ("model", None, None, None)
+            h_spec = ("model", None, None, None)
+        else:
+            xin_spec = (bd, "model", None, None)
+            h_spec = (bd, "model", None, None)
     elif t <= 2048:
         # Decode-scale token counts: replicate the (tiny) token block so
         # the 2D-sharded expert weights never move — XLA partial-contracts
@@ -143,7 +155,14 @@ def moe_apply(params, cfg, x):
     # activation fused into the kernel epilogue (DESIGN.md §9); the XLA
     # default keeps the einsum formulation, which partitions under SPMD.
     if get_config().backend == "pallas":
-        mm = _expert_gemm_grouped
+        if ep_mesh:
+            from repro.kernels.grouped_gemm import expert_parallel_grouped_gemm
+
+            def mm(x4, w, epilogue=None):
+                return expert_parallel_grouped_gemm(x4, w, axis="model",
+                                                    epilogue=epilogue)
+        else:
+            mm = _expert_gemm_grouped
     else:
         def mm(x4, w, epilogue=None):
             out = jnp.einsum("neck,ekf->necf", x4, w)

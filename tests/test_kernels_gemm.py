@@ -166,13 +166,17 @@ def test_fused_parity_dtypes(dtype):
 def test_multiregion_plan_is_single_launch():
     """Acceptance: a multi-region descriptor resolves to exactly ONE
     pallas_call on the fused path (engine.stats launch counter), and the
-    result is bit-identical to the multi-launch lowering."""
+    result is bit-identical to the multi-launch lowering.  Since the
+    fused-ranking fix (DESIGN.md §14) the planner itself prices the
+    stitched fused walk against per-region launches and comes out
+    ``fused=False`` on this cover — the measured fused/multi speedup here
+    is < 1 — so the fused path is exercised by forcing the bit."""
     engine.reset_stats()
     d = GemmDescriptor(m=640, n=640, k=512)
     plan = plan_gemm(d, force_block=(256, 256))
-    assert len(plan.regions) >= 3 and plan.fused
+    assert len(plan.regions) >= 3 and not plan.fused
     a, b = rand((640, 512)), rand((512, 640))
-    fused = gemm(a, b, plan=plan)
+    fused = gemm(a, b, plan=plan, fused=True)
     assert engine.stats()["gemm"]["launches"] == 1
     multi = gemm(a, b, plan=plan, fused=False)
     assert engine.stats()["gemm"]["launches"] == 1 + len(plan.regions)

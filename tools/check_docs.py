@@ -24,7 +24,11 @@ Four contracts across the doc surfaces:
   * DESIGN.md §13 must keep naming the low-precision surface (quant
     spec → scale tables → fused dequant epilogue → W8A16 codec →
     KV-int8 pools → quant benchmark), with the same two-sided
-    existence check.
+    existence check;
+  * DESIGN.md §14 must keep naming the mesh-planning surface
+    (interconnect probes → calibrated network model → mesh descriptors
+    → comm-charged arbitration → expert-parallel dispatch → fleet
+    tuning CLI → mesh benchmark), same two-sided existence check.
 
 Stdlib only (``ast``-based, no imports of the package needed for the
 docstring gate); exits non-zero with one line per violation.
@@ -266,6 +270,45 @@ def check_design_quant() -> list:
     return errors
 
 
+# The mesh-planning surface DESIGN.md §14 documents.  Same contract:
+# the chapter must name each layer of the mesh axis (probes, calibrated
+# network model, mesh spec, strategy arbitration, EP execution, fleet
+# cache CLI, benchmark artifact), each still defined by its owning file.
+_MESH_SURFACE = (
+    ("probe_all_gather", "src/repro/core/microbench.py"),
+    ("collective_seconds", "src/repro/core/machine.py"),
+    ("MeshSpec", "src/repro/core/descriptor.py"),
+    ("mesh_comm_events", "src/repro/core/blocking.py"),
+    ("count_comm", "src/repro/core/engine.py"),
+    ("expert_parallel_grouped_gemm", "src/repro/kernels/grouped_gemm/ops.py"),
+    ("tuning_cache_preload", "src/repro/core/config.py"),
+    ("BENCH_mesh.json", "benchmarks/mesh_overlap.py"),
+)
+
+
+def check_design_mesh() -> list:
+    """DESIGN.md §14 drift gate: the mesh chapter must name each layer
+    of the mesh-planning axis (interconnect probes, calibrated network
+    model, mesh descriptors, comm-charged arbitration, expert-parallel
+    execution, fleet tuning CLI, benchmark artifact), and each named
+    symbol must still exist in the file that owns it."""
+    design = (ROOT / "DESIGN.md").read_text()
+    chapter = _design_section(design, "14")
+    if not chapter:
+        return ["DESIGN.md: no '## §14' section (the mesh-planning "
+                "chapter)"]
+    errors = []
+    for name, rel in _MESH_SURFACE:
+        if name not in chapter:
+            errors.append(f"DESIGN.md §14: mesh surface {name!r} "
+                          f"missing from the chapter")
+        src = ROOT / rel
+        if not src.exists() or name.split(".")[0] not in src.read_text():
+            errors.append(f"{rel}: no longer defines {name!r} named by "
+                          f"DESIGN.md §14")
+    return errors
+
+
 def main() -> int:
     sections = design_sections()
     if not sections:
@@ -273,7 +316,8 @@ def main() -> int:
         return 1
     errors = (check_design_refs(sections) + check_readme()
               + check_core_docstrings() + check_design_families()
-              + check_design_serving() + check_design_quant())
+              + check_design_serving() + check_design_quant()
+              + check_design_mesh())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
@@ -282,7 +326,7 @@ def main() -> int:
         print(f"check_docs: OK ({len(sections)} DESIGN sections, "
               f"{n_refs} src citations, README verified, core docstrings "
               f"+ §10-§12 family lists + §12 serving + §13 quant "
-              f"surfaces verified)")
+              f"+ §14 mesh surfaces verified)")
     return 1 if errors else 0
 
 

@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Fleet tuning-cache CLI (DESIGN.md §14): show / merge / export.
+
+A fleet of workers each autotunes into its own ``TuningCache`` JSON
+(entries keyed ``<machine.tuning_key>|<mode>|<desc-cache-key>``, each
+record carrying the measured ``us`` and a ``ts`` wall-clock stamp).
+This tool unions those files into one warm-start cache that serving
+processes preload via ``configure(tuning_cache_preload=...)`` — read
+only, zero autotune stalls.
+
+Commands::
+
+    python tools/tune.py show  cache.json [--machine PREFIX]
+    python tools/tune.py merge out.json in1.json in2.json [...]
+    python tools/tune.py export in.json out.json --machine PREFIX
+
+Merge policy: union by entry key (machine tuning-key + execution mode +
+descriptor cache key); on collision the record with the NEWEST ``ts``
+wins (records without a stamp lose to any stamped record).  Entries from
+network-calibrated machines never collide with uncalibrated ones — the
+``+net`` tuning-key suffix keeps them apart (DESIGN.md §14).
+
+Deliberately stdlib-only (no jax import): runs instantly on login nodes
+and in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+from typing import Dict, List
+
+CACHE_VERSION = 1
+
+
+def load_entries(path: str) -> Dict[str, dict]:
+    """Entries of one tuning-cache file; raises on a malformed file (the
+    CLI should fail loudly where the engine degrades silently)."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or not isinstance(data.get("entries"), dict):
+        raise ValueError(f"{path}: not a tuning-cache file")
+    return data["entries"]
+
+
+def merge_entries(caches: List[Dict[str, dict]]) -> Dict[str, dict]:
+    """Union entry dicts; on key collision the newest ``ts`` wins."""
+    out: Dict[str, dict] = {}
+    for entries in caches:
+        for key, rec in entries.items():
+            old = out.get(key)
+            if old is None or float(rec.get("ts", 0)) >= float(
+                    old.get("ts", 0)):
+                out[key] = rec
+    return out
+
+
+def write_cache(path: str, entries: Dict[str, dict]) -> None:
+    """Atomic write in the engine's on-disk format."""
+    payload = {"version": CACHE_VERSION, "entries": entries}
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tuning.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def filter_entries(entries: Dict[str, dict],
+                   machine_prefix: str) -> Dict[str, dict]:
+    """Entries whose machine tuning-key starts with ``machine_prefix``
+    (``calibrated_host`` matches both ``calibrated_host`` and
+    ``calibrated_host+net``; use the full ``+net`` form to select only
+    network-calibrated records)."""
+    return {k: v for k, v in entries.items()
+            if k.split("|", 1)[0].startswith(machine_prefix)}
+
+
+def _cmd_show(args) -> int:
+    entries = load_entries(args.cache)
+    if args.machine:
+        entries = filter_entries(entries, args.machine)
+    for key in sorted(entries):
+        rec = entries[key]
+        print(f"{key}\n    family={rec.get('family')} "
+              f"us={rec.get('us')} ts={rec.get('ts', '-')} "
+              f"fused={rec.get('fused', '-')} comm={rec.get('comm', '-')}")
+    print(f"# {len(entries)} entries", file=sys.stderr)
+    return 0
+
+
+def _cmd_merge(args) -> int:
+    caches = [load_entries(p) for p in args.inputs]
+    merged = merge_entries(caches)
+    write_cache(args.out, merged)
+    total = sum(len(c) for c in caches)
+    print(f"merged {len(args.inputs)} files ({total} entries) -> "
+          f"{args.out} ({len(merged)} entries)", file=sys.stderr)
+    return 0
+
+
+def _cmd_export(args) -> int:
+    entries = load_entries(args.cache)
+    kept = filter_entries(entries, args.machine) if args.machine else entries
+    write_cache(args.out, kept)
+    print(f"exported {len(kept)}/{len(entries)} entries -> {args.out}",
+          file=sys.stderr)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("show", help="list a cache's entries")
+    p.add_argument("cache")
+    p.add_argument("--machine", default=None,
+                   help="filter by machine tuning-key prefix")
+    p.set_defaults(fn=_cmd_show)
+    p = sub.add_parser("merge", help="union caches, newest timing wins")
+    p.add_argument("out")
+    p.add_argument("inputs", nargs="+")
+    p.set_defaults(fn=_cmd_merge)
+    p = sub.add_parser("export", help="filter a cache to one machine")
+    p.add_argument("cache")
+    p.add_argument("out")
+    p.add_argument("--machine", default=None,
+                   help="machine tuning-key prefix to keep")
+    p.set_defaults(fn=_cmd_export)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
