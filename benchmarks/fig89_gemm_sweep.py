@@ -14,8 +14,20 @@ reports per-call traced launch counts; the whole fused-vs-multi table is
 written to ``BENCH_gemm_fused.json`` so the perf trajectory is tracked
 across PRs.  ``run(smoke=True)`` is the CI end-to-end exercise of the
 fused path (reduced sizes/iterations, same code paths).
+
+Since the offline-refit loop (DESIGN.md §15) the sweep additionally:
+
+  * writes every fused/multi winner into ``BENCH_tuning_cache.json`` —
+    a real engine tuning cache, so CI can drive ``tools/tune.py refit``
+    end-to-end on measured smoke data;
+  * regresses the measured timings back onto the machine model
+    (``repro.core.refit.fit_records``) and reports the analytical
+    tier's fused-vs-multi **misrank count before vs after** the refit —
+    the number the offline loop exists to reduce.
 """
+import dataclasses
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +35,9 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core import GemmDescriptor, engine, plan_gemm, matmul, backend
+from repro.core import refit as refit_lib
+from repro.core.autotune import TuningCache
+from repro.core.config import get_config as get_engine_config
 from repro.kernels.gemm import gemm
 from repro.kernels.transpose import transpose
 
@@ -30,6 +45,7 @@ SIZES = [16, 64, 80, 128, 250, 512]
 SMOKE_SIZES = [16, 80]
 K = 512
 FUSED_JSON = "BENCH_gemm_fused.json"
+TUNING_JSON = "BENCH_tuning_cache.json"
 
 
 def _launches(fn) -> int:
@@ -39,15 +55,21 @@ def _launches(fn) -> int:
     return engine.stats()["gemm"]["launches"] - before
 
 
-def _fused_vs_multi(label, plan, a, b, layout, iters, warmup, entries):
+def _fused_vs_multi(label, plan, a, b, layout, iters, warmup, entries,
+                    measured=None):
     """Time the fused vs multi-launch lowering of one plan; record both
-    the wall-clock delta and the traced launch counts (DESIGN.md §8)."""
+    the wall-clock delta and the traced launch counts (DESIGN.md §8).
+    ``measured`` collects ``(plan_variant, us)`` pairs for the refit
+    stanza (DESIGN.md §15)."""
     ff = jax.jit(lambda a, b: gemm(a, b, layout=layout, plan=plan,
                                    fused=True))
     fm = jax.jit(lambda a, b: gemm(a, b, layout=layout, plan=plan,
                                    fused=False))
     us_f = time_fn(ff, a, b, iters=iters, warmup=warmup)
     us_m = time_fn(fm, a, b, iters=iters, warmup=warmup)
+    if measured is not None:
+        measured.append((dataclasses.replace(plan, fused=True), us_f))
+        measured.append((dataclasses.replace(plan, fused=False), us_m))
     lf = _launches(lambda: gemm(a, b, layout=layout, plan=plan, fused=True))
     lm = _launches(lambda: gemm(a, b, layout=layout, plan=plan, fused=False))
     d = plan.desc
@@ -69,11 +91,20 @@ def _fused_vs_multi(label, plan, a, b, layout, iters, warmup, entries):
          f"launches_fused={lf};launches_multi={lm}")
 
 
+def _pairs(measured):
+    """(fused_plan, multi_plan, fused_us, multi_us) per benchmark shape —
+    ``measured`` interleaves the two lowerings of each plan."""
+    for i in range(0, len(measured) - 1, 2):
+        (pf, uf), (pm, um) = measured[i], measured[i + 1]
+        yield pf, pm, uf, um
+
+
 def run(smoke: bool = False):
     rng = np.random.default_rng(0)
     sizes = SMOKE_SIZES if smoke else SIZES
     iters, warmup = (2, 1) if smoke else (3, 1)
     fused_entries = {}
+    measured = []
     for layout in ("nt", "nn"):
         for mn in sizes:
             a = jnp.asarray(rng.standard_normal((mn, K)), jnp.float32)
@@ -99,7 +130,7 @@ def run(smoke: bool = False):
             # Fused single-launch vs multi-launch lowering of the same
             # plan (DESIGN.md §8): wall-clock + traced launch counts.
             _fused_vs_multi(f"{layout}_{mn}", plan, a, b, layout,
-                            iters, warmup, fused_entries)
+                            iters, warmup, fused_entries, measured)
 
     # A genuinely multi-region plan (Fig 7 geometry scaled to the MXU):
     # the fused path collapses its per-region launches to exactly one.
@@ -110,11 +141,48 @@ def run(smoke: bool = False):
     a = jnp.asarray(rng.standard_normal((mn_h, K)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((K, mn_h)), jnp.float32)
     _fused_vs_multi(f"hetero_{mn_h}", plan, a, b, "nn",
-                    iters, warmup, fused_entries)
+                    iters, warmup, fused_entries, measured)
+
+    # Measured winners -> a real tuning-cache file, so the CI smoke run
+    # can exercise ``tools/tune.py refit`` on genuine timing data.
+    machine = get_engine_config().machine
+    if os.path.exists(TUNING_JSON):
+        os.unlink(TUNING_JSON)  # a cache instance lazy-loads: start clean
+    tcache = TuningCache(TUNING_JSON)
+    for plan_f, plan_m, us_f, us_m in _pairs(measured):
+        win, us = (plan_f, us_f) if us_f <= us_m else (plan_m, us_m)
+        tcache.store(machine.tuning_key, win.desc, win, us, interpret=True)
+    emit("fig89_refit/cache", 0,
+         f"wrote={TUNING_JSON};entries={len(measured) // 2}")
+
+    # Refit stanza (DESIGN.md §15): fit the model on BOTH lowerings'
+    # measured times per shape, then score fused-vs-multi ranking before
+    # vs after.  Reported, not hard-gated — wall-clock ranking on a
+    # loaded CI host is noisy; the deterministic round-trip is asserted
+    # in tests/test_warmstart.py instead.
+    fit = refit_lib.fit_records(measured, machine)
+    refit_machine = refit_lib.apply_fit(machine, {
+        **fit, "fingerprint": "fig89-local"})
+    rank_pairs = [(pf, pm, uf, um) for pf, pm, uf, um in _pairs(measured)]
+    bad0, considered = refit_lib.count_misranks(rank_pairs, machine)
+    bad1, _ = refit_lib.count_misranks(rank_pairs, refit_machine)
+    refit_entry = {
+        "entries_fit": fit["entries"],
+        "fitted": fit["fitted"],
+        "residual_us": fit["residual_us"],
+        "misranks_before": bad0,
+        "misranks_after": bad1,
+        "pairs_considered": considered,
+    }
+    emit("fig89_refit/misranks", 0,
+         f"before={bad0};after={bad1};considered={considered};"
+         f"residual_before_us={fit['residual_us']['before']};"
+         f"residual_after_us={fit['residual_us']['after']}")
 
     with open(FUSED_JSON, "w") as f:
         json.dump({"k": K, "mode": "smoke" if smoke else "full",
-                   "entries": fused_entries}, f, indent=1, sort_keys=True)
+                   "entries": fused_entries, "refit": refit_entry},
+                  f, indent=1, sort_keys=True)
     emit("fig89_fused/json", 0, f"wrote={FUSED_JSON};"
          f"entries={len(fused_entries)}")
 

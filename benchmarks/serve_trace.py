@@ -16,11 +16,26 @@ retrace).  Two phases:
 
 Both phases check per-request greedy outputs token-identical to the
 static-batch ``launch.serve.generate`` path before recording anything —
-a wrong number is worse than no number.  Writes ``BENCH_serve.json``;
-``run(smoke=True)`` is the CI variant (smaller trace, same code paths),
-wired into ``benchmarks/run.py --smoke``.
+a wrong number is worse than no number.  Each phase also records the
+scheduler's per-phase wall-clock breakdown (admission / prefill /
+decode / eviction).
+
+A third stanza measures **cold vs warm startup** (DESIGN.md §15): the
+descriptor population seen by the main phases is saved as a manifest,
+then first-token latency is timed on a fresh engine once cold and once
+after ``ContinuousBatchingEngine.warmup`` — asserting (in smoke too)
+that the warm serving phase performs zero autotune timings and zero
+plan-cache misses.  Timings are recorded, only the invariants are
+gated — wall-clock comparisons are machine-dependent.
+
+Writes ``BENCH_serve.json``; ``run(smoke=True)`` is the CI variant
+(smaller trace, same code paths), wired into ``benchmarks/run.py
+--smoke``.
 """
 import json
+import os
+import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +48,8 @@ from repro.core.config import use
 from repro.launch.serve import generate
 from repro.models import LanguageModel
 from repro.models.attention import PageSpec
-from repro.runtime.batching import ContinuousBatchingEngine, poisson_trace
+from repro.runtime.batching import (ContinuousBatchingEngine, Request,
+                                    poisson_trace)
 
 SERVE_JSON = "BENCH_serve.json"
 
@@ -74,8 +90,56 @@ def _run_phase(cfg, params, backend, trace_args, seed):
         "p50_token_latency_ms": round(m["p50_token_latency_s"] * 1e3, 2),
         "p99_token_latency_ms": round(m["p99_token_latency_s"] * 1e3, 2),
         "flash_decode_launches": m["flash_decode_launches"],
+        "phase_ms": {k: round(v * 1e3, 2)
+                     for k, v in m["phase_seconds"].items()},
         "token_identical": True,
     }
+
+
+def _startup_phase(cfg, params, trace_args, seed, manifest):
+    """Cold-vs-warm first-token latency on a fresh serving engine.
+
+    Cold: plan/kernel caches dropped, first request pays every trace and
+    build.  Warm: same drop, then ``warmup`` over the manifest — the
+    gated invariant is that the warm serving phase dispatches with ZERO
+    autotune timings and ZERO plan-cache misses (DESIGN.md §15)."""
+    _, _, plens, _, slots, pages, psize, blocks = trace_args
+    rng = np.random.default_rng(seed + 7)
+    L = int(np.atleast_1d(plens)[0])
+    prompt = rng.integers(0, cfg.vocab_size, size=L).astype(np.int32)
+    out = {}
+    with use(backend="pallas"):
+        for mode in ("cold", "warm"):
+            engine.reset_stats(entries=True)
+            serving = ContinuousBatchingEngine(
+                cfg, params, num_slots=slots,
+                spec=PageSpec(pages, psize, blocks))
+            warm_s = 0.0
+            if mode == "warm":
+                w = serving.warmup(prompt_lens=[L], manifest=manifest)
+                warm_s = w["seconds"]
+                engine.reset_stats(entries=False)
+            t0 = time.time()
+            serving.submit(Request(rid=0, prompt=prompt, max_new=2))
+            guard = 0
+            while not serving.token_latencies and guard < 50:
+                serving.step()
+                guard += 1
+            first = time.time() - t0
+            stats = engine.stats()
+            out[mode] = {
+                "first_token_ms": round(first * 1e3, 2),
+                "warmup_s": round(warm_s, 3),
+                "autotune_timings": sum(
+                    v for b in stats.values() for k, v in b.items()
+                    if k.startswith("autotune_timings")),
+                "plan_misses": sum(
+                    v for b in stats.values() for k, v in b.items()
+                    if k.startswith("plan_misses")),
+            }
+    assert out["warm"]["autotune_timings"] == 0, out
+    assert out["warm"]["plan_misses"] == 0, out
+    return out
 
 
 def run(smoke: bool = False, seed: int = 0):
@@ -94,12 +158,33 @@ def run(smoke: bool = False, seed: int = 0):
     for backend in ("xla", "pallas"):
         r = _run_phase(cfg, params, backend, trace, seed)
         entries[backend] = r
+        ph = r["phase_ms"]
         emit(f"serve_trace/{backend}", 0,
              f"tok_s={r['tokens_per_s']};p50_ms={r['p50_token_latency_ms']};"
              f"p99_ms={r['p99_token_latency_ms']};"
              f"evictions={r['evictions']};"
              f"decode_steps={r['decode_steps']};"
-             f"launches={r['flash_decode_launches']};identical=1")
+             f"launches={r['flash_decode_launches']};identical=1;"
+             f"adm_ms={ph['admission']};pf_ms={ph['prefill']};"
+             f"dec_ms={ph['decode']};evict_ms={ph['eviction']}")
+
+    # Cold vs warm startup — AFTER the main phases so the descriptor
+    # population they dispatched is the manifest (and so the launch-count
+    # asserts above saw genuinely cold engines).
+    fd, manifest = tempfile.mkstemp(suffix=".manifest.json")
+    os.close(fd)
+    try:
+        engine.save_manifest(manifest)
+        s = _startup_phase(cfg, params, trace, seed, manifest)
+        entries["startup"] = s
+        emit("serve_trace/startup", 0,
+             f"cold_ms={s['cold']['first_token_ms']};"
+             f"warm_ms={s['warm']['first_token_ms']};"
+             f"warmup_s={s['warm']['warmup_s']};"
+             f"warm_autotune={s['warm']['autotune_timings']};"
+             f"warm_plan_misses={s['warm']['plan_misses']}")
+    finally:
+        os.unlink(manifest)
 
     with open(SERVE_JSON, "w") as f:
         json.dump({"mode": "smoke" if smoke else "full",

@@ -38,6 +38,7 @@ from .descriptor import (BIAS_EPILOGUES, FlashBwdDescriptor,
                          GemmDescriptor, GroupedGemmBwdDescriptor,
                          GroupedGemmDescriptor, SsdChunkBwdDescriptor,
                          SsdChunkDescriptor, TransposeDescriptor)
+from . import machine as machine_mod
 from .machine import MachineModel, DEFAULT_MACHINE
 # The flattening/predication machinery lives in the schedule layer
 # (DESIGN.md §9); re-exported here for compatibility — plans *produce*
@@ -215,9 +216,13 @@ class BlockingPlan:
 # not free — every grid step decodes a tile-table row and the accumulator
 # read-modify-writes its output window — while the measured multi-launch
 # dispatch + stitch overhead is ~4x smaller than the model charged.
-FUSED_TILE_DECODE_S = 6e-7   # per fused grid step: table decode + predication
-EXTRA_LAUNCH_FACTOR = 0.25   # measured cost of each launch beyond the first
-STITCH_DISCOUNT = 0.25       # measured fraction of naive stitch-traffic bytes
+# These coefficients now live on :class:`MachineModel` so the offline
+# refit pipeline (``tools/tune.py refit``, DESIGN.md §15) can replace the
+# hand calibration with a least-squares fit of TuningCache timings; the
+# module aliases keep the seed values importable.
+FUSED_TILE_DECODE_S = machine_mod.DEFAULT_FUSED_TILE_DECODE_S
+EXTRA_LAUNCH_FACTOR = machine_mod.DEFAULT_EXTRA_LAUNCH_FACTOR
+STITCH_DISCOUNT = machine_mod.DEFAULT_STITCH_DISCOUNT
 
 
 def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
@@ -252,12 +257,12 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
     steps = sum(r.num_microkernels for r in regions) * ceil_div(k, bk)
     launches = 1 if fused else len(regions)
     launch_s = machine.launch_overhead_s * (
-        1 + (launches - 1) * EXTRA_LAUNCH_FACTOR)
+        1 + (launches - 1) * machine.extra_launch_factor)
     stitch_s = 0.0
     fused_s = 0.0
     if fused:
         # Table decode per step plus the RMW re-read of each output window.
-        fused_s = (steps * FUSED_TILE_DECODE_S
+        fused_s = (steps * machine.fused_tile_decode_s
                    + out_elems * out_sz / machine.hbm_bw)
     elif len(regions) > 1:
         # Operand slices are copied in and region outputs copied out again
@@ -265,7 +270,7 @@ def _predict_seconds(regions: Sequence[Region], desc: GemmDescriptor, bk: int,
         stitch_bytes = sum((r.rows * a_sz + r.cols * b_sz) * k
                            for r in regions)
         stitch_bytes += 2 * out_elems * out_sz
-        stitch_s = STITCH_DISCOUNT * stitch_bytes / machine.hbm_bw
+        stitch_s = machine.stitch_discount * stitch_bytes / machine.hbm_bw
     # compute and memory overlap in the pipelined kernel: take max + overhead
     return (max(compute_s, memory_s) + steps * machine.step_overhead_s
             + launch_s + stitch_s + fused_s)

@@ -19,6 +19,11 @@ serves a request (generated SME kernel vs vendor BLAS).  Ours has more:
   * ``tuning_cache_preload`` — read-only fleet-merged tuning cache
                     (tools/tune.py) consulted after ``tuning_cache``
                     misses — the warm-start path (DESIGN.md §14);
+  * ``warm_start`` — path of a recorded descriptor manifest
+                    (``engine.save_manifest``); ``engine.warmup()`` with
+                    no arguments replays it, pre-resolving plans and
+                    pre-building kernels before the first request
+                    (DESIGN.md §15);
   * ``fused``     — plan-execution policy for families with a fused
                     single-launch lowering (GEMM, grouped GEMM —
                     DESIGN.md §8/§9): "auto" follows the plan's ``fused``
@@ -39,7 +44,7 @@ Env-var overrides seed the process default at import: ``REPRO_AUTOTUNE=1``,
 ``REPRO_TUNING_CACHE=/path/to/cache.json``,
 ``REPRO_TUNING_CACHE_PRELOAD=/path/to/fleet.json``,
 ``REPRO_AUTOTUNE_BUDGET=K``, ``REPRO_FUSED=auto|on|off``,
-``REPRO_QUANT=int8|w8a16|fp8``.
+``REPRO_QUANT=int8|w8a16|fp8``, ``REPRO_WARM_START=/path/to/manifest.json``.
 
 Configuration is layered: a process-wide default (``configure``) under a
 thread-local override stack (``use`` context manager), so a serving thread
@@ -81,6 +86,11 @@ class EngineConfig:
     # Never written — serving processes start with zero autotune stalls
     # without contending on the shared file.
     tuning_cache_preload: Optional[str] = None
+    # AOT warm-start manifest (DESIGN.md §15): a recorded descriptor
+    # population ``engine.warmup()`` replays with no arguments.  Empty
+    # string = explicit off (``replace`` treats None as "leave
+    # unchanged", matching ``tuning_cache`` semantics).
+    warm_start: Optional[str] = None
     # Plan-execution policy for fused-capable families (DESIGN.md §8/§9):
     # "auto" honors the plan's fused bit; "on"/"off" force the
     # single-launch / multi-launch (or pad-scatter) lowering.
@@ -158,6 +168,7 @@ def _env_default() -> EngineConfig:
         tuning_cache=os.environ.get("REPRO_TUNING_CACHE") or None,
         tuning_cache_preload=os.environ.get("REPRO_TUNING_CACHE_PRELOAD")
         or None,
+        warm_start=os.environ.get("REPRO_WARM_START") or None,
         fused=fused,
         quant=quant,
     )
@@ -186,6 +197,7 @@ def configure(*, backend: Optional[str] = None,
               autotune_budget: Optional[int] = None,
               tuning_cache: Optional[str] = None,
               tuning_cache_preload: Optional[str] = None,
+              warm_start: Optional[str] = None,
               fused: Optional[str] = None, quant=None) -> EngineConfig:
     """Mutate the process-wide default (all threads without an override)."""
     global _DEFAULT
@@ -195,6 +207,7 @@ def configure(*, backend: Optional[str] = None,
                                     autotune_budget=autotune_budget,
                                     tuning_cache=tuning_cache,
                                     tuning_cache_preload=tuning_cache_preload,
+                                    warm_start=warm_start,
                                     fused=fused, quant=quant)
         return _DEFAULT
 
@@ -205,6 +218,7 @@ def use(*, backend: Optional[str] = None, interpret: Optional[bool] = None,
         autotune_budget: Optional[int] = None,
         tuning_cache: Optional[str] = None,
         tuning_cache_preload: Optional[str] = None,
+        warm_start: Optional[str] = None,
         fused: Optional[str] = None, quant=None):
     """Thread-local override: ``with use(backend="pallas"): ...``."""
     stack = _stack()
@@ -213,6 +227,7 @@ def use(*, backend: Optional[str] = None, interpret: Optional[bool] = None,
                                       autotune_budget=autotune_budget,
                                       tuning_cache=tuning_cache,
                                       tuning_cache_preload=tuning_cache_preload,
+                                      warm_start=warm_start,
                                       fused=fused, quant=quant))
     try:
         yield stack[-1]

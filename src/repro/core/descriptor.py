@@ -793,3 +793,58 @@ class TransposeDescriptor(KernelDescriptor):
     @property
     def out_bytes(self) -> int:
         return self.in_bytes
+
+
+# ---------------------------------------------------------------------------
+# Cache-key round trip (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+# Family name -> descriptor class, for rebuilding a descriptor from its
+# engine cache key.  Kept next to the classes so adding a family here is
+# part of adding the family.
+_FAMILY_DESCRIPTORS = {
+    cls.family: cls for cls in (
+        GemmDescriptor, FlashDescriptor, FlashBwdDescriptor,
+        FlashDecodeDescriptor, GroupedGemmDescriptor,
+        GroupedGemmBwdDescriptor, SsdChunkDescriptor, SsdChunkBwdDescriptor,
+        TransposeDescriptor)
+}
+
+
+def descriptor_from_cache_key(key) -> KernelDescriptor:
+    """Rebuild the descriptor a ``cache_key()`` tuple names.
+
+    ``cache_key()`` is ``(family,) + dataclasses.astuple(desc)``, with
+    nested :class:`QuantSpec` / :class:`MeshSpec` recursed into plain
+    tuples — so the key is fully invertible.  This is what lets the
+    offline refit pipeline and the warm-start manifest reconstruct the
+    exact descriptor population from TuningCache entry keys and recorded
+    manifests (DESIGN.md §15).  Raises ``ValueError`` on an unknown
+    family or a field-count mismatch (a key written by a different
+    descriptor schema must not silently half-apply).
+    """
+    key = tuple(key)
+    if not key:
+        raise ValueError("empty cache key")
+    family, values = key[0], key[1:]
+    cls = _FAMILY_DESCRIPTORS.get(family)
+    if cls is None:
+        raise ValueError(f"unknown descriptor family {family!r}; "
+                         f"known: {sorted(_FAMILY_DESCRIPTORS)}")
+    fields = dataclasses.fields(cls)
+    if len(values) != len(fields):
+        raise ValueError(
+            f"{family} cache key carries {len(values)} fields, the "
+            f"descriptor schema has {len(fields)} — written by a "
+            f"different version?")
+    kwargs = {}
+    for f, v in zip(fields, values):
+        if v is not None:
+            if f.name == "quant":
+                v = QuantSpec(*v)
+            elif f.name == "mesh":
+                v = MeshSpec(*v)
+            elif isinstance(v, list):
+                v = tuple(v)
+        kwargs[f.name] = v
+    return cls(**kwargs)

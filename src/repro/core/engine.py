@@ -42,7 +42,8 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import threading
-from typing import Any, Callable, Dict, Optional
+import warnings
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
 from . import autotune as _autotune
 from .config import get_config
@@ -106,6 +107,14 @@ _launches: Dict[str, int] = {}
 # ``_launches``.
 _comm_bytes: Dict[str, int] = {}
 _collective_launches: Dict[str, int] = {}
+
+# AOT warm-start (DESIGN.md §15): every dispatch records its descriptor
+# (keyed by cache key — one entry per distinct problem) so a serving
+# process can save the population it actually served (``save_manifest``)
+# and the next start can pre-resolve plans + pre-build kernels for it
+# (``warmup``) before the first request arrives.
+_seen_descs: Dict[tuple, KernelDescriptor] = {}
+_warmups: Dict[str, int] = {}
 
 
 def _note_source(family: str, source: str):
@@ -272,12 +281,90 @@ def dispatch(desc: KernelDescriptor, *operands, plan: Any = None,
     """
     fam = get_family(desc.family)
     cfg = get_config()
+    _seen_descs.setdefault(desc.cache_key(), desc)
     if interpret is None:
         interpret = cfg.interpret
     if plan is None:
         plan = _resolve_plan(desc, cfg, operands=operands, kw=kw,
                              interpret=interpret)
     return fam.execute(desc, plan, *operands, interpret=interpret, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AOT warm-start (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def seen_descriptors() -> List[KernelDescriptor]:
+    """Every distinct descriptor dispatched since the last full reset,
+    in deterministic (cache-key) order — the recordable population a
+    warm-start manifest captures."""
+    return [_seen_descs[k] for k in sorted(_seen_descs, key=repr)]
+
+
+def save_manifest(path: str,
+                  descriptors: Optional[Iterable[KernelDescriptor]] = None
+                  ) -> int:
+    """Record a descriptor manifest for ``warmup`` (default: everything
+    this process dispatched, :func:`seen_descriptors`).  Returns the
+    number of entries written."""
+    from . import warmstart as _warmstart
+    descs = list(descriptors) if descriptors is not None \
+        else seen_descriptors()
+    return _warmstart.save_manifest(path, descs)
+
+
+def warmup(descriptors: Optional[Iterable[KernelDescriptor]] = None, *,
+           manifest: Optional[str] = None, build: bool = True,
+           interpret: Optional[bool] = None) -> Dict[str, int]:
+    """Pre-resolve plans and pre-build kernels before the first request.
+
+    The AOT warm-start entry point (DESIGN.md §15): for each descriptor —
+    given directly, loaded from a ``manifest`` path, or defaulted from
+    ``configure(warm_start=...)`` / ``REPRO_WARM_START`` — resolve its
+    plan through the normal three tiers (no operands, so the autotune
+    tier is skipped: a preloaded tuning cache serves the tuned tier and
+    times nothing) and, with ``build=True``, execute the family once on
+    synthesized zero operands so the kernel cache is hot.  After a
+    ``reset_stats(entries=False)`` a warmed serving step then shows
+    ``autotune_timings == 0`` and zero plan-cache misses.
+
+    Returns ``{family: warmed descriptor count}``; the same counts
+    accumulate in ``stats()`` under ``"warmups"``.  A descriptor whose
+    build fails (or that warmup cannot synthesize operands for, e.g.
+    mesh descriptors) still warms its plan — degradation is partial,
+    never fatal.
+    """
+    cfg = get_config()
+    if descriptors is None:
+        path = manifest if manifest is not None else cfg.warm_start
+        if not path:
+            raise ValueError(
+                "warmup() needs descriptors, a manifest path, or "
+                "configure(warm_start=...) / REPRO_WARM_START")
+        from . import warmstart as _warmstart
+        descriptors = _warmstart.load_manifest(path)
+    if interpret is None:
+        interpret = cfg.interpret
+    counts: Dict[str, int] = {}
+    for desc in descriptors:
+        fam = get_family(desc.family)
+        plan = _resolve_plan(desc, cfg, interpret=interpret)
+        if build:
+            from . import warmstart as _warmstart
+            try:
+                synth = _warmstart.synth_operands(desc)
+                if synth is not None:
+                    operands, kw = synth
+                    fam.execute(desc, plan, *operands,
+                                interpret=interpret, **kw)
+            except Exception as e:
+                warnings.warn(
+                    f"warmup build failed for {desc.family} "
+                    f"{desc.cache_key()!r}: {e}")
+        counts[desc.family] = counts.get(desc.family, 0) + 1
+        with _plan_calls_lock:
+            _warmups[desc.family] = _warmups.get(desc.family, 0) + 1
+    return counts
 
 
 def resolve_fused(plan: Any) -> bool:
@@ -312,7 +399,7 @@ def stats() -> Dict[str, Dict[str, int]]:
     {family: {plan_hits, plan_misses, plan_evictions, planner_calls,
               plan_source_tuned_cache, plan_source_autotuned,
               plan_source_model, autotune_timings, launches,
-              comm_bytes, collective_launches,
+              comm_bytes, collective_launches, warmups,
               kernel_hits, kernel_misses, kernel_evictions}}
 
     Backward families (``<family>_bwd`` descriptors, DESIGN.md §11) fold
@@ -329,7 +416,7 @@ def stats() -> Dict[str, Dict[str, int]]:
                 "planner_calls",
                 *(f"plan_source_{s}" for s in PLAN_SOURCES),
                 "autotune_timings", "launches",
-                "comm_bytes", "collective_launches",
+                "comm_bytes", "collective_launches", "warmups",
                 "kernel_hits", "kernel_misses", "kernel_evictions")},
         })
 
@@ -365,6 +452,9 @@ def stats() -> Dict[str, Dict[str, int]]:
         for fam, n in _collective_launches.items():
             b, sfx = slot(fam)
             b["collective_launches" + sfx] = n
+        for fam, n in _warmups.items():
+            b, sfx = slot(fam)
+            b["warmups" + sfx] = n
     for fam, c in GLOBAL_KERNEL_CACHE.family_stats().items():
         b, sfx = slot(fam)
         b["kernel_hits" + sfx] = c["hits"]
@@ -387,6 +477,7 @@ def reset_stats(*, entries: bool = True):
         PLAN_CACHE.clear()
         GLOBAL_KERNEL_CACHE.clear()
         _autotune.reset_tuning_caches()
+        _seen_descs.clear()
     else:
         PLAN_CACHE.reset_stats()
         GLOBAL_KERNEL_CACHE.reset_stats()
@@ -397,3 +488,4 @@ def reset_stats(*, entries: bool = True):
         _launches.clear()
         _comm_bytes.clear()
         _collective_launches.clear()
+        _warmups.clear()

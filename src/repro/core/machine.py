@@ -23,6 +23,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
+import math
+import warnings
 from typing import Dict, Iterable, Mapping, Optional, Union
 
 import jax.numpy as jnp
@@ -39,6 +42,29 @@ DEFAULT_STEP_OVERHEAD_S = 2.0e-7
 # what the fused single-launch GEMM path (DESIGN.md §8) amortizes: a
 # multi-launch plan pays it once per region, the fused plan exactly once.
 DEFAULT_LAUNCH_OVERHEAD_S = 2.0e-6
+
+# Refittable lowering-cost coefficients (DESIGN.md §15).  The seed values
+# are the BENCH_gemm_fused.json calibration from ``repro.core.blocking``;
+# an offline ``tools/tune.py refit`` replaces them (and the two dispatch
+# overheads above) with a robust least-squares fit of the fleet's
+# accumulated TuningCache timings.
+DEFAULT_FUSED_TILE_DECODE_S = 6e-7  # per fused grid step: table decode
+DEFAULT_EXTRA_LAUNCH_FACTOR = 0.25  # cost of each launch beyond the first
+DEFAULT_STITCH_DISCOUNT = 0.25      # fraction of naive stitch bytes paid
+
+# Version of the refit-model JSON emitted by ``tools/tune.py refit`` and
+# consumed by :func:`load_refit_model`.
+REFIT_MODEL_VERSION = 1
+
+# Coefficients a refit model may carry.  :func:`load_refit_model` rejects
+# files mentioning anything else: an unknown key means the file was
+# written by a newer tool than this reader understands (the "stale
+# reader" degradation path — fall back to the probe-only base).
+REFIT_COEFFICIENTS = (
+    "step_overhead_s", "launch_overhead_s", "extra_launch_factor",
+    "fused_tile_decode_s", "stitch_discount",
+    "ici_bandwidth_gbps", "collective_launch_s", "collective_efficiency",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,12 +107,37 @@ class MachineModel:
     # per-collective bandwidth efficiency relative to the all_gather probe,
     # e.g. {"all_gather": 1.0, "all_to_all": 0.7, "psum": 0.5}
     collective_efficiency: Optional[Dict[str, float]] = None
+    # --- refittable lowering costs (DESIGN.md §15) -------------------------
+    # Per fused grid step: tile-table decode + predication — what the
+    # fused single-launch path pays instead of per-region dispatch.
+    fused_tile_decode_s: float = DEFAULT_FUSED_TILE_DECODE_S
+    # Cost of each kernel launch beyond the first, as a fraction of
+    # ``launch_overhead_s`` (later launches reuse warm dispatch state).
+    extra_launch_factor: float = DEFAULT_EXTRA_LAUNCH_FACTOR
+    # Fraction of the naive stitch-traffic bytes the multi-launch path
+    # really pays (operand slices + C assembly overlap with compute).
+    stitch_discount: float = DEFAULT_STITCH_DISCOUNT
+    # --- refit provenance (DESIGN.md §15) ----------------------------------
+    # ``None`` = probe-only / pinned coefficients.  Otherwise the
+    # fingerprint of the offline refit model (``tools/tune.py refit``)
+    # that replaced them: ``fingerprint`` / ``tuning_key`` then grow a
+    # ``+refit`` suffix so tuned-cache records never mix fitted and
+    # probe-only machines — the same isolation rule as PR 9's ``+net``.
+    refit_fingerprint: Optional[str] = None
 
     # ---------------------------------------------------------------------
     @property
     def network_calibrated(self) -> bool:
         """True when the interconnect probes parameterized this model."""
         return self.ici_bandwidth_gbps is not None
+
+    @property
+    def _provenance(self) -> str:
+        """Provenance suffix shared by ``fingerprint`` and ``tuning_key``:
+        ``+net`` for network-calibrated models, ``+refit`` for offline-
+        refitted coefficients — composable (``+net+refit``)."""
+        return (("+net" if self.network_calibrated else "")
+                + ("+refit" if self.refit_fingerprint else ""))
 
     @property
     def fingerprint(self) -> str:
@@ -96,22 +147,24 @@ class MachineModel:
         two calibrations of the same host share a name but can carry
         different measured constants, and analytical plans derived from
         one must not be served for the other.  Network-calibrated models
-        carry a ``+net`` provenance suffix so the digest alone makes the
-        calibration state legible in cache records and logs.
+        carry a ``+net`` provenance suffix and offline-refitted models a
+        ``+refit`` suffix so the digest alone makes the calibration state
+        legible in cache records and logs.
         """
         blob = repr(dataclasses.astuple(self)).encode()
         digest = hashlib.md5(blob).hexdigest()[:8]
-        return digest + ("+net" if self.network_calibrated else "")
+        return digest + self._provenance
 
     @property
     def tuning_key(self) -> str:
         """Name used to key :class:`~repro.core.autotune.TuningCache`
         records.  Uncalibrated machines keep their plain ``name`` (existing
         on-disk records stay valid); network-calibrated machines get a
-        ``+net`` suffix so their records never mix with uncalibrated ones
-        — the two cost models rank mesh candidates differently.
+        ``+net`` suffix and offline-refitted machines a ``+refit`` suffix
+        so their records never mix with probe-only ones — the cost models
+        rank candidates differently (DESIGN.md §14/§15).
         """
-        return self.name + ("+net" if self.network_calibrated else "")
+        return self.name + self._provenance
 
     def peak(self, dtype) -> float:
         return self.peak_flops[canonical_dtype(dtype)]
@@ -309,3 +362,65 @@ DEFAULT_MACHINE = TPU_V5E
 def get_machine(name: str = "tpu_v5e") -> MachineModel:
     """Look up a built-in machine model by name."""
     return {"tpu_v5e": TPU_V5E, "cpu_host": CPU_HOST}[name]
+
+
+def _validate_refit(data, base: MachineModel) -> Optional[str]:
+    """The reason a refit-model payload cannot be applied, or None."""
+    if not isinstance(data, dict):
+        return "not a JSON object"
+    if data.get("kind") != "machine-refit":
+        return f"kind={data.get('kind')!r}, expected 'machine-refit'"
+    if data.get("version") != REFIT_MODEL_VERSION:
+        return (f"version={data.get('version')!r}, expected "
+                f"{REFIT_MODEL_VERSION} (stale model or stale reader)")
+    fp = data.get("fingerprint")
+    if not isinstance(fp, str) or not fp:
+        return "missing provenance fingerprint"
+    if data.get("base") not in (None, base.name):
+        return (f"fitted against base {data.get('base')!r}, "
+                f"refusing to overlay onto {base.name!r}")
+    coeffs = data.get("coefficients")
+    if not isinstance(coeffs, dict) or not coeffs:
+        return "missing coefficients"
+    for key, value in coeffs.items():
+        if key not in REFIT_COEFFICIENTS:
+            return f"unknown coefficient {key!r} (stale reader?)"
+        if key == "collective_efficiency":
+            if not isinstance(value, dict) or not all(
+                    isinstance(k, str) and isinstance(v, (int, float))
+                    and math.isfinite(v) and v > 0
+                    for k, v in value.items()):
+                return "collective_efficiency must map names to ratios > 0"
+        elif (not isinstance(value, (int, float)) or isinstance(value, bool)
+              or not math.isfinite(value) or value < 0):
+            return f"coefficient {key}={value!r} is not a finite number >= 0"
+    return None
+
+
+def load_refit_model(path: str,
+                     base: Optional[MachineModel] = None) -> MachineModel:
+    """Overlay an offline-refit coefficient model onto ``base``.
+
+    Reads the versioned JSON that ``tools/tune.py refit`` emits and
+    returns ``base`` with the fitted cost coefficients applied and
+    ``refit_fingerprint`` set — so ``fingerprint`` / ``tuning_key`` grow
+    the ``+refit`` provenance suffix (DESIGN.md §15).
+
+    Degradation mirrors the tuning cache's: a missing, corrupt, stale
+    (wrong version/kind), wrong-base or out-of-range file warns once and
+    returns ``base`` unchanged — a bad refit artifact must never take
+    down serving, it just keeps the probe-only model.
+    """
+    base = base if base is not None else DEFAULT_MACHINE
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        warnings.warn(f"ignoring refit model {path}: {e}")
+        return base
+    reason = _validate_refit(data, base)
+    if reason is not None:
+        warnings.warn(f"ignoring refit model {path}: {reason}")
+        return base
+    return dataclasses.replace(base, **data["coefficients"],
+                               refit_fingerprint=data["fingerprint"])

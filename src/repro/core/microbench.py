@@ -220,17 +220,28 @@ def characterize(machine: MachineModel = TPU_V5E, *,
 
 
 def calibrate(base: Optional[MachineModel] = None, *, size: int = 512,
-              mbytes: int = 64, name: str = "calibrated_host") -> MachineModel:
+              mbytes: int = 64, name: str = "calibrated_host",
+              refit: Optional[str] = None) -> MachineModel:
     """Probe the host and return the calibrated machine model.
 
     The measure→generate loop in one call: §III probes in,
     planner-parameterizing model out.  ``size``/``mbytes`` shrink the
     probe problem for fast smoke runs; ``base`` supplies the constants
     the probes don't measure (memory capacities, tile geometry).
+
+    ``refit`` optionally overlays a fleet-fitted refit-model JSON
+    (``tools/tune.py refit``, DESIGN.md §15) on the probed model: the
+    probes measure this host's rooflines, the refit supplies dispatch
+    coefficients regressed from real kernel timings.  A bad refit file
+    warns and leaves the probed model unchanged.
     """
     probes = characterize(base if base is not None else CPU_HOST,
                           size=size, mbytes=mbytes)
-    return MachineModel.from_probes(probes, base=base, name=name)
+    model = MachineModel.from_probes(probes, base=base, name=name)
+    if refit:
+        from .machine import load_refit_model
+        model = load_refit_model(refit, base=model)
+    return model
 
 
 if __name__ == "__main__":

@@ -1,0 +1,220 @@
+"""AOT warm-start support: descriptor manifests + operand synthesis.
+
+A serving process pays its kernel builds and plan resolutions at the
+first request — the cold stall the paper's dispatch-cache architecture
+exists to avoid.  ``engine.warmup`` (DESIGN.md §15) eliminates it by
+replaying a *descriptor population* before traffic arrives: resolve each
+plan through the tuned tier and execute the family once on synthesized
+zero operands so the kernel cache is hot.
+
+This module owns the two supporting pieces:
+
+  * the **manifest** — a versioned JSON recording of descriptor cache
+    keys (``engine.seen_descriptors()`` captures what a process actually
+    dispatched; ``save_manifest`` / ``load_manifest`` round-trip it via
+    :func:`repro.core.descriptor.descriptor_from_cache_key`), and
+  * **operand synthesis** — ``synth_operands`` builds the smallest legal
+    zero-filled operand set for any descriptor, enough to drive one real
+    ``execute()`` through kernel build + caching.
+
+Degradation mirrors the tuning cache: a corrupt or stale manifest warns
+and yields an empty population (cold start, never a crash).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import tempfile
+import warnings
+from typing import Iterable, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .descriptor import (BIAS_EPILOGUES, FlashBwdDescriptor,
+                         FlashDecodeDescriptor, FlashDescriptor,
+                         GemmDescriptor, GroupedGemmBwdDescriptor,
+                         GroupedGemmDescriptor, KernelDescriptor,
+                         SsdChunkBwdDescriptor, SsdChunkDescriptor,
+                         TransposeDescriptor, descriptor_from_cache_key)
+from .machine import FP8_DTYPE
+
+MANIFEST_VERSION = 1
+
+# Wire dtypes of the quantized formats (DESIGN.md §13).
+_WIRE_DTYPES = {"int8": jnp.int8, "float8_e4m3": FP8_DTYPE}
+
+
+def _dt(name):
+    """jnp dtype for a canonical descriptor dtype name (fp8-aware)."""
+    if name == "float8_e4m3":
+        return FP8_DTYPE
+    return jnp.dtype(name)
+
+
+def save_manifest(path: str,
+                  descriptors: Iterable[KernelDescriptor]) -> int:
+    """Write a descriptor manifest (atomic); returns the entry count.
+
+    Entries are the ``repr`` of each descriptor's ``cache_key()`` — the
+    same invertible encoding the tuning cache uses, so a manifest is
+    human-greppable and stable across processes.
+    """
+    keys = sorted({repr(d.cache_key()) for d in descriptors})
+    payload = {"version": MANIFEST_VERSION, "descriptors": keys}
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".manifest.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return len(keys)
+
+
+def load_manifest(path: str) -> List[KernelDescriptor]:
+    """Descriptors recorded in a manifest file.
+
+    Missing / corrupt / stale-version files warn and return ``[]`` (a
+    cold start, never a crash); individually unparsable entries are
+    skipped with a warning so one bad line cannot void the manifest.
+    """
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if (not isinstance(data, dict)
+                or data.get("version") != MANIFEST_VERSION
+                or not isinstance(data.get("descriptors"), list)):
+            raise ValueError("not a descriptor manifest (or stale version)")
+    except (OSError, json.JSONDecodeError, ValueError) as e:
+        warnings.warn(f"ignoring warm-start manifest {path}: {e}")
+        return []
+    out: List[KernelDescriptor] = []
+    for entry in data["descriptors"]:
+        try:
+            out.append(descriptor_from_cache_key(ast.literal_eval(entry)))
+        except (ValueError, SyntaxError, TypeError) as e:
+            warnings.warn(f"skipping manifest entry {entry!r}: {e}")
+    return out
+
+
+def _zeros(shape, dtype):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def _gemm_operands(desc: GemmDescriptor) -> Tuple[tuple, dict]:
+    a_dtype = _dt(desc.in_dtype)
+    b_dtype = _dt(desc.in_dtype)
+    kw = {}
+    if desc.quant is not None:
+        wire = _WIRE_DTYPES[desc.quant.dtype]
+        b_dtype = wire
+        kw["sb"] = jnp.ones((desc.n,), jnp.float32)
+        if not desc.quant.weight_only:
+            a_dtype = wire
+            kw["sa"] = jnp.ones((desc.m,), jnp.float32)
+    if desc.epilogue in BIAS_EPILOGUES:
+        kw["bias"] = _zeros((desc.n,), jnp.float32)
+    if desc.accumulate:
+        kw["c"] = _zeros(desc.c_shape(), _dt(desc.out_dtype))
+    return (_zeros(desc.a_shape(), a_dtype),
+            _zeros(desc.b_shape(), b_dtype)), kw
+
+
+def _flash_operands(desc: FlashDescriptor) -> Tuple[tuple, dict]:
+    dt = _dt(desc.dtype)
+    q = _zeros((desc.batch_heads, desc.sq, desc.d), dt)
+    k = _zeros((desc.batch_heads, desc.sk, desc.d), dt)
+    v = _zeros((desc.batch_heads, desc.sk, desc.d), dt)
+    if isinstance(desc, FlashBwdDescriptor):
+        o = _zeros((desc.batch_heads, desc.sq, desc.d), dt)
+        lse = _zeros((desc.batch_heads, desc.sq), jnp.float32)
+        return (q, k, v, o, o, lse), {}
+    return (q, k, v), {}
+
+
+def _decode_operands(desc: FlashDecodeDescriptor) -> Tuple[tuple, dict]:
+    dt = _dt(desc.dtype)
+    q = _zeros((desc.num_seqs, desc.num_heads, desc.head_dim), dt)
+    pool = _zeros((desc.pages, desc.page_size, desc.num_kv_heads,
+                   desc.head_dim), dt)
+    tables = _zeros((desc.num_seqs, desc.max_blocks), jnp.int32)
+    lengths = _zeros((desc.num_seqs,), jnp.int32)
+    return (q, pool, pool, tables, lengths), {}
+
+
+def _grouped_operands(desc: GroupedGemmDescriptor) -> Tuple[tuple, dict]:
+    dt = _dt(desc.dtype)
+    x_dtype = w_dtype = dt
+    kw = {}
+    quant = getattr(desc, "quant", None)
+    if quant is not None:
+        wire = _WIRE_DTYPES[quant.dtype]
+        w_dtype = wire
+        kw["sw"] = jnp.ones((desc.num_experts, desc.n), jnp.float32)
+        if not quant.weight_only:
+            x_dtype = wire
+            kw["sx"] = jnp.ones((desc.t,), jnp.float32)
+    if desc.epilogue in BIAS_EPILOGUES:
+        kw["bias"] = _zeros((desc.num_experts, desc.n), jnp.float32)
+    x = _zeros((desc.t, desc.k), x_dtype)
+    w = _zeros((desc.num_experts, desc.k, desc.n), w_dtype)
+    sizes = [desc.t // desc.num_experts] * desc.num_experts
+    sizes[0] += desc.t - sum(sizes)
+    group_sizes = jnp.asarray(sizes, jnp.int32)
+    if isinstance(desc, GroupedGemmBwdDescriptor):
+        dy = _zeros((desc.t, desc.n), dt)
+        return (x, dy, w, group_sizes), {}
+    return (x, w, group_sizes), kw
+
+
+def _ssd_operands(desc: SsdChunkDescriptor) -> Tuple[tuple, dict]:
+    dt = _dt(desc.dtype)
+    g, q, n, p = desc.groups, desc.q, desc.n, desc.p
+    if not desc.chunks:
+        return (_zeros((g, q, n), dt), _zeros((g, q, n), dt),
+                _zeros((g, q, q), dt), _zeros((g, q, p), dt)), {}
+    nc = desc.chunks
+    c = _zeros((g, nc, q, n), dt)
+    l = _zeros((g, nc, q, q), dt)
+    xdt = _zeros((g, nc, q, p), dt)
+    decay = _zeros((g, nc, q), jnp.float32)
+    s0 = _zeros((g, p, n), jnp.float32)
+    if isinstance(desc, SsdChunkBwdDescriptor):
+        states = _zeros((g, nc, p, n), jnp.float32)
+        dy = _zeros((g, nc, q, p), jnp.float32)
+        dsf = _zeros((g, p, n), jnp.float32)
+        return (c, c, l, xdt, decay, decay, states, dy, dsf), {}
+    return (c, c, l, xdt, decay, decay, s0), {}
+
+
+def synth_operands(
+        desc: KernelDescriptor) -> Optional[Tuple[tuple, dict]]:
+    """Zero-filled operands + keywords driving one ``execute()``.
+
+    Returns ``None`` for descriptors warmup cannot synthesize operands
+    for (mesh descriptors need the shard_map capacity-slot layout and a
+    live device mesh) — the caller then warms the plan tier only.
+    """
+    if getattr(desc, "mesh", None) is not None:
+        return None
+    if isinstance(desc, GemmDescriptor):
+        return _gemm_operands(desc)
+    if isinstance(desc, FlashDescriptor):
+        return _flash_operands(desc)
+    if isinstance(desc, FlashDecodeDescriptor):
+        return _decode_operands(desc)
+    if isinstance(desc, GroupedGemmDescriptor):
+        return _grouped_operands(desc)
+    if isinstance(desc, SsdChunkDescriptor):
+        return _ssd_operands(desc)
+    if isinstance(desc, TransposeDescriptor):
+        shape = ((desc.batch, desc.rows, desc.cols) if desc.batch
+                 else (desc.rows, desc.cols))
+        return (_zeros(shape, _dt(desc.dtype)),), {}
+    return None

@@ -11,6 +11,13 @@ Two modes (DESIGN.md §12):
     launch counts stay flat in ``engine.stats()`` while the batch
     churns, and greedy outputs are checked token-identical against the
     static path.
+
+Zero-stall startup (DESIGN.md §15): ``--warm-start manifest.json``
+records the dispatched descriptor population on a cold run and replays
+it through ``ContinuousBatchingEngine.warmup`` on the next — combined
+with ``--tuning-cache-preload`` (fleet cache) and ``--refit-model``
+(fleet-fitted cost coefficients), serving then starts with every plan
+resolved and every kernel built before the first request arrives.
 """
 from __future__ import annotations
 
@@ -65,10 +72,20 @@ def generate(cfg, params, prompts, gen_steps: int, *, capacity=None):
 
 def run_continuous(cfg, params, *, num_slots=4, num_pages=64, page_size=16,
                    max_blocks=8, num_requests=6, rate=0.5, prompt_len=12,
-                   max_new=8, seed=0):
+                   max_new=8, seed=0, warm_start=None):
     """Drive the continuous-batching runtime on a Poisson trace and check
     it against the static-batch path.  Returns the engine's run result
-    with a ``token_identical`` flag added."""
+    with a ``token_identical`` flag added.
+
+    ``warm_start`` names a descriptor manifest (DESIGN.md §15): when the
+    file exists, every kernel is plan-resolved and built — and the
+    prefill/decode steps traced — *before* the first request, and the
+    result gains a ``warmup`` summary proving the serving phase ran with
+    zero autotune timings and zero plan-cache misses.  When it does not
+    exist yet, the run records one (``engine.save_manifest``) so the
+    next start is warm."""
+    import os
+
     from repro.models.attention import PageSpec
     from repro.runtime.batching import (ContinuousBatchingEngine,
                                         poisson_trace)
@@ -79,7 +96,29 @@ def run_continuous(cfg, params, *, num_slots=4, num_pages=64, page_size=16,
                          vocab_size=cfg.vocab_size, seed=seed)
     serving = ContinuousBatchingEngine(cfg, params, num_slots=num_slots,
                                        spec=spec)
+    warmup = None
+    if warm_start and os.path.exists(warm_start):
+        # Prompt lengths the scheduler will prefill: fresh admissions use
+        # the full prompt; re-admissions replay context-minus-one, which
+        # traces lazily (rare, eviction-dependent).
+        warmup = serving.warmup(
+            prompt_lens={len(r.prompt) for r in reqs},
+            manifest=warm_start)
+        # Counters reset so the serving phase's stats stand alone; plan /
+        # kernel / trace caches all stay hot.
+        engine.reset_stats(entries=False)
     result = serving.run(reqs)
+    if warmup is not None:
+        stats = result["engine_stats"]
+        warmup["post_autotune_timings"] = sum(
+            v for b in stats.values() for k, v in b.items()
+            if k.startswith("autotune_timings"))
+        warmup["post_plan_misses"] = sum(
+            v for b in stats.values() for k, v in b.items()
+            if k.startswith("plan_misses"))
+        result["warmup"] = warmup
+    elif warm_start:
+        engine.save_manifest(warm_start)
 
     # Oracle: each request decoded alone on the static path must emit the
     # same greedy tokens the churning batch produced.
@@ -104,19 +143,41 @@ def main():
                     help="continuous-batching mode over a Poisson trace")
     ap.add_argument("--backend", choices=["xla", "pallas"], default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tuning-cache", default=None,
+                    help="read/write autotune timing cache (JSON path)")
+    ap.add_argument("--tuning-cache-preload", default=None,
+                    help="read-only fleet-merged cache (tools/tune.py)")
+    ap.add_argument("--refit-model", default=None,
+                    help="refit-model JSON overlaying fleet-fitted cost "
+                         "coefficients (tools/tune.py refit)")
+    ap.add_argument("--warm-start", default=None,
+                    help="descriptor manifest for AOT warm-start; created "
+                         "on first (cold) run, consumed on the next")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
     model = model_for(cfg)
     params = model.init(jax.random.PRNGKey(0), cfg)
+    engine_kw = {}
     if args.backend:
+        engine_kw["backend"] = args.backend
+    if args.tuning_cache is not None:
+        engine_kw["tuning_cache"] = args.tuning_cache
+    if args.tuning_cache_preload is not None:
+        engine_kw["tuning_cache_preload"] = args.tuning_cache_preload
+    if args.refit_model:
+        from repro.core.config import get_config as get_engine_config
+        from repro.core.machine import load_refit_model
+        engine_kw["machine"] = load_refit_model(
+            args.refit_model, base=get_engine_config().machine)
+    if engine_kw:
         from repro.core import configure
-        configure(backend=args.backend)
+        configure(**engine_kw)
 
     if args.continuous:
         res = run_continuous(cfg, params, prompt_len=args.prompt_len // 4
                              or 8, max_new=args.gen // 4 or 4,
-                             seed=args.seed)
+                             seed=args.seed, warm_start=args.warm_start)
         m = res["metrics"]
         print(f"arch={cfg.name} continuous: requests={m['requests']} "
               f"tokens={m['total_tokens']} decode_steps={m['decode_steps']} "
@@ -131,6 +192,20 @@ def main():
             print(f"engine[flash_decode]: launches={fam['launches']} "
                   f"({per_step:.2f}/decode step — flat while the batch "
                   f"churned)")
+        ph = m.get("phase_seconds", {})
+        if ph:
+            print("phases: " + " ".join(
+                f"{k}={ph[k]*1e3:.1f}ms" for k in sorted(ph)))
+        w = res.get("warmup")
+        if w is not None:
+            print(f"warm-start: warmed {sum(w['kernels'].values())} "
+                  f"kernels + {len(w['prefill_lengths'])} prefill traces "
+                  f"in {w['seconds']:.2f}s; serving phase: "
+                  f"autotune_timings={w['post_autotune_timings']} "
+                  f"plan_misses={w['post_plan_misses']}")
+        elif args.warm_start:
+            print(f"warm-start: recorded manifest -> {args.warm_start} "
+                  f"(next start is warm)")
         return
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),

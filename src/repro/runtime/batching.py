@@ -103,6 +103,50 @@ class ContinuousBatchingEngine:
         self.finished: Dict[int, _Seq] = {}
         self.token_latencies: List[float] = []
         self._tables_dirty = True
+        # Wall-clock per scheduler phase (DESIGN.md §15) — "prefill" is
+        # deducted from the admission block so the four never overlap.
+        self.phase_seconds: Dict[str, float] = {
+            "admission": 0.0, "prefill": 0.0, "decode": 0.0,
+            "eviction": 0.0}
+
+    # -- warm-start ---------------------------------------------------------
+
+    def warmup(self, prompt_lens=(), *, manifest: Optional[str] = None
+               ) -> Dict:
+        """Trace/build everything a serving loop will touch, pre-traffic.
+
+        Three layers, outermost first (DESIGN.md §15):
+
+          * kernel families — ``engine.warmup`` over a descriptor
+            manifest (or ``configure(warm_start=...)``), resolving plans
+            through the tuned tier and building each kernel once;
+          * prefill traces — one jit trace per distinct prompt length in
+            ``prompt_lens`` (the per-length ``_prefill_fn`` cache);
+          * the decode step — traced once on an all-inactive batch (no
+            active slot, so nothing scatters into the paged cache; the
+            donated cache buffer is reassigned like a real step).
+
+        After this returns, a serving run with the same shapes performs
+        zero kernel builds, zero plan-cache misses and zero new traces —
+        provable via ``engine.stats()``.  Returns a summary dict.
+        """
+        from repro.core.config import get_config
+        t0 = time.time()
+        kernels: Dict[str, int] = {}
+        if manifest is not None or get_config().warm_start:
+            kernels = engine.warmup(manifest=manifest)
+        lengths = sorted({int(L) for L in prompt_lens})
+        for L in lengths:
+            jax.block_until_ready(self._prefill_fn(L)(
+                self.params, {"tokens": jnp.zeros((1, L), jnp.int32)}))
+        toks, self.cache, _ = self._step(
+            self.params, self.cache,
+            jnp.zeros((self.num_slots, 1), jnp.int32),
+            jnp.zeros((self.num_slots,), jnp.int32),
+            jnp.zeros((self.num_slots,), bool))
+        jax.block_until_ready(toks)
+        return {"seconds": time.time() - t0, "kernels": kernels,
+                "prefill_lengths": lengths}
 
     # -- submission ---------------------------------------------------------
 
@@ -138,11 +182,13 @@ class ContinuousBatchingEngine:
         L = len(ctx)
         page_ids = self.pool.owned_pages(slot)
         page_ids += self.pool.grow(slot, L)
+        t0 = time.time()
         logits, dense = self._prefill_fn(L)(
             self.params, {"tokens": jnp.asarray(ctx)[None, :]})
         self.cache = write_prefill(self.cache, dense, slot=slot, length=L,
                                    page_ids=page_ids,
                                    page_size=self.spec.page_size)
+        self.phase_seconds["prefill"] += time.time() - t0
         if readmit:
             tok = seq.generated[-1]
         else:
@@ -175,12 +221,14 @@ class ContinuousBatchingEngine:
                 f"be evicted — pool too small for one sequence")
         # LIFO victim choice: the most recently admitted sequence has the
         # least decode investment to replay on re-admission.
+        t0 = time.time()
         victim = max(victims, key=lambda i: self.slots[i].admit_order)
         seq = self.slots[victim]
         seq.evictions += 1
         self.evictions += 1
         self._release(victim)
         self.queue.appendleft(seq)
+        self.phase_seconds["eviction"] += time.time() - t0
 
     def _try_admissions(self) -> None:
         while self.queue:
@@ -217,6 +265,8 @@ class ContinuousBatchingEngine:
         """Retire finished sequences, admit what fits, grow, run ONE
         decode launch over the live batch.  Returns the number of live
         slots this step decoded (0 = idle tick)."""
+        t_admit = time.time()
+        pf0 = self.phase_seconds["prefill"]
         for slot, seq in enumerate(self.slots):
             if seq is not None and seq.done:
                 self.finished[seq.req.rid] = seq
@@ -228,6 +278,8 @@ class ContinuousBatchingEngine:
             if seq is not None and seq.done:
                 self.finished[seq.req.rid] = seq
                 self._release(slot)
+        self.phase_seconds["admission"] += (
+            time.time() - t_admit - (self.phase_seconds["prefill"] - pf0))
         self.tick += 1
         if not any(s is not None for s in self.slots):
             return 0
@@ -243,6 +295,7 @@ class ContinuousBatchingEngine:
             self.cache = refresh_tables(self.cache,
                                         self.pool.device_tables())
             self._tables_dirty = False
+        t_dec = time.time()
         toks, self.cache, _ = self._step(
             self.params, self.cache,
             jnp.asarray(self.next_token)[:, None],
@@ -255,6 +308,7 @@ class ContinuousBatchingEngine:
             self._emit(seq, int(toks[slot]))
             self.lengths[slot] += 1
             self.next_token[slot] = int(toks[slot])
+        self.phase_seconds["decode"] += time.time() - t_dec
         return n_active
 
     # -- driver -------------------------------------------------------------
@@ -305,6 +359,7 @@ class ContinuousBatchingEngine:
                 if lat.size else 0.0,
                 "evictions": self.evictions,
                 "flash_decode_launches": int(launches),
+                "phase_seconds": dict(self.phase_seconds),
             },
             "engine_stats": stats1,
         }

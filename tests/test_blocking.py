@@ -187,3 +187,22 @@ else:
     @pytest.mark.parametrize("m,n", [(mm, nn) for mm, nn, _ in _FALLBACK_MNK])
     def test_heterogeneous_never_worse_predicted(m, n):
         _check_heterogeneous_never_worse(m, n)
+
+
+def test_hetero_640_multi_region_prefers_multi_launch():
+    """Guard for the fig89 ``hetero_640`` benchmark point (DESIGN.md §15):
+    the forced 256x256 blocking of a 640x640x512 GEMM must stay genuinely
+    multi-region, and on the default v5e model the planner must keep
+    choosing the multi-launch lowering for it — the fused variant pays
+    per-tile decode over 4 regions that the model prices above the extra
+    launches.  If a machine-model change flips this ranking, the
+    benchmark's misrank baseline moves and this fails loudly."""
+    import dataclasses
+
+    plan = plan_gemm(GemmDescriptor(m=640, n=640, k=512),
+                     force_block=(256, 256))
+    assert len(plan.regions) > 1
+    assert plan.fused is False
+    fused_s = dataclasses.replace(plan, fused=True).predicted_seconds()
+    multi_s = dataclasses.replace(plan, fused=False).predicted_seconds()
+    assert fused_s > multi_s

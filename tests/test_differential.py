@@ -1,0 +1,385 @@
+"""Engine-wide differential conformance suite (DESIGN.md §15).
+
+One fuzzer shape per kernel family: random-but-seeded operands run
+through the engine's *pairs of lowerings* (fused single-launch vs
+multi-launch / XLA fallback) and are checked against the family's pure
+``ref.py`` oracle.  The axes the engine can get wrong are the axes the
+fuzz draws from: fused × unfused, epilogues, quantization specs, dtype
+tails (bf16, odd non-tile-aligned sizes), zero-length groups/slots.
+
+Every assertion carries a **minimal repro snippet** — the exact seeded
+operand construction + call — so a failure pasted into an issue is
+runnable as-is.
+
+Property-based when ``hypothesis`` is installed (same convention as
+tests/test_schedule.py); the deterministic seeded cases below always
+run, so CI coverage does not depend on an optional package.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+import jax.numpy as jnp
+
+from repro.core import engine, use
+from repro.core.machine import HAS_FP8
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import paged_decode_attention
+from repro.kernels.flash_attention.ref import (ref_attention,
+                                               ref_paged_decode_attention)
+from repro.kernels.gemm import gemm
+from repro.kernels.gemm.ref import ref_gemm
+from repro.kernels.grouped_gemm import grouped_gemm
+from repro.kernels.grouped_gemm.ref import ref_grouped_gemm
+from repro.kernels.ssd_chunk import ssd_chunk_diag, ssd_chunk_scan
+from repro.kernels.ssd_chunk.ref import (ref_ssd_chunk_diag,
+                                         ref_ssd_chunk_scan)
+from repro.kernels.transpose import transpose
+from repro.kernels.transpose.ref import ref_transpose
+
+
+@pytest.fixture(autouse=True)
+def fresh_engine():
+    engine.reset_stats()
+    yield
+    engine.reset_stats()
+
+
+def _tol(dtype):
+    return 2e-2 if jnp.dtype(dtype) == jnp.bfloat16 else 1e-4
+
+
+def _close(got, want, tol, repro):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    err = float(np.max(np.abs(got - want))) if got.size else 0.0
+    np.testing.assert_allclose(
+        got, want, rtol=tol, atol=tol,
+        err_msg=(f"\ndifferential mismatch, max|delta|={err:.3e}\n"
+                 f"minimal repro (PYTHONPATH=src python - <<'EOF' ... EOF):\n"
+                 f"{repro}"))
+
+
+# ---------------------------------------------------------------------------
+# GEMM: fused + multi-launch vs the jnp oracle, across epilogues/dtypes
+# ---------------------------------------------------------------------------
+
+def _check_gemm(seed, m, n, k, layout, epilogue, dtype):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    bshape = (k, n) if layout == "nn" else (n, k)
+    b = jnp.asarray(rng.standard_normal(bshape), dtype)
+    bias = (jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+            if epilogue and epilogue.startswith("bias") else None)
+    repro = (
+        f"import numpy as np, jax.numpy as jnp\n"
+        f"from repro.core import use\n"
+        f"from repro.kernels.gemm import gemm\n"
+        f"from repro.kernels.gemm.ref import ref_gemm\n"
+        f"rng = np.random.default_rng({seed})\n"
+        f"a = jnp.asarray(rng.standard_normal(({m}, {k})), '{dtype}')\n"
+        f"b = jnp.asarray(rng.standard_normal({bshape}), '{dtype}')\n"
+        f"bias = "
+        + (f"jnp.asarray(rng.standard_normal(({n},)), jnp.float32)\n"
+           if bias is not None else "None\n")
+        + f"with use(backend='pallas'):\n"
+        f"    out = gemm(a, b, layout={layout!r}, epilogue={epilogue!r},"
+        f" bias=bias, fused=<FUSED>)\n"
+        f"print(abs(out - ref_gemm(a, b, layout={layout!r},"
+        f" epilogue={epilogue!r}, bias=bias)).max())")
+    want = ref_gemm(a, b, layout=layout, epilogue=epilogue, bias=bias)
+    with use(backend="pallas"):
+        for fused in (True, False):
+            got = gemm(a, b, layout=layout, epilogue=epilogue, bias=bias,
+                       fused=fused)
+            _close(got, want, _tol(dtype),
+                   repro.replace("<FUSED>", str(fused)))
+
+
+GEMM_CASES = [
+    # seed, m, n, k, layout, epilogue, dtype — odd tails on purpose
+    (0, 33, 129, 65, "nn", None, jnp.float32),
+    (1, 128, 128, 128, "nt", None, jnp.float32),
+    (2, 7, 250, 512, "nn", "gelu", jnp.float32),
+    (3, 80, 80, 64, "nt", "bias", jnp.float32),
+    (4, 65, 33, 100, "nn", "bias_silu", jnp.float32),
+    (5, 1, 513, 129, "nn", "relu", jnp.float32),
+    (6, 48, 96, 72, "nn", None, jnp.bfloat16),
+    (7, 31, 17, 127, "nt", "silu", jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("seed,m,n,k,layout,epilogue,dtype", GEMM_CASES)
+def test_gemm_differential(seed, m, n, k, layout, epilogue, dtype):
+    _check_gemm(seed, m, n, k, layout, epilogue, dtype)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           m=st.integers(1, 160), n=st.integers(1, 160),
+           k=st.integers(1, 256),
+           layout=st.sampled_from(["nn", "nt"]),
+           epilogue=st.sampled_from([None, "relu", "gelu", "silu",
+                                     "bias", "bias_gelu", "bias_silu"]))
+    def test_gemm_differential_fuzz(seed, m, n, k, layout, epilogue):
+        _check_gemm(seed, m, n, k, layout, epilogue, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantized GEMM: fused in-kernel dequant vs the XLA dequant formulation
+# ---------------------------------------------------------------------------
+
+QUANT_SPECS = ["int8", "w8a16"] + (["fp8"] if HAS_FP8 else [])
+
+
+def _check_gemm_quant(seed, m, n, k, spec):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    repro = (
+        f"import numpy as np, jax.numpy as jnp\n"
+        f"from repro.core import use\n"
+        f"from repro.kernels.gemm import gemm\n"
+        f"rng = np.random.default_rng({seed})\n"
+        f"a = jnp.asarray(rng.standard_normal(({m}, {k})), jnp.float32)\n"
+        f"b = jnp.asarray(rng.standard_normal(({k}, {n})), jnp.float32)\n"
+        f"with use(backend='pallas'):\n"
+        f"    f = gemm(a, b, quant={spec!r}, fused=True)\n"
+        f"    x = gemm(a, b, quant={spec!r}, fused=False)\n"
+        f"print(abs(f - x).max())")
+    with use(backend="pallas"):
+        # Both paths quantize the identical wide operands at dispatch, so
+        # they compute on identical wire values: the comparison isolates
+        # the kernel's dequant-epilogue algebra, not quantization error.
+        got_f = gemm(a, b, quant=spec, fused=True)
+        got_x = gemm(a, b, quant=spec, fused=False)
+    _close(got_f, got_x, 1e-3, repro)
+    # and both must still approximate the wide oracle within quant error
+    want = ref_gemm(a, b)
+    err = float(np.max(np.abs(np.asarray(got_f) - np.asarray(want))))
+    scale = float(np.max(np.abs(np.asarray(want)))) + 1e-9
+    assert err / scale < 0.1, \
+        f"quantized GEMM drifted {err / scale:.3f} from the wide oracle"
+
+
+@pytest.mark.parametrize("spec", QUANT_SPECS)
+@pytest.mark.parametrize("seed,m,n,k", [(10, 32, 64, 48), (11, 33, 96, 80)])
+def test_gemm_quant_differential(seed, m, n, k, spec):
+    _check_gemm_quant(seed, m, n, k, spec)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: both lowerings vs plain softmax, causal x non-causal
+# ---------------------------------------------------------------------------
+
+def _check_flash(seed, s_q, s_k, causal, dtype):
+    rng = np.random.default_rng(seed)
+    b, h, d = 1, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s_q, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s_k, h, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s_k, h, d)), dtype)
+    repro = (
+        f"import numpy as np, jax.numpy as jnp\n"
+        f"from repro.core import use\n"
+        f"from repro.kernels.flash_attention import flash_attention\n"
+        f"from repro.kernels.flash_attention.ref import ref_attention\n"
+        f"rng = np.random.default_rng({seed})\n"
+        f"q = jnp.asarray(rng.standard_normal((1, {s_q}, 2, 16)), "
+        f"'{dtype}')\n"
+        f"k = jnp.asarray(rng.standard_normal((1, {s_k}, 2, 16)), "
+        f"'{dtype}')\n"
+        f"v = jnp.asarray(rng.standard_normal((1, {s_k}, 2, 16)), "
+        f"'{dtype}')\n"
+        f"with use(backend='pallas'):\n"
+        f"    out = flash_attention(q, k, v, causal={causal},"
+        f" fused=<FUSED>)\n"
+        f"print(abs(out - ref_attention(q, k, v, causal={causal}))"
+        f".max())")
+    want = ref_attention(q, k, v, causal=causal)
+    with use(backend="pallas"):
+        for fused in (True, False):
+            got = flash_attention(q, k, v, causal=causal, fused=fused)
+            _close(got, want, _tol(dtype),
+                   repro.replace("<FUSED>", str(fused)))
+
+
+@pytest.mark.parametrize("seed,s_q,s_k,causal,dtype", [
+    (20, 5, 5, True, jnp.float32),
+    (21, 17, 17, True, jnp.float32),
+    (22, 64, 64, False, jnp.float32),
+    (23, 33, 64, False, jnp.float32),   # cross-attention tail
+    (24, 16, 16, True, jnp.bfloat16),
+])
+def test_flash_differential(seed, s_q, s_k, causal, dtype):
+    _check_flash(seed, s_q, s_k, causal, dtype)
+
+
+def test_flash_decode_differential():
+    """Paged decode vs the gather oracle — live, short and ZERO-length
+    slots in one batch, GQA heads, non-trivial block tables."""
+    seed = 30
+    rng = np.random.default_rng(seed)
+    s, pages, psize, maxb, h, hkv, hd = 4, 16, 8, 4, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((s, h, hd)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((pages, psize, hkv, hd)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((pages, psize, hkv, hd)),
+                         jnp.float32)
+    tables = jnp.asarray(
+        rng.permutation(pages)[:s * maxb].reshape(s, maxb), jnp.int32)
+    lengths = jnp.asarray([psize * maxb, 5, 0, 17], jnp.int32)
+    repro = (
+        f"seed={seed}: shapes q({s},{h},{hd}) pool({pages},{psize},"
+        f"{hkv},{hd}) tables=rng.permutation({pages})[:{s * maxb}]"
+        f".reshape({s},{maxb}) lengths={list(np.asarray(lengths))}\n"
+        f"paged_decode_attention(q, k_pool, v_pool, tables, lengths) vs "
+        f"ref_paged_decode_attention(same)")
+    want = ref_paged_decode_attention(q, k_pool, v_pool, tables, lengths)
+    with use(backend="pallas"):
+        got = paged_decode_attention(q, k_pool, v_pool, tables, lengths)
+    _close(got, want, 1e-4, repro)
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM: ragged groups (incl. empty + tail rows) x lowerings
+# ---------------------------------------------------------------------------
+
+def _check_grouped(seed, t, k, n, sizes, epilogue):
+    rng = np.random.default_rng(seed)
+    e = len(sizes)
+    x = jnp.asarray(rng.standard_normal((t, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    bias = (jnp.asarray(rng.standard_normal((e, n)), jnp.float32)
+            if epilogue and epilogue.startswith("bias") else None)
+    repro = (
+        f"import numpy as np, jax.numpy as jnp\n"
+        f"from repro.core import use\n"
+        f"from repro.kernels.grouped_gemm import grouped_gemm\n"
+        f"from repro.kernels.grouped_gemm.ref import ref_grouped_gemm\n"
+        f"rng = np.random.default_rng({seed})\n"
+        f"x = jnp.asarray(rng.standard_normal(({t}, {k})), jnp.float32)\n"
+        f"w = jnp.asarray(rng.standard_normal(({e}, {k}, {n})), "
+        f"jnp.float32)\n"
+        f"gs = jnp.asarray({sizes}, jnp.int32)\n"
+        + (f"bias = jnp.asarray(rng.standard_normal(({e}, {n})), "
+           f"jnp.float32)\n" if bias is not None else "bias = None\n")
+        + f"with use(backend='pallas'):\n"
+        f"    a = grouped_gemm(x, w, gs, epilogue={epilogue!r}, "
+        f"bias=bias, fused=True)\n"
+        f"    b = grouped_gemm(x, w, gs, epilogue={epilogue!r}, "
+        f"bias=bias, fused=False)")
+    with use(backend="pallas"):
+        got_f = grouped_gemm(x, w, gs, epilogue=epilogue, bias=bias,
+                             fused=True)
+        got_m = grouped_gemm(x, w, gs, epilogue=epilogue, bias=bias,
+                             fused=False)
+    # the two lowerings must agree exactly-ish with each other...
+    _close(got_f, got_m, 1e-4, repro)
+    if epilogue is None:
+        # ...and with the pure oracle where one exists
+        _close(got_f, ref_grouped_gemm(x, w, gs), 1e-4, repro)
+
+
+@pytest.mark.parametrize("seed,t,k,n,sizes,epilogue", [
+    (40, 24, 16, 32, [8, 8, 8], None),
+    (41, 30, 24, 16, [10, 0, 17], None),      # empty group + tail rows
+    (42, 33, 16, 48, [1, 31, 1], "bias"),
+    (43, 40, 32, 32, [13, 27, 0], "bias_silu"),
+    (44, 17, 8, 24, [17, 0], "gelu"),
+])
+def test_grouped_differential(seed, t, k, n, sizes, epilogue):
+    _check_grouped(seed, t, k, n, sizes, epilogue)
+
+
+@pytest.mark.parametrize("spec", QUANT_SPECS)
+def test_grouped_quant_differential(spec):
+    """Quantized grouped GEMM: both lowerings agree on identical wire
+    values and stay within quant error of the wide oracle."""
+    seed = 50
+    rng = np.random.default_rng(seed)
+    t, k, n, e = 24, 16, 32, 3
+    x = jnp.asarray(rng.standard_normal((t, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+    gs = jnp.asarray([8, 8, 8], jnp.int32)
+    repro = (f"seed={seed}: grouped_gemm(x({t},{k}), w({e},{k},{n}), "
+             f"gs=[8,8,8], quant={spec!r}, fused=True/False)")
+    with use(backend="pallas"):
+        got_f = grouped_gemm(x, w, gs, quant=spec, fused=True)
+        got_m = grouped_gemm(x, w, gs, quant=spec, fused=False)
+    _close(got_f, got_m, 1e-3, repro)
+    want = np.asarray(ref_grouped_gemm(x, w, gs))
+    err = float(np.max(np.abs(np.asarray(got_f) - want)))
+    scale = float(np.max(np.abs(want))) + 1e-9
+    assert err / scale < 0.1, repro
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan: diag kernel + carried-state scan vs sequential oracle
+# ---------------------------------------------------------------------------
+
+def _ssd_operands(seed, g, nc, q, n, p):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.standard_normal((g, nc, q, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((g, nc, q, n)), jnp.float32)
+    l = jnp.asarray(np.tril(rng.standard_normal((g, nc, q, q))),
+                    jnp.float32)
+    xdt = jnp.asarray(rng.standard_normal((g, nc, q, p)), jnp.float32)
+    decay_in = jnp.asarray(rng.uniform(0.2, 1.0, (g, nc, q)), jnp.float32)
+    decay_out = jnp.asarray(rng.uniform(0.2, 1.0, (g, nc, q)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((g, p, n)), jnp.float32)
+    return c, b, l, xdt, decay_in, decay_out, s0
+
+
+def test_ssd_diag_differential():
+    seed, g, q, n, p = 60, 3, 16, 8, 12
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.standard_normal((g, q, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((g, q, n)), jnp.float32)
+    l = jnp.asarray(np.tril(rng.standard_normal((g, q, q))), jnp.float32)
+    xdt = jnp.asarray(rng.standard_normal((g, q, p)), jnp.float32)
+    repro = (f"seed={seed}: ssd_chunk_diag(c({g},{q},{n}), b, tril l, "
+             f"xdt({g},{q},{p})) vs ref_ssd_chunk_diag(same)")
+    with use(backend="pallas"):
+        got = ssd_chunk_diag(c, b, l, xdt)
+    _close(got, ref_ssd_chunk_diag(c, b, l, xdt), 1e-4, repro)
+
+
+@pytest.mark.parametrize("seed,g,nc,q,n,p", [
+    (61, 2, 3, 8, 8, 8),
+    (62, 1, 5, 16, 8, 12),   # odd chunk count, wider state
+])
+def test_ssd_scan_differential(seed, g, nc, q, n, p):
+    ops = _ssd_operands(seed, g, nc, q, n, p)
+    repro = (f"seed={seed}: ssd_chunk_scan over (g={g}, nc={nc}, q={q}, "
+             f"n={n}, p={p}) vs ref_ssd_chunk_scan(same operands)")
+    want_y, want_s = ref_ssd_chunk_scan(*ops)
+    with use(backend="pallas"):
+        got_y, got_s = ssd_chunk_scan(*ops)
+    _close(got_y, want_y, 1e-4, repro + " [y]")
+    _close(got_s, want_s, 1e-4, repro + " [state]")
+
+
+# ---------------------------------------------------------------------------
+# Transpose: odd tails + batch vs the trivial oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,shape", [
+    (70, (33, 129)),
+    (71, (128, 128)),
+    (72, (2, 65, 31)),   # batched, odd tail
+])
+def test_transpose_differential(seed, shape):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    repro = (f"seed={seed}: transpose(x{shape}) vs ref_transpose — "
+             f"rng.standard_normal({shape})")
+    with use(backend="pallas"):
+        got = transpose(x)
+    _close(got, ref_transpose(x), 0.0 + 1e-6, repro)

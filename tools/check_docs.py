@@ -28,7 +28,11 @@ Four contracts across the doc surfaces:
   * DESIGN.md §14 must keep naming the mesh-planning surface
     (interconnect probes → calibrated network model → mesh descriptors
     → comm-charged arbitration → expert-parallel dispatch → fleet
-    tuning CLI → mesh benchmark), same two-sided existence check.
+    tuning CLI → mesh benchmark), same two-sided existence check;
+  * DESIGN.md §15 must keep naming the fleet-tuning / warm-start
+    surface (offline coefficient refit → refit-model overlay → tune CLI
+    verb → descriptor manifest → engine warmup API → warm-start config
+    knob → benchmark tuning-cache artifact), same two-sided check.
 
 Stdlib only (``ast``-based, no imports of the package needed for the
 docstring gate); exits non-zero with one line per violation.
@@ -309,6 +313,46 @@ def check_design_mesh() -> list:
     return errors
 
 
+# The fleet-tuning / warm-start surface DESIGN.md §15 documents.  Same
+# contract: the chapter must name each layer of the offline loop (refit
+# fit, model overlay loader, refit CLI, descriptor manifest round-trip,
+# engine warm-start API + config knob, benchmark cache artifact), each
+# still defined by its owning file.
+_WARMSTART_SURFACE = (
+    ("fit_cache_entries", "src/repro/core/refit.py"),
+    ("load_refit_model", "src/repro/core/machine.py"),
+    ("refit", "tools/tune.py"),
+    ("descriptor_from_cache_key", "src/repro/core/descriptor.py"),
+    ("save_manifest", "src/repro/core/warmstart.py"),
+    ("warmup", "src/repro/core/engine.py"),
+    ("warm_start", "src/repro/core/config.py"),
+    ("BENCH_tuning_cache.json", "benchmarks/fig89_gemm_sweep.py"),
+)
+
+
+def check_design_warmstart() -> list:
+    """DESIGN.md §15 drift gate: the fleet-tuning chapter must name each
+    layer of the offline refit + AOT warm-start loop (coefficient fit,
+    refit-model loader, tune CLI verb, descriptor manifest, engine
+    warmup API, config knob, benchmark cache artifact), and each named
+    symbol must still exist in the file that owns it."""
+    design = (ROOT / "DESIGN.md").read_text()
+    chapter = _design_section(design, "15")
+    if not chapter:
+        return ["DESIGN.md: no '## §15' section (the fleet-tuning / "
+                "warm-start chapter)"]
+    errors = []
+    for name, rel in _WARMSTART_SURFACE:
+        if name not in chapter:
+            errors.append(f"DESIGN.md §15: warm-start surface {name!r} "
+                          f"missing from the chapter")
+        src = ROOT / rel
+        if not src.exists() or name.split(".")[0] not in src.read_text():
+            errors.append(f"{rel}: no longer defines {name!r} named by "
+                          f"DESIGN.md §15")
+    return errors
+
+
 def main() -> int:
     sections = design_sections()
     if not sections:
@@ -317,7 +361,7 @@ def main() -> int:
     errors = (check_design_refs(sections) + check_readme()
               + check_core_docstrings() + check_design_families()
               + check_design_serving() + check_design_quant()
-              + check_design_mesh())
+              + check_design_mesh() + check_design_warmstart())
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
@@ -326,7 +370,7 @@ def main() -> int:
         print(f"check_docs: OK ({len(sections)} DESIGN sections, "
               f"{n_refs} src citations, README verified, core docstrings "
               f"+ §10-§12 family lists + §12 serving + §13 quant "
-              f"+ §14 mesh surfaces verified)")
+              f"+ §14 mesh + §15 warm-start surfaces verified)")
     return 1 if errors else 0
 
 

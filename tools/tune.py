@@ -13,6 +13,7 @@ Commands::
     python tools/tune.py show  cache.json [--machine PREFIX]
     python tools/tune.py merge out.json in1.json in2.json [...]
     python tools/tune.py export in.json out.json --machine PREFIX
+    python tools/tune.py refit in1.json [in2.json ...] --out model.json
 
 Merge policy: union by entry key (machine tuning-key + execution mode +
 descriptor cache key); on collision the record with the NEWEST ``ts``
@@ -20,8 +21,17 @@ wins (records without a stamp lose to any stamped record).  Entries from
 network-calibrated machines never collide with uncalibrated ones — the
 ``+net`` tuning-key suffix keeps them apart (DESIGN.md §14).
 
-Deliberately stdlib-only (no jax import): runs instantly on login nodes
-and in CI.
+``refit`` closes the measure→model loop (DESIGN.md §15): it regresses
+the merged fleet timings back onto the base ``MachineModel``'s cost
+coefficients and writes a versioned refit-model JSON (provenance
+fingerprint included) that ``configure(refit_model=...)`` /
+``calibrate(refit=...)`` overlay at load time — the analytical tier
+then ranks with fleet-fitted constants and its ``tuning_key`` grows a
+``+refit`` suffix so records never mix with probe-only machines.
+
+Deliberately stdlib-only (no jax import) for show/merge/export: they
+run instantly on login nodes and in CI.  ``refit`` alone imports
+``repro.core`` (numpy fit) lazily.
 """
 from __future__ import annotations
 
@@ -116,6 +126,33 @@ def _cmd_export(args) -> int:
     return 0
 
 
+def _cmd_refit(args) -> int:
+    # Lazy heavy import: only the refit subcommand needs repro.core.
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "src"))
+    from repro.core import refit as _refit
+    from repro.core.machine import get_machine
+    merged = merge_entries([load_entries(p) for p in args.inputs])
+    base = get_machine(args.base)
+    try:
+        model = _refit.fit_cache_entries(
+            merged, base, machine=args.machine or None,
+            mode=None if args.mode == "any" else args.mode)
+    except ValueError as e:
+        print(f"refit failed: {e}", file=sys.stderr)
+        return 1
+    _refit.save_refit_model(args.out, model)
+    res = model["residual_us"]
+    print(f"refit {model['entries']} entries (skipped "
+          f"{model['skipped']}) -> {args.out}\n"
+          f"  fingerprint={model['fingerprint']} fitted="
+          f"{','.join(model['fitted'])}\n"
+          f"  residual_us before={res['before']} after={res['after']}",
+          file=sys.stderr)
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -134,6 +171,20 @@ def main(argv=None) -> int:
     p.add_argument("--machine", default=None,
                    help="machine tuning-key prefix to keep")
     p.set_defaults(fn=_cmd_export)
+    p = sub.add_parser(
+        "refit", help="fit MachineModel coefficients from cache timings")
+    p.add_argument("inputs", nargs="+",
+                   help="tuning-cache files (merged before fitting)")
+    p.add_argument("--out", required=True,
+                   help="refit-model JSON to write")
+    p.add_argument("--machine", default=None,
+                   help="filter by machine tuning-key prefix")
+    p.add_argument("--mode", default="any",
+                   choices=("any", "interpret", "compiled"),
+                   help="restrict to one execution mode")
+    p.add_argument("--base", default="tpu_v5e",
+                   help="base machine model to refit (default tpu_v5e)")
+    p.set_defaults(fn=_cmd_refit)
     args = ap.parse_args(argv)
     return args.fn(args)
 
